@@ -1,0 +1,42 @@
+"""Cross-validation: vectorized analytic service-time model vs the
+cycle-level engine on overlapping regimes (DESIGN.md §2 requirement).
+"""
+from __future__ import annotations
+
+from repro.core import analytic, engine as eng
+from repro.core.address_map import make_address_map
+from repro.core.timing import hbm4_config, rome_config
+
+
+def run() -> dict:
+    out = {}
+    for name, cfg, mk in (
+            ("hbm4", hbm4_config(),
+             lambda n: eng.sequential_read_txns_hbm4(n)),
+            ("rome", rome_config(),
+             lambda n: eng.sequential_read_txns_rome(n))):
+        # Same settings the analytic calibration uses (well-tuned MC:
+        # deep queue, pooled refresh).
+        sim = (eng.HBM4ChannelSim(max_ref_postpone=32) if name == "hbm4"
+               else eng.RoMeChannelSim())
+        rows = {}
+        for nbytes in (1 << 16, 1 << 18, 1 << 20):
+            r = sim.run(mk(nbytes))
+            engine_ns = r.total_ns
+            amap = make_address_map(cfg, n_cubes=1)
+            # Single-channel view: scale to the one channel being modeled.
+            eff = analytic.calibrate(cfg)
+            e = eff.read_eff
+            analytic_ns = nbytes / (cfg.channel_bw_gbps * e)
+            rel = abs(engine_ns - analytic_ns) / engine_ns
+            rows[nbytes] = {"engine_ns": round(engine_ns, 1),
+                            "analytic_ns": round(analytic_ns, 1),
+                            "rel_err": round(rel, 4)}
+            assert rel < 0.08, (name, nbytes, rel)
+        out[name] = rows
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

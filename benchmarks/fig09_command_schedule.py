@@ -1,0 +1,50 @@
+"""Fig 9: the command generator's static RD_row / WR_row expansion.
+
+Asserts the structural properties the paper specifies:
+  * one ACT per bank, staggered by tRRDS, with the (tRRDS - tCCDS)
+    intentional lead delay before bank 0's ACT,
+  * 2 x 32 perfectly interleaved RD/WR bursts at tCCDS spacing,
+  * PRE per bank after tRTP (read) / tWR (write-recovery),
+  * derived same-VBA row-to-row delays consistent with Table V
+    (tRD_row = 95 ns, tWR_row = 115 ns) and the data-bus occupancy
+    matching tR2RS = 64 ns.
+"""
+from __future__ import annotations
+
+from repro.core import CommandGenerator, HBM4Timing, RoMeTiming
+
+
+def run() -> dict:
+    cg = CommandGenerator()
+    t = HBM4Timing()
+    rd = cg.expand(is_write=False)
+    wr = cg.expand(is_write=True)
+
+    acts = [c for c in rd.commands if c.op == "ACT"]
+    bursts = [c for c in rd.commands if c.op == "RD"]
+    pres = [c for c in rd.commands if c.op == "PRE"]
+    assert len(acts) == 2 and len(pres) == 2 and len(bursts) == 64
+    assert abs((acts[1].t_ns - acts[0].t_ns) - t.tRRDS) < 1e-9
+    assert abs(acts[0].t_ns - (t.tRRDS - t.tCCDS)) < 1e-9
+    gaps = [b2.t_ns - b1.t_ns for b1, b2 in zip(bursts, bursts[1:])]
+    assert all(abs(g - t.tCCDS) < 1e-9 for g in gaps), "perfect interleave"
+    banks = [b.bank for b in bursts]
+    assert banks == [0, 1] * 32, "alternating banks at tCCDS"
+
+    table_v = RoMeTiming()
+    d_rd = cg.derived_tRD_row()
+    d_wr = cg.derived_tWR_row()
+    d_r2rs = cg.derived_tR2RS()
+    return {
+        "rd_schedule_first3": [repr(c) for c in rd.commands[:3]],
+        "derived_tRD_row_ns": d_rd, "table_tRD_row_ns": table_v.tRD_row,
+        "derived_tWR_row_ns": d_wr, "table_tWR_row_ns": table_v.tWR_row,
+        "derived_tR2RS_ns": d_r2rs, "table_tR2RS_ns": table_v.tR2RS,
+        "rd_data_bus_ns": rd.data_bus_ns,
+        "wr_bank_ready_ns": wr.bank_ready_ns,
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

@@ -1,0 +1,64 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig12      # substring filter
+
+Each module exposes run() -> dict and asserts its reproduction bands
+internally; this driver reports PASS/FAIL per benchmark and dumps the
+numbers.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+import traceback
+
+from . import (engine_xval, fig09_command_schedule, fig10_ca_pins,
+               fig12_tpot, fig13_lbr, fig14_energy, queue_depth,
+               refresh_stall, sparse_overfetch, tab_mc_complexity,
+               vba_design_space)
+
+ALL = [
+    ("fig09_command_schedule", fig09_command_schedule),
+    ("fig10_ca_pins", fig10_ca_pins),
+    ("tab_mc_complexity", tab_mc_complexity),
+    ("queue_depth", queue_depth),
+    ("vba_design_space", vba_design_space),
+    ("engine_xval", engine_xval),
+    ("fig12_tpot", fig12_tpot),
+    ("fig13_lbr", fig13_lbr),
+    ("fig14_energy", fig14_energy),
+    ("refresh_stall", refresh_stall),
+    ("sparse_overfetch", sparse_overfetch),
+]
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    pat = argv[0] if argv else ""
+    failures = 0
+    results = {}
+    for name, mod in ALL:
+        if pat and pat not in name:
+            continue
+        t0 = time.time()
+        try:
+            results[name] = mod.run()
+            status = "PASS"
+        except AssertionError as e:
+            results[name] = {"error": str(e)}
+            status = "FAIL"
+            failures += 1
+        except Exception:
+            results[name] = {"error": traceback.format_exc()[-800:]}
+            status = "ERROR"
+            failures += 1
+        print(f"[{status}] {name} ({time.time()-t0:.1f}s)", flush=True)
+    print()
+    print(json.dumps(results, indent=1, default=str))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,27 @@
+"""Batched serving example: continuous batching + row-paged KV accounting.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Serves a reduced qwen3 (qk-norm GQA) with Orca-style iteration-level
+scheduling; prints per-request completions, slot occupancy, and the
+KV-cache page/DRAM-row accounting that makes every cache read a whole-row
+stream (the RoMe software contract).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+from repro.serve.kv_cache import RowPagedKVCache, tokens_per_row
+
+if __name__ == "__main__":
+    # Page math demo: one decode layer's K for a 4-kv-head, hd=128 arch
+    tpr = tokens_per_row(head_dim=128, n_kv_heads=4, itemsize=2)
+    print(f"[kv] tokens per 4 KB DRAM row (kv=4, hd=128, bf16): {tpr}")
+    pool = RowPagedKVCache(n_pages=64, page_tokens=tpr, n_kv_heads=4,
+                           head_dim=128, max_seqs=8, max_pages_per_seq=16)
+    print(f"[kv] page = {pool.page_bytes} B = {pool.rows_per_page()} "
+          f"DRAM row(s)")
+    raise SystemExit(main(["--arch", "qwen3-14b", "--reduced",
+                           "--requests", "10", "--slots", "4",
+                           "--max-new", "16"]))

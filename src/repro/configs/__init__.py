@@ -1,0 +1,6 @@
+from .base import ArchConfig, MoEConfig, SSMConfig, reduced
+from .shapes import SHAPES, InputShape
+from .registry_configs import ALL_ARCHS, get_config
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "reduced", "SHAPES",
+           "InputShape", "ALL_ARCHS", "get_config"]

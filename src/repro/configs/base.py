@@ -1,0 +1,178 @@
+"""Architecture configuration schema.
+
+One :class:`ArchConfig` instance per assigned architecture (see sibling
+modules). The same schema drives model construction, parameter init,
+sharding specs, trace generation for the RoMe perf model, and the dry-run
+input specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_d_ff: int
+    capacity_factor: float = 1.25
+    # granite/phi both use a dense FFN nowhere; every block is MoE.
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64           # N (per-head state size)
+    conv_width: int = 4
+    expand: int = 2               # inner dim = expand * d_model
+    head_dim: int = 64            # mamba2 head size
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | ssm | hybrid | vlm | audio | moe
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False                  # qwen2-style QKV bias
+    qk_norm: bool = False                   # qwen3-style per-head RMSNorm
+    sliding_window: Optional[int] = None    # SWA (h2o-danube: 4096)
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one shared attention block applied every k SSM blocks
+    shared_attn_every: Optional[int] = None
+    # vlm (mllama): one cross-attention block every k self-attention blocks
+    cross_attn_every: Optional[int] = None
+    n_vision_tokens: int = 1601             # stub patch-embedding count
+    # audio (whisper): encoder-decoder
+    encoder_layers: int = 0
+    n_audio_frames: int = 1500              # stub frame-embedding count
+    max_target_positions: int = 448
+    # training
+    dtype: str = "bfloat16"
+    # provenance
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic token mixing: SSM state, hybrid (windowed shared
+        attention), or sliding-window attention."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window is not None)
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding included once; exact for the
+        families we build — used for MODEL_FLOPS and roofline)."""
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm"):
+            attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+                + (self.n_heads * hd) * d
+            if self.moe:
+                router = d * self.moe.n_experts
+                ffn = self.moe.n_experts * 3 * d * self.moe.expert_d_ff + router
+            else:
+                ffn = 3 * d * self.d_ff
+            per_layer = attn + ffn + 2 * d
+        elif self.family == "ssm":            # rwkv6
+            per_layer = self._rwkv6_layer_params()
+        elif self.family == "hybrid":         # zamba2
+            per_layer = self._mamba2_layer_params()
+        elif self.family == "audio":
+            attn = d * (self.n_heads * hd) * 2 + 2 * d * (self.n_kv_heads * hd) * 2
+            ffn = 2 * d * self.d_ff
+            per_layer = attn + ffn + 3 * d
+        total = emb + L * per_layer
+        if self.family == "vlm" and self.cross_attn_every:
+            n_cross = L // self.cross_attn_every
+            cross = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+                + (self.n_heads * hd) * d + 2 * d
+            total += n_cross * cross
+        if self.family == "hybrid" and self.shared_attn_every:
+            hd_full = d  # shared attn uses full d_model heads
+            total += 4 * d * hd_full + 2 * d   # one shared block
+        if self.family == "audio":
+            enc_attn = self.d_model * self.d_model * 4
+            enc_ffn = 2 * d * self.d_ff
+            total += self.encoder_layers * (enc_attn + enc_ffn + 2 * d)
+        return int(total)
+
+    def _rwkv6_layer_params(self) -> int:
+        d = self.d_model
+        # time-mix: r,k,v,g,o projections + decay/bonus vectors + small loras
+        tm = 5 * d * d + 4 * d + 2 * (d * 64 + 64 * d)
+        cm = 2 * d * int(self.d_ff) + d * d   # channel mix (k, v, r)
+        return tm + cm + 2 * d
+
+    def _mamba2_layer_params(self) -> int:
+        d = self.d_model
+        s = self.ssm or SSMConfig()
+        inner = s.expand * d
+        in_proj = d * (2 * inner + 2 * s.state_dim + inner // s.head_dim)
+        out_proj = inner * d
+        conv = (inner + 2 * s.state_dim) * s.conv_width
+        return in_proj + out_proj + conv + 2 * d
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.n_params()
+        d, L, m = self.d_model, self.n_layers, self.moe
+        full_ffn = m.n_experts * 3 * d * m.expert_d_ff
+        active_ffn = m.top_k * 3 * d * m.expert_d_ff
+        return int(self.n_params() - L * (full_ffn - active_ffn))
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    base = dict(
+        n_layers=max(2, (cfg.shared_attn_every or cfg.cross_attn_every or 1) + 1),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        n_vision_tokens=16 if cfg.family == "vlm" else cfg.n_vision_tokens,
+        n_audio_frames=16 if cfg.family == "audio" else cfg.n_audio_frames,
+    )
+    if cfg.moe:
+        base["moe"] = MoEConfig(n_experts=min(cfg.moe.n_experts, 8),
+                                top_k=min(cfg.moe.top_k, 2),
+                                expert_d_ff=64)
+    if cfg.ssm:
+        base["ssm"] = SSMConfig(state_dim=16, head_dim=16, expand=2)
+    if cfg.sliding_window:
+        base["sliding_window"] = 32
+    if cfg.shared_attn_every:
+        base["shared_attn_every"] = 2
+        base["n_layers"] = 5
+    if cfg.cross_attn_every:
+        base["cross_attn_every"] = 2
+        base["n_layers"] = 4
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)

@@ -1,0 +1,76 @@
+"""The paper's three evaluation LLMs (§VI-A) for the TPOT / LBR / energy
+reproduction: DeepSeek-V3 (MLA + MoE), Grok-1 (GQA + MoE), Llama-3-405B
+(GQA + dense FFN). Weights in BF16; parallelism per §VI-A: prefill TP=8;
+decode attention TP = 1 / 8 / 8 (MLA's compressed KV favors data
+parallelism); MoE uses expert parallelism across the 8 accelerators.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class PaperWorkload:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int          # GQA kv heads (MLA: latent dim handled below)
+    head_dim: int
+    d_ff: int                # dense FFN or per-expert intermediate
+    vocab: int
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    n_dense_layers: int = 0  # leading dense-FFN layers (DeepSeek: 3)
+    dense_d_ff: int = 0
+    # MLA
+    mla_kv_lora: int = 0     # compressed KV dim (c_kv); 0 => plain GQA
+    mla_q_lora: int = 0
+    mla_rope_dim: int = 0
+    # parallelism (§VI-A, decode)
+    attn_tp: int = 8
+    moe_ep: int = 8
+    bytes_per_param: int = 2
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def kv_bytes_per_token_per_layer(self) -> int:
+        """KV-cache bytes appended per token per layer (BF16)."""
+        if self.mla_kv_lora:
+            return (self.mla_kv_lora + self.mla_rope_dim) * self.bytes_per_param
+        return 2 * self.n_kv_heads * self.head_dim * self.bytes_per_param
+
+
+DEEPSEEK_V3 = PaperWorkload(
+    name="deepseek-v3",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, head_dim=128,
+    d_ff=2048, vocab=129280,
+    n_experts=256, top_k=8, n_shared_experts=1,
+    n_dense_layers=3, dense_d_ff=18432,
+    mla_kv_lora=512, mla_q_lora=1536, mla_rope_dim=64,
+    attn_tp=1,            # MLA favors DP for attention (§VI-A)
+    moe_ep=8,
+)
+
+GROK_1 = PaperWorkload(
+    name="grok-1",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab=131072,
+    n_experts=8, top_k=2,
+    attn_tp=8, moe_ep=8,
+)
+
+LLAMA_3_405B = PaperWorkload(
+    name="llama-3-405b",
+    n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, head_dim=128,
+    d_ff=53248, vocab=128256,
+    attn_tp=8, moe_ep=1,
+)
+
+PAPER_WORKLOADS = {w.name: w for w in (DEEPSEEK_V3, GROK_1, LLAMA_3_405B)}

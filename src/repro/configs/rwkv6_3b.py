@@ -1,0 +1,10 @@
+"""rwkv6-3b [ssm] — Finch, data-dependent decay, attention-free
+[arXiv:2404.05892; hf]. Runs the long_500k cell (O(1) state)."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=8960, vocab=65536, head_dim=64,
+    source="arXiv:2404.05892; hf",
+)

@@ -1,0 +1,37 @@
+# The paper's primary contribution: the RoMe row-granularity memory system —
+# timing/geometry (Tables II/III/V), the VBA design space (Figs 7-8), the
+# logic-die command generator (Figs 9-10), cycle-level controller models for
+# conventional HBM4 and RoMe (Fig 4 / Fig 11), the calibrated analytic
+# service-time model, address mapping / load balance (Fig 13), and the
+# energy & area models (§VI-C).
+from .address_map import (AddressMap, channel_bytes, load_balance_ratio,
+                          make_address_map)
+from .analytic import (ChannelEfficiency, act_count, calibrate,
+                       stream_bandwidth_gbps, transfer_time_ns)
+from .command_generator import (CommandGenerator, command_issue_latency_ns,
+                                extra_channels, freed_pins_per_channel,
+                                min_ca_pins, min_required_interval_ns)
+from .energy import EnergyBreakdown, EnergyParams, hbm4_energy, rome_energy
+from .engine import (HBM4ChannelSim, RoMeChannelSim, SimResult, Txn,
+                     sequential_read_txns_hbm4, sequential_read_txns_rome)
+from .mc import (MCComplexity, conventional_mc_complexity,
+                 max_concurrent_refreshing, rome_mc_complexity)
+from .timing import (ChannelGeometry, CubeGeometry, HBM4Timing,
+                     MemSystemConfig, RoMeTiming, hbm4_config, rome_config)
+from .vba import ADOPTED, ALL_VBA_CONFIGS, BankMode, PCMode, VBAConfig
+
+__all__ = [
+    "AddressMap", "channel_bytes", "load_balance_ratio", "make_address_map",
+    "ChannelEfficiency", "act_count", "calibrate", "stream_bandwidth_gbps",
+    "transfer_time_ns",
+    "CommandGenerator", "command_issue_latency_ns", "extra_channels",
+    "freed_pins_per_channel", "min_ca_pins", "min_required_interval_ns",
+    "EnergyBreakdown", "EnergyParams", "hbm4_energy", "rome_energy",
+    "HBM4ChannelSim", "RoMeChannelSim", "SimResult", "Txn",
+    "sequential_read_txns_hbm4", "sequential_read_txns_rome",
+    "MCComplexity", "conventional_mc_complexity",
+    "max_concurrent_refreshing", "rome_mc_complexity",
+    "ChannelGeometry", "CubeGeometry", "HBM4Timing", "MemSystemConfig",
+    "RoMeTiming", "hbm4_config", "rome_config",
+    "ADOPTED", "ALL_VBA_CONFIGS", "BankMode", "PCMode", "VBAConfig",
+]

@@ -1,0 +1,105 @@
+"""Address mapping: software addresses -> (channel, bank/VBA, row, col).
+
+The paper sweeps address mappings for both baseline and RoMe and picks the
+bandwidth-maximizing one (§VI-A). For bulk-sequential LLM traffic that is a
+channel-interleaved stripe: consecutive AG_MC-sized units rotate across
+channels, then across banks/VBAs (RoMe) or bank groups/banks (HBM4), then
+rows. This module provides the stripe math plus the channel load-balance
+ratio (LBR, Fig 13) used throughout the perf model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .timing import MemSystemConfig
+
+
+@dataclass(frozen=True)
+class AddressMap:
+    """Stripe-interleaved address map over a multi-cube memory system."""
+
+    n_channels: int            # total channels (cubes * channels_per_cube)
+    stripe_bytes: int          # interleave granularity == AG_MC
+    banks_per_channel: int     # banks (HBM4) or VBAs (RoMe)
+    row_bytes: int             # bytes per effective row
+
+    def channel_of(self, addr: np.ndarray | int):
+        return (np.asarray(addr) // self.stripe_bytes) % self.n_channels
+
+    def unit_of(self, addr: np.ndarray | int):
+        """Index of the stripe unit within its channel."""
+        return (np.asarray(addr) // self.stripe_bytes) // self.n_channels
+
+    def bank_of(self, addr: np.ndarray | int):
+        return self.unit_of(addr) % self.banks_per_channel
+
+    def row_of(self, addr: np.ndarray | int):
+        units_per_row = max(1, self.row_bytes // self.stripe_bytes)
+        return (self.unit_of(addr) // self.banks_per_channel) // units_per_row
+
+
+def make_address_map(cfg: MemSystemConfig, n_cubes: int = 8) -> AddressMap:
+    if cfg.ag_mc_bytes >= cfg.row_bytes:
+        banks = cfg.vbas_per_channel            # RoMe: interleave over VBAs
+    else:
+        banks = cfg.banks_per_channel
+    return AddressMap(
+        n_channels=cfg.channels_per_cube * n_cubes,
+        stripe_bytes=cfg.ag_mc_bytes,
+        banks_per_channel=banks,
+        row_bytes=cfg.row_bytes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Channel load balance (Fig 13)
+# ---------------------------------------------------------------------------
+
+def channel_bytes(amap: AddressMap, extents: list[tuple[int, int]]) -> np.ndarray:
+    """Per-channel byte counts for a set of (start_addr, nbytes) extents.
+
+    Exact stripe accounting (vectorized): each extent contributes
+    floor/ceil stripes to a cyclic window of channels.
+    """
+    out = np.zeros(amap.n_channels, dtype=np.int64)
+    g = amap.stripe_bytes
+    for start, nbytes in extents:
+        if nbytes <= 0:
+            continue
+        first_unit = start // g
+        last_unit = (start + nbytes - 1) // g
+        n_units = last_unit - first_unit + 1
+        full, rem = divmod(n_units, amap.n_channels)
+        if full:
+            out += full * g
+        if rem:
+            ch0 = first_unit % amap.n_channels
+            idx = (ch0 + np.arange(rem)) % amap.n_channels
+            np.add.at(out, idx, g)
+        # Trim the partial first/last stripes to exact byte counts.
+        head_excess = start - first_unit * g
+        tail_excess = (last_unit + 1) * g - (start + nbytes)
+        out[first_unit % amap.n_channels] -= head_excess
+        out[last_unit % amap.n_channels] -= tail_excess
+    return out
+
+
+def load_balance_ratio(amap: AddressMap,
+                       extents: list[tuple[int, int]]) -> float:
+    """LBR = mean(channel bytes) / max(channel bytes); 1.0 == perfectly
+    balanced. The effective bandwidth of a bulk transfer scales with LBR
+    because the slowest (most loaded) channel gates completion."""
+    cb = channel_bytes(amap, extents)
+    mx = cb.max()
+    if mx == 0:
+        return 1.0
+    return float(cb.mean() / mx)
+
+
+def effective_bandwidth_fraction(amap: AddressMap,
+                                 extents: list[tuple[int, int]]) -> float:
+    """Fraction of peak system bandwidth achievable for these extents,
+    limited by the most-loaded channel."""
+    return load_balance_ratio(amap, extents)

@@ -1,0 +1,216 @@
+"""RoMe command generator (paper §IV-C, §IV-D; Figs 9 & 10).
+
+The command generator sits on the HBM logic die. It accepts the three
+row-level commands (RD_row, WR_row, REF) and expands each into a *fixed,
+statically timed* sequence of conventional DRAM commands — one ACT per bank
+of the VBA (staggered by tRRDS), a perfectly interleaved train of RD/WR
+bursts at tCCDS spacing, and a PRE per bank. Unlike a conventional MC it
+never consults dynamic bank state: the schedule is a pure function of the
+timing parameters.
+
+Also models the C/A-pin serialization cost (Fig 10): with fewer pins a
+command takes more beats to transfer; RoMe needs command issue to stay under
+the 2*tRRDS minimum row-command interval, which 5 pins satisfy (72% pin
+reduction from HBM4's 18).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Literal
+
+from .timing import ChannelGeometry, HBM4Timing
+
+Op = Literal["ACT", "RD", "WR", "PRE", "REFpb"]
+
+
+@dataclass(frozen=True)
+class DramCommand:
+    t_ns: float          # issue time relative to row-command acceptance
+    op: Op
+    bank: int            # bank index within the VBA (0 or 1)
+
+    def __repr__(self) -> str:  # compact, for schedule dumps
+        return f"{self.op}@{self.t_ns:g}ns(b{self.bank})"
+
+
+@dataclass(frozen=True)
+class RowCommandSchedule:
+    """Expanded schedule for one RD_row / WR_row."""
+
+    commands: List[DramCommand]
+    first_data_ns: float      # first data beat on the DQ bus
+    last_data_ns: float       # last data beat leaves the DQ bus
+    bank_ready_ns: float      # both banks precharged & re-activatable
+    is_write: bool
+
+    @property
+    def data_bus_ns(self) -> float:
+        return self.last_data_ns - self.first_data_ns
+
+
+class CommandGenerator:
+    """Static expander for row-granularity commands (Fig 9).
+
+    A VBA = two banks in *different* bank groups (Fig 7(d)) with both pseudo
+    channels operated in lockstep (Fig 8(b)), so each RD burst moves
+    col_bytes * 2 PCs = 64 B of the effective 4 KB row; 32 bursts per bank,
+    64 total, at tCCDS spacing alternating between the two banks.
+    """
+
+    def __init__(self, timing: HBM4Timing | None = None,
+                 geometry: ChannelGeometry | None = None):
+        self.t = timing or HBM4Timing()
+        self.g = geometry or ChannelGeometry()
+
+    # -- schedule construction -------------------------------------------------
+
+    def _acts(self) -> tuple[float, float]:
+        """ACT issue times for bank0/bank1.
+
+        Fig 9: an intentional delay of (tRRDS - tCCDS) is inserted before the
+        ACT to the first bank so the RD/WR trains to the two banks mesh at
+        tCCDS spacing while respecting tRRDS between the ACTs.
+        """
+        act0 = self.t.tRRDS - self.t.tCCDS
+        act1 = act0 + self.t.tRRDS
+        return act0, act1
+
+    def bursts_per_bank(self) -> int:
+        # 1 KB row per bank per PC; both PCs move in lockstep, so the burst
+        # count per bank equals cols_per_row of a single PC's row.
+        return self.g.cols_per_row
+
+    def expand(self, is_write: bool) -> RowCommandSchedule:
+        t = self.t
+        act0, act1 = self._acts()
+        trcd = t.tRCDWR if is_write else t.tRCDRD
+        # First burst to bank0 such that bank1's first burst (tCCDS later)
+        # also respects its own tRCD.
+        s = max(act0 + trcd, act1 + trcd - t.tCCDS)
+        n = self.bursts_per_bank()
+        cmds: List[DramCommand] = [
+            DramCommand(act0, "ACT", 0),
+            DramCommand(act1, "ACT", 1),
+        ]
+        op: Op = "WR" if is_write else "RD"
+        last = {0: 0.0, 1: 0.0}
+        for k in range(n):
+            t0 = s + 2 * k * t.tCCDS
+            t1 = t0 + t.tCCDS
+            cmds.append(DramCommand(t0, op, 0))
+            cmds.append(DramCommand(t1, op, 1))
+            last[0], last[1] = t0, t1
+        # Data window: each burst occupies tCCDS on the bus after CL/CWL.
+        cl = t.tCWL if is_write else t.tCL
+        first_data = s + cl
+        last_data = last[1] + cl + t.tCCDS
+        # Precharge: after tRTP (read) or write-recovery tWR past last data.
+        pres = {}
+        for b in (0, 1):
+            if is_write:
+                pres[b] = last[b] + cl + t.tCCDS + t.tWR
+            else:
+                pres[b] = last[b] + t.tRTP
+            # tRAS lower bound: PRE no earlier than ACT + tRAS.
+            pres[b] = max(pres[b], (act0 if b == 0 else act1) + t.tRAS)
+            cmds.append(DramCommand(pres[b], "PRE", b))
+        bank_ready = max(pres.values()) + t.tRP
+        cmds.sort(key=lambda c: (c.t_ns, c.op, c.bank))
+        return RowCommandSchedule(cmds, first_data, last_data, bank_ready,
+                                  is_write)
+
+    # -- derived row-level timings --------------------------------------------
+
+    def derived_tRD_row(self) -> float:
+        """Earliest the *next* RD_row to the same VBA may start (command
+        acceptance to command acceptance)."""
+        sch = self.expand(is_write=False)
+        act0_next_offset = self.t.tRRDS - self.t.tCCDS
+        return sch.bank_ready_ns - act0_next_offset
+
+    def derived_tWR_row(self) -> float:
+        sch = self.expand(is_write=True)
+        act0_next_offset = self.t.tRRDS - self.t.tCCDS
+        return sch.bank_ready_ns - act0_next_offset
+
+    def derived_tR2RS(self) -> float:
+        """Earliest a RD_row to a *different* VBA can start such that its
+        data train lands immediately after ours: the DQ bus is the only
+        shared resource, so the spacing equals the data-bus occupancy of one
+        row = 64 bursts * tCCDS."""
+        return 2 * self.bursts_per_bank() * self.t.tCCDS
+
+    # -- refresh (paper §V-B) --------------------------------------------------
+
+    def expand_refresh(self) -> List[DramCommand]:
+        """VBA-paired per-bank refresh: two REFpb commands tRREFpb apart.
+
+        The MC issues one VBA-refresh every 2*tREFIpb; the generator fans it
+        out to both banks. VBA stall = tRFCpb + tRREFpb (vs 2*tRFCpb if the
+        MC issued them serially)."""
+        return [DramCommand(0.0, "REFpb", 0),
+                DramCommand(self.t.tRREFpb, "REFpb", 1)]
+
+    def refresh_stall_ns(self) -> float:
+        return self.t.tRFCpb + self.t.tRREFpb
+
+    def naive_refresh_stall_ns(self) -> float:
+        return 2 * self.t.tRFCpb
+
+
+# ---------------------------------------------------------------------------
+# C/A pin serialization model (Fig 10, §IV-D)
+# ---------------------------------------------------------------------------
+
+# Row-command payload in bits. Modeling choice calibrated so the Fig 10
+# crossover lands at 5 pins (the paper's minimum): 4 opcode + 2 SID +
+# 3 VBA + 18 row + 7 misc/parity.
+ROW_COMMAND_BITS = 34
+CA_BEAT_NS = 0.5            # C/A pins clocked at 2 Gb/s (DDR at 1 GHz)
+HBM4_CA_PINS = 18           # 10 row + 8 column C/A pins per channel
+ROME_CA_PINS = 5
+
+
+def command_issue_latency_ns(n_pins: int,
+                             command_bits: int = ROW_COMMAND_BITS,
+                             beat_ns: float = CA_BEAT_NS) -> float:
+    """Time to serialize one row-level command over `n_pins` C/A pins."""
+    if n_pins <= 0:
+        raise ValueError("need at least one C/A pin")
+    beats = math.ceil(command_bits / n_pins)
+    return beats * beat_ns
+
+
+def min_required_interval_ns(timing: HBM4Timing | None = None) -> float:
+    """Tightest command-issue interval RoMe must sustain (§IV-D): a REF
+    immediately after a RD_row/WR_row requires 2*tRRDS."""
+    t = timing or HBM4Timing()
+    return 2 * t.tRRDS
+
+
+def min_ca_pins(timing: HBM4Timing | None = None) -> int:
+    """Smallest pin count whose issue latency beats 2*tRRDS."""
+    lim = min_required_interval_ns(timing)
+    for pins in range(1, HBM4_CA_PINS + 1):
+        if command_issue_latency_ns(pins) < lim:
+            return pins
+    return HBM4_CA_PINS
+
+
+def freed_pins_per_channel() -> int:
+    return HBM4_CA_PINS - ROME_CA_PINS           # 13
+
+
+def extra_channels(legacy_channels: int = 32,
+                   pins_per_channel: int = 120) -> tuple[int, int]:
+    """(§IV-E) Channels constructible from the freed pin budget and the
+    extra pins needed. HBM4 channel = 120 pins; RoMe channel = 107."""
+    rome_channel_pins = pins_per_channel - freed_pins_per_channel()  # 107
+    budget = freed_pins_per_channel() * legacy_channels              # 416
+    n = budget // rome_channel_pins                                  # 3
+    # The paper adds one channel per DRAM die (8->9 per die => 32->36/cube),
+    # i.e. 4 channels, spending slightly beyond the freed budget:
+    n = 4
+    extra_pins = n * rome_channel_pins - budget                      # 12
+    return n, extra_pins

@@ -1,0 +1,108 @@
+"""DRAM energy model (paper §VI-C, Fig 14).
+
+Per-event energies follow the HBM energy breakdown of [2] (Folded Banks) /
+[51] (Fine-Grained DRAM): data movement (core access + TSV/interposer I/O)
+dominates; row activation and command transport are the terms RoMe changes.
+
+RoMe's savings (paper Fig 14): total −1.9 / −0.7 / −0.7 % for
+DeepSeek-V3 / Grok-1 / Llama-3, driven by (i) minimal ACT count — one
+ACT pair per 4 KB row regardless of access pattern, vs conventional
+open-page re-activations under stream interleaving — and (ii) one row-level
+command on the interposer instead of 32 column commands per PC.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class EnergyParams:
+    # Row path
+    e_act_pj: float = 450.0          # one ACT+PRE cycle of a 1 KB bank row
+    # Column/data path (per bit)
+    e_core_pj_bit: float = 1.10      # bank core access + BK/BG bus
+    e_io_pj_bit: float = 0.55        # TSV + interposer I/O
+    # Command transport (per command over the interposer C/A pins)
+    e_ca_cmd_pj: float = 12.0
+    # Command generator (logic die, 7 nm) per expanded DRAM command
+    e_cmdgen_pj: float = 1.5
+    # Refresh
+    e_refpb_pj: float = 2200.0       # one per-bank refresh burst
+    # Static/background power per channel (pJ per ns)
+    p_background_pj_ns: float = 45.0
+
+
+@dataclass(frozen=True)
+class EnergyBreakdown:
+    act_pj: float
+    data_core_pj: float
+    data_io_pj: float
+    ca_pj: float
+    cmdgen_pj: float
+    refresh_pj: float
+    background_pj: float
+
+    @property
+    def total_pj(self) -> float:
+        return (self.act_pj + self.data_core_pj + self.data_io_pj +
+                self.ca_pj + self.cmdgen_pj + self.refresh_pj +
+                self.background_pj)
+
+    def as_dict(self) -> dict:
+        return {
+            "act": self.act_pj, "data_core": self.data_core_pj,
+            "data_io": self.data_io_pj, "ca": self.ca_pj,
+            "cmdgen": self.cmdgen_pj, "refresh": self.refresh_pj,
+            "background": self.background_pj, "total": self.total_pj,
+        }
+
+
+def hbm4_energy(bytes_moved: int, n_acts: int, n_col_cmds: int,
+                n_refpb: int, elapsed_ns: float, n_channels: int,
+                p: EnergyParams = EnergyParams()) -> EnergyBreakdown:
+    """Energy for a conventional HBM4 transfer.
+
+    `n_acts` is the *actual* activation count (open-page conflicts between
+    interleaved streams inflate it above the bytes/1KB minimum);
+    `n_col_cmds` = number of RD/WR commands crossing the interposer.
+    """
+    bits = bytes_moved * 8
+    return EnergyBreakdown(
+        act_pj=n_acts * p.e_act_pj,
+        data_core_pj=bits * p.e_core_pj_bit,
+        data_io_pj=bits * p.e_io_pj_bit,
+        ca_pj=n_col_cmds * p.e_ca_cmd_pj,
+        cmdgen_pj=0.0,
+        refresh_pj=n_refpb * p.e_refpb_pj,
+        background_pj=elapsed_ns * n_channels * p.p_background_pj_ns,
+    )
+
+
+def rome_energy(bytes_moved: int, n_row_cmds: int, n_refpb: int,
+                elapsed_ns: float, n_channels: int,
+                overfetch_frac: float = 0.0,
+                p: EnergyParams = EnergyParams()) -> EnergyBreakdown:
+    """Energy for a RoMe transfer.
+
+    One row command on the interposer expands (on the logic die) into
+    2 ACT + 64 RD/WR + 2 PRE; ACT count is the minimum possible: one bank
+    pair per 4 KB. `overfetch_frac` accounts for rows read beyond the bytes
+    actually requested (§VII — negligible for LLM streams, significant for
+    fine-grained sparse access)."""
+    eff_bytes = int(bytes_moved * (1.0 + overfetch_frac))
+    bits = eff_bytes * 8
+    # Two ACT commands per RD_row/WR_row, each opening the row in both
+    # lockstep PCs => 4 physical 1 KB bank-array activations per 4 KB row —
+    # exactly the conventional minimum. The baseline's ACT count is inflated
+    # above this by stream-interleaving row conflicts; RoMe's is structural.
+    n_acts = 4 * n_row_cmds
+    n_expanded = 68 * n_row_cmds     # 2 ACT + 64 bursts + 2 PRE
+    return EnergyBreakdown(
+        act_pj=n_acts * p.e_act_pj,
+        data_core_pj=bits * p.e_core_pj_bit,
+        data_io_pj=bits * p.e_io_pj_bit,
+        ca_pj=n_row_cmds * p.e_ca_cmd_pj,            # 1 cmd vs 32/PC
+        cmdgen_pj=n_expanded * p.e_cmdgen_pj,
+        refresh_pj=n_refpb * p.e_refpb_pj,
+        background_pj=elapsed_ns * n_channels * p.p_background_pj_ns,
+    )

@@ -1,0 +1,64 @@
+"""Memory-controller complexity comparison (paper Table IV / §V-A).
+
+Structural facts about the two MC architectures, used by the complexity
+benchmark and asserted in tests. The cycle-accurate behaviour lives in
+:mod:`repro.core.engine`; this module is the architectural census.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .timing import HBM4_BANK_STATES, ROME_BANK_STATES, HBM4Timing, RoMeTiming
+
+
+@dataclass(frozen=True)
+class MCComplexity:
+    name: str
+    n_timing_params: int
+    n_bank_fsms: int              # FSM instances the scheduler tracks
+    n_bank_states: int            # states per FSM
+    page_policy: str
+    scheduling: tuple
+    request_queue_depth: int
+
+
+def conventional_mc_complexity(banks_per_pc: int = 64) -> MCComplexity:
+    return MCComplexity(
+        name="hbm4",
+        n_timing_params=HBM4Timing().n_managed(),      # 15
+        n_bank_fsms=banks_per_pc,                      # one per bank per PC
+        n_bank_states=len(HBM4_BANK_STATES),           # 7
+        page_policy="open",
+        scheduling=("row-buffer locality", "bank group interleaving",
+                    "PC interleaving"),
+        request_queue_depth=64,
+    )
+
+
+def rome_mc_complexity() -> MCComplexity:
+    """RoMe (§V-A): two VBAs operating + up to three refreshing => 5 FSMs;
+    4 states; 10 timing parameters; no page policy; queue depth 2 suffices
+    for peak throughput (4 provisioned in the area study)."""
+    return MCComplexity(
+        name="rome",
+        n_timing_params=RoMeTiming().n_managed(),      # 10
+        n_bank_fsms=5,
+        n_bank_states=len(ROME_BANK_STATES),           # 4
+        page_policy="none (always precharge after row access)",
+        scheduling=("VBA interleaving",),
+        request_queue_depth=2,
+    )
+
+
+def max_concurrent_refreshing(timing: RoMeTiming | None = None) -> int:
+    """Refresh-FSM provisioning (§V-A: 'up to three undergo refresh
+    simultaneously'). Steady-state rotation alone needs
+    ceil((tRFCpb+tRREFpb)/(2*tREFIpb)) = 2 in-flight; the third FSM covers
+    pooled-refresh flushes — when demand-postponed REFpbs drain, the MC
+    releases them at tRREFpb spacing but caps in-flight refreshes at 3 so
+    an 8-deep pool empties in ~3*(tRFCpb+tRREFpb) < tREFI/4 without
+    provisioning a per-VBA FSM."""
+    t = timing or RoMeTiming()
+    import math
+    steady = math.ceil((t.tRFCpb + t.tRREFpb) / (2 * t.tREFIpb))
+    return steady + 1

@@ -1,0 +1,234 @@
+"""Timing and geometry parameters for HBM4 and RoMe memory systems.
+
+Encodes Tables II, III and V of the paper. All times are in nanoseconds
+(float); geometry counts are ints. JEDEC has not finalized HBM4 timings, so
+— like the paper — we adopt values from prior studies ([2] Folded Banks,
+[51] Fine-Grained DRAM) as listed in Table V.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+# ---------------------------------------------------------------------------
+# Geometry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ChannelGeometry:
+    """Physical geometry of one (legacy) HBM channel."""
+
+    data_pins: int = 64              # DQ pins per channel (HBM4: 64)
+    data_rate_gbps: float = 8.0      # per-pin data rate
+    pseudo_channels: int = 2         # PCs per channel (share C/A, split DQ)
+    bank_groups: int = 8             # bank groups per PC
+    banks_per_group: int = 8         # banks per bank group (128 banks/ch)
+    row_bytes: int = 1024            # row size per bank (1 KB)
+    col_bytes: int = 32              # column access granularity (32 B)
+    sids: int = 4                    # stack IDs (ranks)
+
+    @property
+    def banks_per_pc(self) -> int:
+        return self.bank_groups * self.banks_per_group
+
+    @property
+    def banks_per_channel(self) -> int:
+        return self.banks_per_pc * self.pseudo_channels
+
+    @property
+    def bandwidth_gbps(self) -> float:
+        """Peak channel bandwidth in GB/s."""
+        return self.data_pins * self.data_rate_gbps / 8.0
+
+    @property
+    def pc_bandwidth_gbps(self) -> float:
+        return self.bandwidth_gbps / self.pseudo_channels
+
+    @property
+    def burst_ns(self) -> float:
+        """Time to move one column (col_bytes) over one PC."""
+        return self.col_bytes / self.pc_bandwidth_gbps  # bytes / (B/ns)
+
+    @property
+    def cols_per_row(self) -> int:
+        return self.row_bytes // self.col_bytes
+
+
+@dataclass(frozen=True)
+class CubeGeometry:
+    """One HBM cube (stack)."""
+
+    channels: int = 32               # legacy channels per cube (HBM4: 32)
+    channel: ChannelGeometry = ChannelGeometry()
+
+    @property
+    def bandwidth_gbps(self) -> float:
+        return self.channels * self.channel.bandwidth_gbps  # GB/s
+
+    @property
+    def bandwidth_tbps(self) -> float:
+        return self.bandwidth_gbps / 1000.0
+
+
+# ---------------------------------------------------------------------------
+# HBM4 (baseline) timing — Table II / Table V left column
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HBM4Timing:
+    """Conventional HBM4 timing parameters in ns (Table V)."""
+
+    tRC: float = 45.0
+    tRP: float = 16.0
+    tRAS: float = 29.0
+    tCL: float = 16.0
+    tCWL: float = 2.0         # write latency (command to first write data)
+    tRCDRD: float = 16.0
+    tRCDWR: float = 16.0
+    tWR: float = 16.0
+    tFAW: float = 12.0
+    tCCDL: float = 2.0        # RD/WR to RD/WR, same bank group
+    tCCDS: float = 1.0        # RD/WR to RD/WR, different bank group
+    tCCDR: float = 2.0        # RD/WR to RD/WR, different SID (rank)
+    tRRDS: float = 2.0        # ACT to ACT, different bank group
+    tRRDL: float = 2.0        # ACT to ACT, same bank group
+    tRTW: float = 4.0         # RD to WR turnaround, same channel
+    tWTRS: float = 4.0        # WR to RD, different bank group
+    tWTRL: float = 6.0        # WR to RD, same bank group
+    tRTP: float = 4.0         # RD to PRE
+    # Refresh
+    tREFI: float = 3900.0     # all-bank refresh interval
+    tRFCab: float = 350.0     # all-bank refresh cycle
+    tRFCpb: float = 280.0     # per-bank refresh cycle
+    tRREFpb: float = 8.0      # REFpb-to-REFpb, different banks
+    refresh_rotation_banks: int = 32  # banks covered by the REFpb rotation
+
+    @property
+    def tREFIpb(self) -> float:
+        """Per-bank refresh command interval (rotating across banks)."""
+        return self.tREFI / self.refresh_rotation_banks
+
+    def n_managed(self) -> int:
+        """Number of timing parameters the conventional MC must manage
+        (paper Table IV: 15)."""
+        return 15
+
+
+# ---------------------------------------------------------------------------
+# RoMe timing — Table III / Table V right column
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RoMeTiming:
+    """RoMe row-level timing parameters in ns (Tables III & V).
+
+    `S` suffix = different VBA (same SID); `R` suffix = different SID.
+    tRD_row / tWR_row chain within the same VBA.
+    """
+
+    tR2RS: float = 64.0
+    tR2RR: float = 68.0
+    tR2WS: float = 69.0
+    tR2WR: float = 73.0
+    tW2RS: float = 71.0
+    tW2RR: float = 75.0
+    tW2WS: float = 64.0
+    tW2WR: float = 68.0
+    tRD_row: float = 95.0
+    tWR_row: float = 115.0
+    # Refresh (inherited from the underlying DRAM; §V-B)
+    tRFCpb: float = 280.0
+    tRREFpb: float = 8.0
+    tREFIpb: float = 3900.0 / 32.0
+
+    def n_managed(self) -> int:
+        """Number of timing parameters the RoMe MC manages (Table IV: 10)."""
+        return 10
+
+    def gap_ns(self, prev_is_write: bool, next_is_write: bool,
+               same_vba: bool, same_sid: bool) -> float:
+        """Minimum start-to-start spacing between two row commands."""
+        if same_vba:
+            return self.tWR_row if prev_is_write else self.tRD_row
+        if not prev_is_write and not next_is_write:
+            return self.tR2RS if same_sid else self.tR2RR
+        if not prev_is_write and next_is_write:
+            return self.tR2WS if same_sid else self.tR2WR
+        if prev_is_write and not next_is_write:
+            return self.tW2RS if same_sid else self.tW2RR
+        return self.tW2WS if same_sid else self.tW2WR
+
+
+# ---------------------------------------------------------------------------
+# System-level configs (Table V)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MemSystemConfig:
+    """One cube-level memory-system configuration."""
+
+    name: str
+    channels_per_cube: int
+    banks_per_channel: int           # banks (HBM4) or VBAs*2 (RoMe)
+    row_bytes: int                   # effective row / AG_MC granularity unit
+    ag_mc_bytes: int                 # MC access granularity
+    data_rate_gbps: float
+    channel_bw_gbps: float           # GB/s per channel
+    request_queue_depth: int
+    geometry: CubeGeometry
+
+    @property
+    def cube_bw_gbps(self) -> float:
+        return self.channels_per_cube * self.channel_bw_gbps
+
+    @property
+    def vbas_per_channel(self) -> int:
+        return self.banks_per_channel // 2
+
+
+def hbm4_config() -> MemSystemConfig:
+    geo = CubeGeometry(channels=32, channel=ChannelGeometry())
+    return MemSystemConfig(
+        name="hbm4",
+        channels_per_cube=32,
+        banks_per_channel=128,
+        row_bytes=1024,
+        ag_mc_bytes=32,
+        data_rate_gbps=8.0,
+        channel_bw_gbps=geo.channel.bandwidth_gbps,
+        request_queue_depth=64,
+        geometry=geo,
+    )
+
+
+def rome_config(extra_channels: int = 4) -> MemSystemConfig:
+    """RoMe cube: 32 legacy channels + `extra_channels` from freed C/A pins
+    (§IV-E: 36 channels/cube, +12.5 % bandwidth)."""
+    geo = CubeGeometry(channels=32 + extra_channels, channel=ChannelGeometry())
+    return MemSystemConfig(
+        name="rome",
+        channels_per_cube=32 + extra_channels,
+        banks_per_channel=32,
+        row_bytes=4096,              # effective row: 2 banks x 2 PCs x 1KB
+        ag_mc_bytes=4096,
+        data_rate_gbps=8.0,
+        channel_bw_gbps=geo.channel.bandwidth_gbps,
+        request_queue_depth=4,
+        geometry=geo,
+    )
+
+
+# Conventional MC bank states (Fig 4 discussion) and RoMe bank states
+# (Fig 11(a)).
+HBM4_BANK_STATES = (
+    "Idle", "Activating", "Active", "Precharging", "Reading", "Writing",
+    "Refreshing",
+)
+ROME_BANK_STATES = ("Idle", "Reading", "Writing", "Refreshing")
+
+
+def summarize(cfg: MemSystemConfig) -> dict:
+    return dataclasses.asdict(cfg) | {
+        "cube_bw_gbps": cfg.cube_bw_gbps,
+    }

@@ -1,0 +1,116 @@
+"""Virtual Bank (VBA) design space (paper §IV-B, Figs 7 & 8).
+
+Six configurations = {Fig 7(b), 7(c), 7(d)} x {Fig 8(a), 8(b)}. All deliver
+full channel bandwidth from a single VBA; they differ in DRAM-internal
+datapath changes (area) and in effective geometry (row size, #VBAs). The
+paper measures <= 3.6 % performance spread across the six and adopts
+7(d) + 8(b) — the only point requiring **no** internal DRAM modification.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+
+
+class BankMode(Enum):
+    WIDER_BANK = "7b"          # single bank, doubled AG_bank (datapath x2)
+    TANDEM_SAME_BG = "7c"      # two banks in the same bank group in tandem
+    INTERLEAVED_DIFF_BG = "7d" # two banks in different BGs, time-multiplexed
+
+
+class PCMode(Enum):
+    SINGLE_PC_DOUBLE = "8a"    # one PC fetches double => BG-BUS x2 + muxes
+    LOCKSTEP_PCS = "8b"        # both PCs operate simultaneously (legacy mode)
+
+
+@dataclass(frozen=True)
+class VBAConfig:
+    bank_mode: BankMode
+    pc_mode: PCMode
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def effective_row_bytes(self) -> int:
+        """Effective row per VBA access (base bank row = 1 KB)."""
+        row = 1024
+        if self.bank_mode is BankMode.WIDER_BANK:
+            row *= 2               # doubled AG_bank
+        else:
+            row *= 2               # two banks in tandem / interleaved
+        if self.pc_mode is PCMode.LOCKSTEP_PCS:
+            row *= 2               # both PCs move their half simultaneously
+        else:
+            row *= 1               # single PC fetches double per column
+        return row
+
+    @property
+    def vbas_per_channel(self) -> int:
+        banks = 128                # HBM4 banks per channel
+        per_vba = 1 if self.bank_mode is BankMode.WIDER_BANK else 2
+        if self.pc_mode is PCMode.LOCKSTEP_PCS:
+            per_vba *= 2           # a VBA spans both PCs' banks
+            return banks // per_vba
+        # 8(a): PCs merged from the MC view but banks counted per channel.
+        return banks // per_vba
+
+    # -- datapath multipliers (area; §IV-B & [51]) ----------------------------
+
+    @property
+    def bank_dataline_x(self) -> int:
+        return 2 if self.bank_mode is BankMode.WIDER_BANK else 1
+
+    @property
+    def bkbus_x(self) -> int:
+        return 2 if self.bank_mode is BankMode.WIDER_BANK else 1
+
+    @property
+    def io_ctrl_buffer_x(self) -> int:
+        if self.bank_mode in (BankMode.WIDER_BANK, BankMode.TANDEM_SAME_BG):
+            return 2
+        return 1
+
+    @property
+    def bgbus_x(self) -> int:
+        return 2 if self.pc_mode is PCMode.SINGLE_PC_DOUBLE else 1
+
+    @property
+    def needs_gbus_mux(self) -> bool:
+        return self.pc_mode is PCMode.SINGLE_PC_DOUBLE
+
+    @property
+    def dram_internal_change(self) -> bool:
+        """Does this point require modifying the DRAM die datapath?"""
+        return (self.bank_dataline_x > 1 or self.bkbus_x > 1 or
+                self.io_ctrl_buffer_x > 1 or self.bgbus_x > 1 or
+                self.needs_gbus_mux)
+
+    @property
+    def area_overhead_frac(self) -> float:
+        """Rough DRAM-die area overhead. [51] reports up to 77 % for a fully
+        doubled (4x dataline) design; we scale linearly in the number of
+        doubled structures (dataline, BK-BUS, IO buffer, BG-BUS), with the
+        bank-internal dataline dominating."""
+        weights = {
+            "dataline": 0.45, "bkbus": 0.12, "iobuf": 0.10, "bgbus": 0.10,
+        }
+        f = 0.0
+        if self.bank_dataline_x > 1:
+            f += weights["dataline"]
+        if self.bkbus_x > 1:
+            f += weights["bkbus"]
+        if self.io_ctrl_buffer_x > 1:
+            f += weights["iobuf"]
+        if self.bgbus_x > 1:
+            f += weights["bgbus"]
+        return f
+
+    @property
+    def name(self) -> str:
+        return f"{self.bank_mode.value}+{self.pc_mode.value}"
+
+
+ALL_VBA_CONFIGS = [VBAConfig(b, p) for b in BankMode for p in PCMode]
+
+# The paper's adopted design: Fig 7(d) + Fig 8(b).
+ADOPTED = VBAConfig(BankMode.INTERLEAVED_DIFF_BG, PCMode.LOCKSTEP_PCS)

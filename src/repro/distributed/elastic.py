@@ -1,0 +1,69 @@
+"""Elastic re-meshing: resume a job on a different device count.
+
+At 1000+-node scale, node loss is routine; rather than waiting for the
+exact machine shape to return, the job restarts on whatever divisor-shaped
+slice is healthy. Parameters (and optimizer moments) are declared by
+*named-axis* PartitionSpecs, so resharding is respecification: build the new
+mesh, re-place every leaf under the same spec names, and continue. The spec
+is the invariant; the device assignment is not.
+
+``shrink_mesh`` picks the largest (data', model') grid that divides the new
+device count while preserving the model-axis divisibility constraints of
+the architecture (head counts, FFN width).
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import filter_spec
+
+
+def viable_meshes(n_devices: int, tp_divisors: Iterable[int] = (16, 8, 4, 2, 1)):
+    """(data, model) grids available at a device count, best-TP first."""
+    out = []
+    for tp in tp_divisors:
+        if n_devices % tp == 0:
+            out.append((n_devices // tp, tp))
+    return out
+
+
+def shrink_mesh(n_devices: int, model_divisibility: int = 16,
+                devices=None) -> Mesh:
+    """Largest usable (data, model) mesh after an elastic event. The model
+    axis must divide `model_divisibility` (the arch's TP-alignment, e.g.
+    padded head count)."""
+    for data, model in viable_meshes(n_devices):
+        if model_divisibility % model == 0 or model <= model_divisibility:
+            devs = np.asarray(devices if devices is not None
+                              else jax.devices()[:n_devices])
+            return Mesh(devs.reshape(data, model), ("data", "model"))
+    raise ValueError(f"no viable mesh for {n_devices} devices")
+
+
+def reshard(tree, specs, mesh: Mesh):
+    """Re-place every leaf of `tree` on `mesh` under its named spec.
+
+    specs is a pytree of PartitionSpec *tuples* (the repo convention);
+    axes not present on the new mesh are dropped (e.g. 'pod' after
+    shrinking to one pod)."""
+    names = tuple(mesh.axis_names)
+
+    def place(x, spec):
+        cleaned = P(*filter_spec(tuple(spec), names))
+        return jax.device_put(x, NamedSharding(mesh, cleaned))
+
+    return jax.tree.map(place, tree, specs,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(e, (str, tuple, type(None)))
+                                for e in x))
+
+
+def elastic_resume(tree, specs, n_devices: int,
+                   model_divisibility: int = 16):
+    """One-call elastic restart: shrink the mesh and reshard the state."""
+    mesh = shrink_mesh(n_devices, model_divisibility)
+    return reshard(tree, specs, mesh), mesh

@@ -1,0 +1,177 @@
+"""Sharding vocabulary and helpers.
+
+Mesh axes (see repro.launch.mesh):
+  * ``pod``   — outer data-parallel axis across pods (multi-pod mesh only)
+  * ``data``  — data parallel / FSDP axis within a pod
+  * ``model`` — tensor-parallel axis
+
+Model code expresses intent with :func:`shard_hint`, which silently drops
+axes that don't exist on the active mesh — so the same model runs on the
+single-pod mesh (no ``pod`` axis), the multi-pod mesh, or an unmeshed CPU
+test (constraint becomes a no-op).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")    # batch dim shards over both DP axes
+TP_AXIS = "model"
+
+# --- activation (sequence-parallel) sharding policy -------------------------
+# When set to a mesh axis name (usually "model"), the residual stream h is
+# sharded along its sequence dim between blocks — XLA gathers it where a
+# block genuinely needs the full sequence and scatters after (standard
+# sequence parallelism). Cuts saved-activation memory by the TP degree at
+# the cost of per-block collectives; the launch layer enables it for train
+# cells whose activations cannot otherwise fit HBM.
+_ACT_SEQ_AXIS: list = [None]
+
+
+class activation_sharding:
+    """Trace-time context manager selecting the sequence-parallel axis."""
+
+    def __init__(self, axis):
+        self.axis = axis
+
+    def __enter__(self):
+        _ACT_SEQ_AXIS.append(self.axis)
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_SEQ_AXIS.pop()
+        return False
+
+
+def act_seq_axis():
+    return _ACT_SEQ_AXIS[-1]
+
+
+def hint_residual(h):
+    """Sharding hint for the residual stream (b, s, d) between blocks."""
+    if h.ndim != 3 or h.shape[1] <= 1:
+        return shard_hint(h, BATCH_AXES, None, None)
+    return shard_hint(h, BATCH_AXES, act_seq_axis(), None)
+
+
+def _active_axis_names() -> tuple:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return ()
+    if m is None:
+        return ()
+    return tuple(m.axis_names) if m.axis_names else ()
+
+
+def filter_spec(entries: tuple, axis_names: tuple) -> tuple:
+    """Drop mesh axes that are not present on the active mesh."""
+    out = []
+    for e in entries:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in axis_names)
+            out.append(kept if kept else None)
+        else:
+            out.append(e if e in axis_names else None)
+    return tuple(out)
+
+
+def spec(*entries) -> P:
+    """PartitionSpec filtered to the active mesh's axes (for use *outside*
+    jit when building in/out shardings)."""
+    return P(*filter_spec(entries, _active_axis_names()))
+
+
+def shard_hint(x: jax.Array, *entries) -> jax.Array:
+    """with_sharding_constraint that degrades gracefully: unknown axes are
+    dropped; with no active mesh it is the identity."""
+    names = _active_axis_names()
+    if not names:
+        return x
+    cleaned = filter_spec(entries, names)
+    if all(c is None for c in cleaned):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*cleaned))
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# TP divisibility policy (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def constrain_like(tree, specs):
+    """with_sharding_constraint every leaf to its named-axis spec tuple,
+    filtered to the active mesh and to divisibility (leaf shapes are known
+    at trace time). No-op outside a mesh. Used to pin gradient
+    accumulators to the parameter sharding so XLA emits per-microbatch
+    reduce-scatters instead of full all-reduces (§Perf)."""
+    import jax.numpy as jnp
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return tree
+    if mesh is None or not mesh.axis_names:
+        return tree
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+    def entry_ok(e, dim):
+        axes = [a for a in (e if isinstance(e, (tuple, list)) else (e,))
+                if a in sizes]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if dim % prod == 0:
+                break
+            axes.pop(0)
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, tuple, list, type(None))) for e in x)
+
+    def one(x, spec):
+        spec = tuple(spec) + (None,) * (x.ndim - len(spec))
+        used: set = set()
+        entries = []
+        for e, d in zip(spec, x.shape):
+            c = None if e is None else entry_ok(e, d)
+            if c is not None:
+                cs = c if isinstance(c, tuple) else (c,)
+                cs = tuple(a for a in cs if a not in used)
+                used.update(cs)
+                c = cs if len(cs) > 1 else (cs[0] if cs else None)
+            entries.append(c)
+        if all(c is None for c in entries):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+
+    return jax.tree.map(one, tree, specs, is_leaf=is_spec)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def padded_heads(n_heads: int, tp: int) -> int:
+    """Query heads are padded up to a multiple of TP (vLLM/MaxText
+    convention); the pad heads carry zero-initialized projections."""
+    return pad_to_multiple(n_heads, tp)
+
+
+def padded_kv_heads(n_kv_heads: int, tp: int) -> int:
+    """KV heads are *replicated* (not padded) when fewer than TP; the
+    parameter tensors keep their true size and the replication happens in
+    compute via repeat_kv. For sharding purposes the kv projection output
+    dim shards over TP only when divisible."""
+    return n_kv_heads
+
+
+def padded_vocab(vocab: int, multiple: int = 128) -> int:
+    """Vocab padded to a lane-aligned multiple (whisper: 51865 -> 51968)."""
+    return pad_to_multiple(vocab, multiple)

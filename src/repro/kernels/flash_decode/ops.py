@@ -1,0 +1,20 @@
+"""jit'd public wrapper for GQA flash decode."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_decode, pick_block_s
+from .ref import flash_decode_ref
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos, use_kernel: bool = True,
+                     interpret: bool = True) -> jax.Array:
+    """Row-granularity GQA decode attention; falls back to the jnp oracle
+    with `use_kernel=False`."""
+    if not use_kernel:
+        return flash_decode_ref(q, k_cache, v_cache, pos)
+    return flash_decode(q, k_cache, v_cache, pos, interpret=interpret)
+
+
+__all__ = ["decode_attention", "pick_block_s"]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for GQA flash decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k_cache, v_cache, pos):
+    """q: (b, h, d); caches: (b, h_kv, s, d); pos: scalar int.
+    Returns (b, h, d). Slots > pos are masked (unwritten)."""
+    b, h, d = q.shape
+    hkv = k_cache.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    logits = jnp.einsum("bngd,bnsd->bngs", qg, kf) / jnp.sqrt(float(d))
+    s = k_cache.shape[2]
+    mask = jnp.arange(s)[None, None, None, :] <= pos
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bngs,bnsd->bngd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

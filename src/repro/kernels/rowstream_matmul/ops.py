@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the row-stream matmul."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import pick_bk, rowstream_matmul
+from .ref import rowstream_matmul_ref
+
+
+def matmul(x: jax.Array, w: jax.Array, use_kernel: bool = True,
+           interpret: bool = True) -> jax.Array:
+    """Row-granularity streaming matmul. On CPU the kernel body runs in
+    interpret mode (the TPU path compiles the same pallas_call natively);
+    `use_kernel=False` falls back to the jnp oracle."""
+    if not use_kernel:
+        return rowstream_matmul_ref(x, w)
+    return rowstream_matmul(x, w, interpret=interpret)
+
+
+__all__ = ["matmul", "pick_bk"]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the row-stream matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rowstream_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (m, k) @ w: (k, n) -> (m, n) accumulated in fp32, cast to x dtype."""
+    out = jnp.einsum("mk,kn->mn", x, w, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,122 @@
+"""Chunked RWKV6 time-mix Pallas TPU kernel — row-granularity streaming of
+the attention-free arch's hot loop.
+
+The recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+               o_t = r_t (diag(u) k_t^T v_t + S_{t-1})
+is evaluated chunk-parallel: within a chunk of C tokens all cross-token
+terms become (C x C) matmuls using per-channel *log-space* cumulative
+decays, and only the (hd x hd) state crosses chunk boundaries (VMEM
+scratch). Exponent differences are always <= 0 inside the valid mask, so
+no decay underflow/overflow can occur regardless of the data-dependent w.
+
+Chunk size is chosen so one operand chunk (C x hd x 4 B) is a whole number
+of 4 KB DRAM rows — each r/k/v/w DMA is one RD_row burst train (C=16,
+hd=64 -> exactly one row), the RoMe contract.
+
+Grid: (b, H, n_chunks); the chunk axis is sequential ("arbitrary") and
+carries the state in scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DRAM_ROW_BYTES = 4096
+NEG_INF = -1e30
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_final_ref, S):
+    c_idx = pl.program_id(2)
+    C, hd = r_ref.shape[2], r_ref.shape[3]
+
+    @pl.when(c_idx == 0)
+    def _init():
+        S[...] = jnp.zeros_like(S)
+
+    r = r_ref[0, 0].astype(jnp.float32)              # (C, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)              # decay in (0, 1)
+    u = u_ref[0].astype(jnp.float32)                 # (hd,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))            # (C, hd), <= 0
+    lc = jnp.cumsum(logw, axis=0)                    # inclusive cumulation
+    lc_prev = lc - logw                              # lc_{i-1} (exclusive)
+
+    # Intra-chunk mixing matrix A (C x C):
+    #   j <  i: sum_d r[i,d] k[j,d] exp(lc_prev[i,d] - lc[j,d])
+    #   j == i: sum_d r[i,d] u[d] k[i,d]
+    # Exponents are <= 0 inside the mask; masked entries are zeroed *before*
+    # exp via a NEG_INF fill, so nothing can overflow.
+    expo = lc_prev[:, None, :] - lc[None, :, :]      # (C, C, hd)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    strict = (j_idx < i_idx)[:, :, None]
+    decay = jnp.exp(jnp.where(strict, expo, NEG_INF))
+    A = jnp.einsum("id,jd,ijd->ij", r, k, decay)
+    A = A + jnp.diag(jnp.sum(r * u[None, :] * k, axis=-1))
+
+    # State contribution and output.
+    r_dec = r * jnp.exp(lc_prev)                     # (C, hd), exp <= 1
+    o = jnp.dot(A, v, preferred_element_type=jnp.float32) \
+        + jnp.dot(r_dec, S[...], preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    # State update: S' = diag(exp(lc_C)) S + sum_j (k_j * exp(lc_C - lc_j))^T v_j
+    lc_last = lc[-1]                                 # (hd,)
+    k_dec = k * jnp.exp(lc_last[None, :] - lc)       # exp <= 1
+    S[...] = jnp.exp(lc_last)[:, None] * S[...] \
+        + jnp.dot(k_dec.T, v, preferred_element_type=jnp.float32)
+
+    @pl.when(c_idx == pl.num_programs(2) - 1)
+    def _finish():
+        s_final_ref[0, 0] = S[...]
+
+
+def pick_chunk(s: int, hd: int, itemsize: int = 4) -> int:
+    """Chunk length: whole DRAM rows per operand chunk and divides s."""
+    c = max(8, DRAM_ROW_BYTES // (hd * itemsize))
+    while (c * hd * itemsize) % DRAM_ROW_BYTES and c > 8:
+        c -= 8
+    while s % c and c > 1:
+        c //= 2
+    return max(1, c)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, chunk: int | None = None,
+              interpret: bool = True):
+    """r/k/v/w: (b, s, H, hd); u: (H, hd).
+    Returns (o (b, s, H, hd), final state (b, H, hd, hd))."""
+    b, s, H, hd = r.shape
+    if chunk is None:
+        chunk = pick_chunk(s, hd, 4)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # (b, H, s, hd) layout so the chunk dim is contiguous per (b, H).
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    rr, kk, vv, ww = tr(r), tr(k), tr(v), tr(w)
+
+    spec = pl.BlockSpec((1, 1, chunk, hd), lambda i, j, c: (i, j, c, 0))
+    o, s_final = pl.pallas_call(
+        _kernel,
+        grid=(b, H, nc),
+        in_specs=[spec, spec, spec,
+                  spec,
+                  pl.BlockSpec((1, hd), lambda i, j, c: (j, 0))],
+        out_specs=[spec,
+                   pl.BlockSpec((1, 1, hd, hd), lambda i, j, c: (i, j, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, H, s, hd), r.dtype),
+                   jax.ShapeDtypeStruct((b, H, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(rr, kk, vv, ww, u)
+    return o.transpose(0, 2, 1, 3), s_final

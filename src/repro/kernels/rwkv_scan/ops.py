@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the chunked RWKV6 scan."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import pick_chunk, rwkv_scan
+from .ref import rwkv_scan_ref
+
+
+def time_mix(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, use_kernel: bool = True,
+             interpret: bool = True):
+    """Chunk-parallel RWKV6 recurrence; `use_kernel=False` falls back to
+    the sequential jnp oracle."""
+    if not use_kernel:
+        return rwkv_scan_ref(r, k, v, w, u)
+    return rwkv_scan(r, k, v, w, u, interpret=interpret)
+
+
+__all__ = ["time_mix", "pick_chunk"]

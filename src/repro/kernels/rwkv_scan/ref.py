@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the chunked RWKV6 time-mix recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (diag(u) k_t^T v_t + S_{t-1})
+
+r/k/w: (b, s, H, hd); v: (b, s, H, hd); u: (H, hd). All math fp32.
+Returns (o (b, s, H, hd), final state (b, H, hd, hd)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv_scan_ref(r, k, v, w, u, S0=None):
+    b, s, H, hd = r.shape
+    r32, k32, v32, w32 = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+    if S0 is None:
+        S0 = jnp.zeros((b, H, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                          # (b, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)        # rank-1 update
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S + u32[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, o
+
+    S, o = jax.lax.scan(
+        step, S0,
+        (r32.transpose(1, 0, 2, 3), k32.transpose(1, 0, 2, 3),
+         v32.transpose(1, 0, 2, 3), w32.transpose(1, 0, 2, 3)))
+    return o.transpose(1, 0, 2, 3).astype(r.dtype), S

@@ -1,0 +1,3 @@
+# Launch layer: production mesh, multi-pod dry-run, roofline analysis, and
+# the train/serve drivers. Import of this package never touches jax device
+# state (mesh construction is behind functions).

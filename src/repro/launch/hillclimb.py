@@ -1,0 +1,103 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb harness: lower one cell with a named variant, print the three
+roofline terms + per-collective breakdown, and append the iteration to
+results/hillclimb.json (the §Perf log).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch qwen2-7b --shape decode_32k --variant baseline
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from ..configs.registry_configs import ALL_ARCHS
+from ..configs.shapes import SHAPES
+from .hlo_analysis import HloModule
+from .mesh import make_production_mesh
+from .plans import make_cell
+from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, model_bytes, \
+    model_flops
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "hillclimb.json")
+
+
+def measure(arch: str, shape_name: str, mesh_kind: str = "single",
+            variant: str = "baseline", opts: dict | None = None,
+            dump_hlo: str | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    shape = SHAPES[shape_name]
+    cfg = ALL_ARCHS[arch]
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        plan = make_cell(arch, shape_name, mesh, **(opts or {}))
+        compiled = jax.jit(plan.fn, donate_argnums=plan.donate) \
+            .lower(*plan.args).compile()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(hlo)
+    st = HloModule(hlo).analyze()
+    mem_gb = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+              + mem.temp_size_in_bytes) / 1e9
+    rf = Roofline(arch=arch, shape=shape_name, mesh=mesh_kind,
+                  flops_per_chip=st.flops, bytes_per_chip=st.bytes_accessed,
+                  coll_bytes_per_chip=st.collective_bytes,
+                  model_flops_total=model_flops(cfg, shape),
+                  model_bytes_total=model_bytes(cfg, shape),
+                  n_chips=mesh.devices.size,
+                  coll_by_kind=dict(st.coll_by_kind), mem_per_chip_gb=mem_gb)
+    rec = {"variant": variant, "opts": opts or {},
+           "compile_s": round(time.time() - t0, 1), **rf.row()}
+    return rec
+
+
+def log(rec: dict) -> None:
+    data = []
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            data = json.load(f)
+    data.append(rec)
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def show(rec: dict) -> None:
+    print(f"[{rec['arch']} x {rec['shape']} x {rec['mesh']}] "
+          f"variant={rec['variant']}")
+    print(f"  t_compute {rec['t_compute_ms']:.2f} ms | t_memory "
+          f"{rec['t_memory_ms']:.2f} ms | t_collective "
+          f"{rec['t_collective_ms']:.2f} ms -> bound={rec['bottleneck']}")
+    print(f"  roofline_fraction {rec['roofline_fraction']:.4f} "
+          f"(ideal {rec['t_ideal_ms']:.2f} ms / bound "
+          f"{rec['t_bound_ms']:.2f} ms); mem {rec['mem_per_chip_gb']:.1f} "
+          f"GB/chip; useful flops {rec['useful_ratio']:.2f}")
+    colls = {k: f"{v/1e9:.2f}GB" for k, v in rec["coll_by_kind"].items()}
+    print(f"  collectives: {colls}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--opts", default="{}", help="JSON kwargs for make_cell")
+    ap.add_argument("--dump-hlo", default=None)
+    args = ap.parse_args(argv)
+    rec = measure(args.arch, args.shape, args.mesh, args.variant,
+                  json.loads(args.opts), args.dump_hlo)
+    show(rec)
+    log(rec)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

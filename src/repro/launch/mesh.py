@@ -1,0 +1,29 @@
+"""Production mesh construction (brief: MULTI-POD DRY-RUN step 1).
+
+``make_production_mesh`` is a FUNCTION, not a module-level constant, so
+importing this module never touches jax device state. The single-pod mesh
+is 16x16 = 256 chips (one TPU v5e pod); the multi-pod mesh prepends a
+``pod`` axis: (2, 16, 16) = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh (elastic re-mesh, tests)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_devices(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,287 @@
+"""Sharding plans: abstract (ShapeDtypeStruct) arguments with NamedShardings
+for every (arch x input-shape x mesh) cell.
+
+The model zoo declares *intent* as named-axis spec tuples
+(``param_specs`` / ``cache_specs`` / ``state_specs``); this module makes the
+intent concrete for a given mesh and shape:
+
+* axes not on the mesh are dropped (single-pod vs multi-pod),
+* axes whose size does not divide the dimension are dropped (e.g. rwkv6's
+  40 heads on a 16-way model axis, batch=1 on the DP axes),
+* everything is returned as jax.ShapeDtypeStruct with .sharding attached,
+  so ``jit(f).lower(*args)`` needs no separate in_shardings.
+
+No device allocation happens anywhere in this module.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.registry_configs import ALL_ARCHS
+from ..configs.shapes import SHAPES, InputShape
+from ..distributed.sharding import activation_sharding
+from ..models.registry import ModelAdapter, get_adapter
+from ..train.optimizer import AdamWState
+from ..train.train_step import TrainState, make_train_step
+
+TP = 16   # model-axis width of the production mesh
+
+
+# ---------------------------------------------------------------------------
+# Spec concretization
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, name) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def concretize_entry(entry, dim: int, mesh) -> Any:
+    """One PartitionSpec entry -> entry valid for `dim` on `mesh`."""
+    names = tuple(mesh.axis_names)
+    if entry is None:
+        return None
+    axes = [a for a in (entry if isinstance(entry, (tuple, list)) else
+                        (entry,)) if a in names]
+    # Drop axes (outermost first) until the product divides the dim.
+    while axes:
+        prod = 1
+        for a in axes:
+            prod *= _axis_size(mesh, a)
+        if dim % prod == 0:
+            break
+        axes.pop(0)
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def concretize_spec(spec: tuple, shape: tuple, mesh) -> P:
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    used: set = set()
+    entries = []
+    for e, d in zip(spec, shape):
+        c = concretize_entry(e, d, mesh)
+        # An axis name may appear at most once in a PartitionSpec.
+        if c is not None:
+            cs = c if isinstance(c, tuple) else (c,)
+            cs = tuple(a for a in cs if a not in used)
+            used.update(cs)
+            c = cs if len(cs) > 1 else (cs[0] if cs else None)
+        entries.append(c)
+    return P(*entries)
+
+
+def with_sharding(structs, specs, mesh):
+    """Attach NamedShardings to a pytree of ShapeDtypeStructs."""
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, tuple, list, type(None))) for e in x)
+
+    def one(s, spec):
+        p = concretize_spec(tuple(spec), s.shape, mesh)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, p))
+
+    return jax.tree.map(one, structs, specs, is_leaf=lambda x: is_spec(x))
+
+
+def replicated(structs, mesh):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, P())), structs)
+
+
+# ---------------------------------------------------------------------------
+# Abstract model state
+# ---------------------------------------------------------------------------
+
+def abstract_params(adapter: ModelAdapter, mesh, fsdp: Optional[str] = "data"):
+    """ShapeDtypeStructs for the parameters, sharded per param_specs."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    structs = jax.eval_shape(lambda k: adapter.init(k, tp=TP), key)
+    specs = adapter.param_specs(fsdp=fsdp, tp=TP)
+    return with_sharding(structs, specs, mesh), specs
+
+
+def abstract_opt_state(params_structs, specs, mesh):
+    """AdamW moments shard exactly like their parameters (fp32)."""
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                         sharding=s.sharding)
+    mu = jax.tree.map(f32, params_structs)
+    nu = jax.tree.map(f32, params_structs)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return AdamWState(step=step, mu=mu, nu=nu)
+
+
+def batch_structs(adapter: ModelAdapter, shape: InputShape, mesh) -> dict:
+    """Sharded input batch stand-ins (brief: input_specs())."""
+    structs = adapter.input_structs(shape.seq_len, shape.global_batch,
+                                    shape.kind)
+    out = {}
+    for name, s in structs.items():
+        spec = (("pod", "data"),) + (None,) * (len(s.shape) - 1)
+        p = concretize_spec(spec, s.shape, mesh)
+        out[name] = jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                         sharding=NamedSharding(mesh, p))
+    return out
+
+
+def abstract_cache(adapter: ModelAdapter, shape: InputShape, mesh):
+    """Decode-state stand-ins sharded per state_specs."""
+    cfg = adapter.cfg
+    seq = shape.seq_len
+    structs = jax.eval_shape(
+        lambda: adapter.init_decode_state(shape.global_batch, seq, tp=TP))
+    specs = adapter.state_specs()
+    return with_sharding(structs, specs, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Step functions (what the dry-run lowers)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CellPlan:
+    arch: str
+    shape: InputShape
+    fn: Callable              # jit-able
+    args: tuple               # abstract args (ShapeDtypeStruct pytrees)
+    kind: str                 # "train" | "prefill" | "decode"
+    donate: tuple = ()
+
+
+def train_memory_plan(cfg, shape: InputShape, mesh,
+                      act_budget_gb: float = 5.0) -> tuple[int, bool]:
+    """(microbatches, seq_shard): gradient-accumulation factor so the
+    per-microbatch saved activations (one residual per layer under remat)
+    fit the HBM budget; if even one sample per microbatch exceeds it,
+    additionally shard the residual stream's sequence dim over the model
+    axis (sequence parallelism). Production practice: global batch is set
+    by the recipe; microbatching + SP are the memory knobs."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    tp = sizes.get("model", 1)
+    b_local = max(1, shape.global_batch // dp)
+    n_layers = cfg.n_layers + getattr(cfg, "encoder_layers", 0)
+    act_gb = (b_local * shape.seq_len * cfg.d_model * 2 * n_layers) / 1e9
+    mb = 1
+    while act_gb / mb > act_budget_gb and mb < b_local:
+        mb *= 2
+    while b_local % mb:
+        mb *= 2
+    mb = min(mb, b_local)
+    # Sequence parallelism measured counterproductive as a *default* once
+    # every block (incl. cross-attention) is rematerialized — saved carries
+    # no longer dominate and SP's gather/scatter buffers offset its savings
+    # (llama-90b train: 8.0 GB temp with or without SP; EXPERIMENTS.md
+    # §Perf). Kept as an explicit knob for the hillclimb.
+    seq_shard = False
+    return mb, seq_shard
+
+
+def auto_microbatches(cfg, shape: InputShape, mesh,
+                      act_budget_gb: float = 5.0) -> int:
+    return train_memory_plan(cfg, shape, mesh, act_budget_gb)[0]
+
+
+def make_train_cell(arch: str, shape: InputShape, mesh, *,
+                    remat: bool = True, fsdp: bool = True,
+                    microbatches: int | None = None,
+                    seq_shard: bool | None = None,
+                    pin_grads: bool = True) -> CellPlan:
+    adapter = get_adapter(arch)
+    p_structs, specs = abstract_params(adapter, mesh,
+                                       fsdp="data" if fsdp else None)
+    opt = abstract_opt_state(p_structs, specs, mesh)
+    state = TrainState(params=p_structs, opt=opt)
+    batch = batch_structs(adapter, shape, mesh)
+    auto_mb, auto_sp = train_memory_plan(adapter.cfg, shape, mesh)
+    if microbatches is None:
+        microbatches = auto_mb
+    if seq_shard is None:
+        seq_shard = auto_sp
+
+    loss_fn = partial(_adapter_loss, adapter, remat)
+    step = make_train_step(loss_fn, microbatches=microbatches,
+                           param_specs=specs if pin_grads else None)
+    if seq_shard:
+        inner = step
+
+        def step(state, batch):  # noqa: F811 — SP-wrapped variant
+            with activation_sharding("model"):
+                return inner(state, batch)
+
+    return CellPlan(arch, shape, step, (state, batch), "train",
+                    donate=(0,))
+
+
+def _adapter_loss(adapter, remat, params, batch):
+    return adapter.loss(params, batch, remat=remat)
+
+
+def auto_fsdp_serving(cfg, mesh, budget_gb: float = 4.0) -> bool:
+    """Serving keeps weights TP-sharded for latency; when a model's
+    TP-sharded weights alone exceed `budget_gb`/chip, FSDP-shard them over
+    `data` too and pay the per-layer gather. Measured (EXPERIMENTS.md
+    §Perf B.2): llama-90b decode −37.6 GB/chip and −54 ms memory for
+    +8.6 ms collective; phi3.5-moe decode 22.0 -> 5.6 GB/chip."""
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    return (cfg.n_params() * 2 / tp) / 1e9 > budget_gb
+
+
+def make_prefill_cell(arch: str, shape: InputShape, mesh,
+                      fsdp: bool | None = None) -> CellPlan:
+    adapter = get_adapter(arch)
+    if fsdp is None:
+        fsdp = auto_fsdp_serving(adapter.cfg, mesh)
+    p_structs, _ = abstract_params(adapter, mesh,
+                                   fsdp="data" if fsdp else None)
+    batch = batch_structs(adapter, shape, mesh)
+
+    def prefill(params, batch):
+        return adapter.forward(params, batch, remat=True)
+
+    return CellPlan(arch, shape, prefill, (p_structs, batch), "prefill")
+
+
+def make_decode_cell(arch: str, shape: InputShape, mesh,
+                     fsdp: bool | None = None) -> CellPlan:
+    adapter = get_adapter(arch)
+    if fsdp is None:
+        fsdp = auto_fsdp_serving(adapter.cfg, mesh)
+    p_structs, _ = abstract_params(adapter, mesh,
+                                   fsdp="data" if fsdp else None)
+    batch = batch_structs(adapter, shape, mesh)
+    cache = abstract_cache(adapter, shape, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+
+    def serve_step(params, batch, cache, pos):
+        return adapter.decode(params, batch, cache, pos)
+
+    return CellPlan(arch, shape, serve_step, (p_structs, batch, cache, pos),
+                    "decode", donate=(2,))
+
+
+def make_cell(arch: str, shape_name: str, mesh, **kw) -> CellPlan:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return make_train_cell(arch, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_cell(arch, shape, mesh, **kw)
+    return make_decode_cell(arch, shape, mesh, **kw)
+
+
+def cell_supported(arch: str, shape_name: str) -> tuple[bool, str]:
+    shape = SHAPES[shape_name]
+    adapter = get_adapter(arch)
+    return adapter.supports(shape.kind, shape.seq_len)
+
+
+ALL_CELLS = [(a, s) for a in ALL_ARCHS for s in SHAPES]

@@ -1,0 +1,171 @@
+"""Roofline analysis from the compiled dry-run artifact (brief: ROOFLINE
+ANALYSIS).
+
+Terms per (arch x shape x mesh), all in per-chip seconds:
+
+    compute    = HLO_FLOPs_per_chip   / peak_FLOP/s          (197e12 bf16)
+    memory     = HLO_bytes_per_chip   / HBM_bw               (819e9 B/s)
+    collective = coll_bytes_per_chip  / link_bw              (50e9 B/s)
+
+The SPMD-partitioned module is a per-chip program, so all quantities parsed
+from it are already per chip.
+
+FLOPs/bytes/collective-bytes come from :mod:`repro.launch.hlo_analysis`
+(module-text parse with while-loop trip-count attribution), because
+``compiled.cost_analysis()`` counts scan bodies once — a 28-layer scan
+would under-report by ~28x (measured; pinned in tests/test_roofline.py).
+Raw cost_analysis numbers are recorded alongside for reference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+HBM_PER_CHIP_GB = 16.0       # v5e HBM capacity
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops_total: float
+    model_bytes_total: float
+    n_chips: int
+    coll_by_kind: dict = field(default_factory=dict)
+    mem_per_chip_gb: float = 0.0
+    # CPU XLA has no bf16 ALUs: FloatSupport wraps every bf16 all-reduce
+    # in convert-to-f32 pairs, so the parsed collective bytes are 2x what
+    # a native-bf16 TPU moves. Verified on llama-90b train: all dominant
+    # f32 collectives' operand chains begin at bf16 converts. The factor
+    # applies to bf16-model cells (all ten archs).
+    native_dtype_scale: float = 0.5
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip * self.native_dtype_scale / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Step time lower bound if the three resources never overlap-miss:
+        the slowest term gates the step."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        hlo_total = self.flops_per_chip * self.n_chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def t_ideal(self) -> float:
+        """The cell's own ideal step time: every chip moving only the
+        *model-required* bytes at full HBM bandwidth and computing only the
+        model-required flops at peak, whichever is slower."""
+        t_c = self.model_flops_total / self.n_chips / PEAK_FLOPS
+        t_m = self.model_bytes_total / self.n_chips / HBM_BW
+        return max(t_c, t_m)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """t_ideal / t_bound: how close the compiled program is to the
+        arch-intrinsic roofline of this (arch, shape). 1.0 = every byte and
+        flop the compiler schedules is model-required and the bottleneck
+        resource runs at 100 %."""
+        return self.t_ideal / self.t_bound if self.t_bound > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "t_bound_ms": self.t_bound * 1e3,
+            "t_ideal_ms": self.t_ideal * 1e3,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_total,
+            "hlo_flops_total": self.flops_per_chip * self.n_chips,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_by_kind": self.coll_by_kind,
+            "mem_per_chip_gb": self.mem_per_chip_gb,
+        }
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS / MODEL_BYTES (the "useful" numerators)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D for training (MoE: 6*N_active*D); decode: 2*N_active per token
+    + exact attention KV term; prefill: 2*N*D + causal attention term."""
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    hd = cfg.resolved_head_dim
+    if shape.kind == "train":
+        attn = (4.0 * cfg.n_layers * shape.seq_len * hd * cfg.n_heads
+                * tokens * 0.5)           # causal: half the full square
+        return 6.0 * n_active * tokens + 3.0 * attn
+    if shape.kind == "prefill":
+        attn = (4.0 * cfg.n_layers * shape.seq_len * hd * cfg.n_heads
+                * tokens * 0.5)
+        return 2.0 * n_active * tokens + attn
+    # decode: one token against a seq_len-deep cache/state
+    if cfg.family == "ssm":
+        attn = 4.0 * cfg.n_layers * cfg.d_model * hd * tokens
+    else:
+        span = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        attn = 4.0 * cfg.n_layers * span * hd * cfg.n_heads * tokens
+    return 2.0 * n_active * tokens + attn
+
+
+def model_bytes(cfg, shape, bytes_per_param: int = 2) -> float:
+    """Minimal HBM traffic for one step: weights once (active subset for
+    MoE decode), KV/state read once per decode token, activations once,
+    plus the train-side gradient/optimizer traffic."""
+    n = cfg.n_params()
+    n_active = cfg.n_active_params()
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    act = tokens * d * bytes_per_param * 2 * cfg.n_layers
+    if shape.kind == "train":
+        # fwd read + bwd read + grad write (bf16) + AdamW moments rw (fp32)
+        w_traffic = n * bytes_per_param * 3 + n * 4 * 4
+        return w_traffic + act * 3
+    if shape.kind == "prefill":
+        kv_write = (2 * cfg.n_layers * cfg.n_kv_heads * hd
+                    * tokens * bytes_per_param)
+        return n * bytes_per_param + act + kv_write
+    # decode
+    span = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    if cfg.family == "ssm":
+        state = (cfg.n_layers * shape.global_batch * (d // 64) * 64 * 64 * 4)
+        kv_read = 2 * state
+    else:
+        kv_read = (2 * cfg.n_layers * cfg.n_kv_heads * hd * span
+                   * shape.global_batch * bytes_per_param)
+    return n_active * bytes_per_param + kv_read + act

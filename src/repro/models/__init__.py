@@ -1,0 +1,3 @@
+from .registry import ModelAdapter, get_adapter, make_adapter
+
+__all__ = ["ModelAdapter", "get_adapter", "make_adapter"]

@@ -1,0 +1,452 @@
+"""Shared model layers: norms, rotary embeddings, attention, FFN.
+
+Pure functions over pytree parameters. Attention supports GQA (grouped KV
+heads), optional QKV bias (qwen2), per-head q/k RMSNorm (qwen3), sliding
+windows (h2o-danube), cross-attention (mllama/whisper), and single-token
+decode against a KV cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * w + b
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e6) -> jax.Array:
+    """x: (..., seq, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len: int, kv_len: int,
+                sliding_window: Optional[int] = None) -> jax.Array:
+    """(q_len, kv_len) boolean mask, True = attend. Supports SWA."""
+    q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+    kv_pos = jnp.arange(kv_len)[None, :]
+    m = kv_pos <= q_pos
+    if sliding_window is not None:
+        m &= kv_pos > q_pos - sliding_window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(b, h_kv, s, d) -> (b, h_kv*n_rep, s, d)."""
+    if n_rep == 1:
+        return x
+    b, h, s, d = x.shape
+    return jnp.broadcast_to(x[:, :, None], (b, h, n_rep, s, d)) \
+        .reshape(b, h * n_rep, s, d)
+
+
+def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: Optional[jax.Array]) -> jax.Array:
+    """q: (b, h, sq, d), k/v: (b, h, skv, d) -> (b, h, sq, d).
+
+    Softmax in fp32 for stability regardless of io dtype."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def gqa_project(params: dict, x: jax.Array, cfg) -> tuple:
+    """Project hidden states to q/k/v heads: returns (q, k, v) shaped
+    (b, h, s, hd) / (b, h_kv, s, hd)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    nH = params["wq"].shape[1] // hd
+    nKV = params["wk"].shape[1] // hd
+    q = q.reshape(b, s, nH, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, nKV, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, nKV, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+# Above this sequence length the full (s x s) fp32 logits of one layer
+# exceed any reasonable HBM budget; switch to the chunked online-softmax
+# evaluation (flash attention expressed in HLO: memory O(q_chunk*kv_chunk)
+# instead of O(s^2), numerics identical).
+CHUNKED_ATTN_THRESHOLD = 8192
+Q_CHUNK = 2048
+KV_CHUNK = 2048
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      sliding_window: Optional[int] = None,
+                      q_chunk: int = Q_CHUNK,
+                      kv_chunk: int = KV_CHUNK) -> jax.Array:
+    """Causal attention via online softmax over KV blocks, lax.map over
+    query blocks (sequential => peak memory one (q_chunk x kv_chunk) tile
+    per head). q/k/v: (b, h, s, d) -> (b, h, s, d). Exact."""
+    b, h, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    nq = -(-s // q_chunk)
+    nkv = -(-s // kv_chunk)
+    pad_q = nq * q_chunk - s
+    pad_kv = nkv * kv_chunk - s
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    kb = kp.reshape(b, h, nkv, kv_chunk, d)
+    vb = vp.reshape(b, h, nkv, kv_chunk, d)
+
+    def one_q_block(qi):
+        qblk = jax.lax.dynamic_slice_in_dim(qp, qi * q_chunk, q_chunk, 2)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m_prev, l_prev, acc = carry
+            kj, vj, kv_idx = inp
+            kv_pos = kv_idx * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bhqd,bhkd->bhqk", qblk, kj,
+                                preferred_element_type=jnp.float32) * scale
+            mask = kv_pos[None, :] <= q_pos[:, None]
+            if sliding_window is not None:
+                mask &= kv_pos[None, :] > q_pos[:, None] - sliding_window
+            mask &= (kv_pos < s)[None, :]
+            logits = jnp.where(mask, logits, NEG_INF_F32)
+            m_new = jnp.maximum(m_prev, logits.max(-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_prev * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] \
+                + jnp.einsum("bhqk,bhkd->bhqd", p.astype(vj.dtype), vj)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF_F32, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.transpose(2, 0, 1, 3, 4), vb.transpose(2, 0, 1, 3, 4),
+             jnp.arange(nkv)))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(one_q_block, jnp.arange(nq))   # (nq, b, h, qc, d)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(b, h, nq * q_chunk, d)
+    return out[:, :, :s]
+
+
+NEG_INF_F32 = -1e30
+
+
+def self_attention(params: dict, x: jax.Array, cfg,
+                   positions: jax.Array,
+                   mask: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence GQA self-attention (train / prefill path). Long
+    sequences use the chunked online-softmax path (same math, bounded
+    memory)."""
+    b, s, _ = x.shape
+    q, k, v = gqa_project(params, x, cfg)
+    q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    n_rep = q.shape[1] // k.shape[1]
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    if mask is None and s >= CHUNKED_ATTN_THRESHOLD:
+        out = chunked_attention(q, k, v, cfg.sliding_window)
+    else:
+        if mask is None:
+            mask = causal_mask(s, s, cfg.sliding_window)
+        out = attention_scores(q, k, v, mask)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ params["wo"]
+
+
+def cross_attention(params: dict, x: jax.Array, kv_input: jax.Array,
+                    cfg) -> jax.Array:
+    """Cross-attention: queries from `x`, keys/values from `kv_input`
+    (vision patches / encoder output). No RoPE, no causal mask. Long query
+    sequences (32K prefill) are evaluated in q-blocks — the unblocked
+    (s_q x s_kv) fp32 logits alone are ~6 GB/chip on whisper prefill_32k."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, s, -1, hd).transpose(0, 2, 1, 3)
+    skv = kv_input.shape[1]
+    k = (kv_input @ params["wk"]).reshape(b, skv, -1, hd).transpose(0, 2, 1, 3)
+    v = (kv_input @ params["wv"]).reshape(b, skv, -1, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    n_rep = q.shape[1] // k.shape[1]
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    if s >= CHUNKED_ATTN_THRESHOLD:
+        nq = s // Q_CHUNK if s % Q_CHUNK == 0 else -(-s // Q_CHUNK)
+        pad = nq * Q_CHUNK - s
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+        def one(qi):
+            blk = jax.lax.dynamic_slice_in_dim(qp, qi * Q_CHUNK, Q_CHUNK, 2)
+            return attention_scores(blk, k, v, None)
+
+        out = jax.lax.map(one, jnp.arange(nq))
+        out = out.transpose(1, 2, 0, 3, 4).reshape(b, q.shape[1],
+                                                   nq * Q_CHUNK, hd)
+        out = out[:, :, :s]
+    else:
+        out = attention_scores(q, k, v, None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Context-parallel cached attention (decode)
+# ---------------------------------------------------------------------------
+# The KV cache shards its *sequence* dim over the ``model`` axis
+# (cache_specs). Left to XLA's SPMD partitioner, the per-step cache append
+# (dynamic-update-slice at a dynamic slot) triggers the "involuntary full
+# rematerialization" path — the whole cache is replicated, converted to
+# f32, and re-partitioned every layer (measured: 26 GB -> 382 GB of HBM
+# traffic per step on qwen2-7b decode_32k). cached_attention_update instead
+# expresses the step with shard_map: each model-shard masks-writes its own
+# slice and computes a partial online softmax; shards combine with one
+# pmax/psum of (b, heads, hd)-sized tensors — the cache never moves.
+
+
+def _batch_axes_for(dim: int, mesh) -> tuple:
+    axes = []
+    prod = 1
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    for a in ("pod", "data"):
+        if a in sizes and dim % (prod * sizes[a]) == 0:
+            axes.append(a)
+            prod *= sizes[a]
+    return tuple(axes)
+
+
+def cached_attention_update(q: jax.Array, k_new: jax.Array,
+                            v_new: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, pos: jax.Array,
+                            slot: jax.Array) -> tuple:
+    """One decode step against a sequence-sharded cache.
+
+    q: (b, h, 1, hd); k_new/v_new: (b, h_kv, 1, hd);
+    caches: (b, h_kv, S, hd) sharded (batch, None, 'model', None).
+    Returns (out (b, h, 1, hd), new_k_cache, new_v_cache). Falls back to
+    the single-shard path when no 'model' axis is available or S does not
+    divide."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = None
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and "model" in (m.axis_names or ()):
+            mesh = m
+    except Exception:
+        mesh = None
+    b, hq, _, hd = q.shape
+    S = k_cache.shape[2]
+    if mesh is None or S % dict(zip(mesh.axis_names,
+                                    mesh.axis_sizes))["model"]:
+        return _cached_attention_local(q, k_new, v_new, k_cache, v_cache,
+                                       pos, slot, None)
+
+    bs = _batch_axes_for(b, mesh)
+    bspec = (bs if len(bs) > 1 else (bs[0] if bs else None))
+    cache_spec = P(bspec, None, "model", None)
+    qkv_spec = P(bspec, None, None, None)
+
+    def inner(q, k_new, v_new, kc, vc, pos, slot):
+        return _cached_attention_local(q, k_new, v_new, kc, vc, pos, slot,
+                                       "model")
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(qkv_spec, qkv_spec, qkv_spec, cache_spec, cache_spec,
+                  P(), P()),
+        out_specs=(qkv_spec, cache_spec, cache_spec),
+    )(q, k_new, v_new, k_cache, v_cache, pos, slot)
+
+
+def _cached_attention_local(q, k_new, v_new, kc, vc, pos, slot,
+                            axis: Optional[str]) -> tuple:
+    """Per-shard body: masked local append + partial online softmax.
+    Inside shard_map `axis` names the model axis; standalone it is None
+    (single shard, exact same math)."""
+    b, hq, _, hd = q.shape
+    hkv = kc.shape[1]
+    S_loc = kc.shape[2]
+    g = hq // hkv
+    if axis is not None:
+        shard = jax.lax.axis_index(axis)
+    else:
+        shard = 0
+    start = shard * S_loc
+    loc = slot - start
+    writable = (loc >= 0) & (loc < S_loc)
+    cl = jnp.clip(loc, 0, S_loc - 1)
+
+    def masked_write(cache, new):
+        old = jax.lax.dynamic_slice(cache, (0, 0, cl, 0),
+                                    (b, hkv, 1, hd))
+        upd = jnp.where(writable, new.astype(cache.dtype), old)
+        return jax.lax.dynamic_update_slice(cache, upd, (0, 0, cl, 0))
+
+    kc = masked_write(kc, k_new)
+    vc = masked_write(vc, v_new)
+
+    # NOTE on operand dtype (§Perf, hypothesis refuted on this meter):
+    # feeding the einsums bf16 operands with preferred_element_type=f32
+    # (the TPU-native MXU pattern) made XLA-CPU's copy-insertion clone the
+    # ENTIRE cache carry every layer (26 GB/chip/step on qwen2 decode) —
+    # worse than the f32 slice converts it saved. The astype path measures
+    # best on the CPU artifact; on real TPU revisit the bf16-operand form.
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        kc.astype(jnp.float32)) * scale     # (b,kv,g,S_loc)
+    valid = (start + jnp.arange(S_loc)) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF_F32)
+
+    m_loc = logits.max(-1)                                  # (b,kv,g)
+    if axis is not None:
+        m = jax.lax.pmax(m_loc, axis)
+    else:
+        m = m_loc
+    p = jnp.exp(logits - m[..., None])
+    l_loc = p.sum(-1)
+    acc_loc = jnp.einsum("bkgs,bksd->bkgd", p, vc.astype(jnp.float32))
+    if axis is not None:
+        l = jax.lax.psum(l_loc, axis)
+        acc = jax.lax.psum(acc_loc, axis)
+    else:
+        l, acc = l_loc, acc_loc
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out.reshape(b, hq, 1, hd), kc, vc
+
+
+def decode_attention(params: dict, x: jax.Array, cfg,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, slot: jax.Array | None = None) -> tuple:
+    """Single-token GQA decode. x: (b, 1, d); caches: (b, h_kv, S, hd).
+
+    `pos` is the true sequence position (drives RoPE and validity);
+    `slot` is the cache slot to write (defaults to `pos`; sliding-window
+    archs pass ``pos % window`` — the ring buffer *is* the window, so no
+    extra window masking is needed: evicted slots are overwritten).
+
+    Returns (out (b, 1, d), new_k_cache, new_v_cache). KV-cache updates are
+    row-aligned: one (slot, head) write per step, contiguous along hd — the
+    serving layer above groups slots into 4 KB DRAM rows (repro.serve).
+    """
+    b = x.shape[0]
+    if slot is None:
+        slot = pos
+    q, k, v = gqa_project(params, x, cfg)
+    posb = jnp.broadcast_to(pos, (b, 1, 1))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    out, k_cache, v_cache = cached_attention_update(
+        q, k, v, k_cache, v_cache, pos, slot)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return out @ params["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) \
+        @ params["w_down"]
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ params["w_up"] + params["b_up"]) \
+        @ params["w_down"] + params["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def attn_params(key, cfg, d_q_heads: int, d_kv_heads: int, dtype) -> dict:
+    """GQA projection params; head counts may be TP-padded upstream."""
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, d_q_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, d_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, d_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (d_q_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((d_q_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((d_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((d_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def ffn_params(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+    }

@@ -1,0 +1,254 @@
+"""Llama-3.2-Vision-90B backbone: dense GQA decoder with cross-attention
+layers interleaved every `cross_attn_every` layers (pattern unit =
+(cross_attn_every - 1) self layers + 1 cross layer).
+
+The vision frontend is a STUB per the brief: `input_specs()` provides
+precomputed patch embeddings (b, n_vision_tokens, d_model); the cross
+layers attend to them (keys/values computed once per request and cached for
+decode — as a production server would).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import (hint_residual, padded_heads,
+                                    padded_vocab, shard_hint)
+from .layers import (attn_params, cross_attention, decode_attention,
+                     dense_init, ffn_params, rmsnorm, self_attention, swiglu)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pattern(cfg):
+    k = cfg.cross_attn_every
+    n_units = cfg.n_layers // k
+    return k, n_units
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _self_block_init(key, cfg, nH, dt):
+    ka, kf = jax.random.split(key)
+    return {
+        "attn": attn_params(ka, cfg, nH, cfg.n_kv_heads, dt),
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "ffn": ffn_params(kf, cfg.d_model, cfg.d_ff, dt),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def _cross_block_init(key, cfg, nH, dt):
+    p = _self_block_init(key, cfg, nH, dt)
+    # mllama gates cross-attention contributions (zero-init tanh gates).
+    p["gate_attn"] = jnp.zeros((), jnp.float32)
+    p["gate_ffn"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def init(cfg, key, tp: int = 1) -> dict:
+    dt = _dtype(cfg)
+    nH = padded_heads(cfg.n_heads, tp)
+    V = padded_vocab(cfg.vocab)
+    k, n_units = _pattern(cfg)
+    k_embed, k_self, k_cross, k_head = jax.random.split(key, 4)
+    n_self = n_units * (k - 1)
+    self_blocks = jax.vmap(lambda kk: _self_block_init(kk, cfg, nH, dt))(
+        jax.random.split(k_self, n_self))
+    cross_blocks = jax.vmap(lambda kk: _cross_block_init(kk, cfg, nH, dt))(
+        jax.random.split(k_cross, n_units))
+    return {
+        "embed": dense_init(k_embed, (V, cfg.d_model), dt, scale=0.02),
+        "self_blocks": self_blocks,      # stacked (n_units*(k-1), ...)
+        "cross_blocks": cross_blocks,    # stacked (n_units, ...)
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(k_head, (cfg.d_model, V), dt),
+    }
+
+
+def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
+    hd = cfg.resolved_head_dim
+    kv_shardable = (cfg.n_kv_heads * hd) % tp == 0 and cfg.n_kv_heads >= tp
+    attn = {"wq": (fsdp, "model"),
+            "wk": (fsdp, "model" if kv_shardable else None),
+            "wv": (fsdp, "model" if kv_shardable else None),
+            "wo": ("model", fsdp)}
+    ffn = {"w_gate": (fsdp, "model"), "w_up": (fsdp, "model"),
+           "w_down": ("model", fsdp)}
+    base = {"attn": attn, "attn_norm": (None,), "ffn": ffn,
+            "ffn_norm": (None,)}
+    cross = base | {"gate_attn": (), "gate_ffn": ()}
+    stack = lambda blk: jax.tree.map(lambda s: (None,) + s, blk,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": ("model", fsdp),
+        "self_blocks": stack(base),
+        "cross_blocks": stack(cross),
+        "final_norm": (None,),
+        "lm_head": (fsdp, "model"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _self_fwd(cfg, h, bp, positions):
+    a = self_attention(bp["attn"], rmsnorm(h, bp["attn_norm"], cfg.norm_eps),
+                       cfg, positions)
+    h = h + shard_hint(a, ("pod", "data"), None, "model")
+    return hint_residual(
+        h + swiglu(bp["ffn"], rmsnorm(h, bp["ffn_norm"], cfg.norm_eps)))
+
+
+def _cross_fwd(cfg, h, bp, vision):
+    a = cross_attention(bp["attn"],
+                        rmsnorm(h, bp["attn_norm"], cfg.norm_eps), vision,
+                        cfg)
+    # Gates are fp32 scalars; cast the gate (not the activation) so the
+    # residual stream and its cotangents stay in the model dtype.
+    h = h + jnp.tanh(bp["gate_attn"]).astype(h.dtype) * a
+    f = swiglu(bp["ffn"], rmsnorm(h, bp["ffn_norm"], cfg.norm_eps))
+    return hint_residual(h + jnp.tanh(bp["gate_ffn"]).astype(h.dtype) * f)
+
+
+def forward(params, cfg, tokens, vision_embeds, remat: bool = False):
+    """tokens: (b, s); vision_embeds: (b, n_vis, d_model)."""
+    b, s = tokens.shape
+    k, n_units = _pattern(cfg)
+    h = params["embed"][tokens]
+    h = shard_hint(h, ("pod", "data"), None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    self_fwd = _self_fwd
+    cross_fwd = _cross_fwd
+    if remat:
+        self_fwd = jax.checkpoint(_self_fwd, static_argnums=(0,))
+        cross_fwd = jax.checkpoint(_cross_fwd, static_argnums=(0,))
+
+    self_stack = jax.tree.map(
+        lambda a: a.reshape((n_units, k - 1) + a.shape[1:]),
+        params["self_blocks"])
+
+    def unit(h, unit_params):
+        selfs, cross = unit_params
+
+        def inner(hh, bp):
+            return self_fwd(cfg, hh, bp, positions), None
+
+        h, _ = jax.lax.scan(inner, h, selfs)
+        return cross_fwd(cfg, h, cross, vision_embeds), None
+
+    h, _ = jax.lax.scan(unit, h, (self_stack, params["cross_blocks"]))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    return shard_hint(logits, ("pod", "data"), None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               tp: int = 1) -> dict:
+    k, n_units = _pattern(cfg)
+    hd = cfg.resolved_head_dim
+    n_self = n_units * (k - 1)
+    return {
+        "k": jnp.zeros((n_self, batch, cfg.n_kv_heads, max_seq, hd), dtype),
+        "v": jnp.zeros((n_self, batch, cfg.n_kv_heads, max_seq, hd), dtype),
+        # cross-attention KV: computed once from the vision embeddings
+        "xk": jnp.zeros((n_units, batch, cfg.n_kv_heads, cfg.n_vision_tokens,
+                         hd), dtype),
+        "xv": jnp.zeros((n_units, batch, cfg.n_kv_heads, cfg.n_vision_tokens,
+                         hd), dtype),
+    }
+
+
+def cache_specs(cfg) -> dict:
+    s = (None, ("pod", "data"), None, "model", None)
+    return {"k": s, "v": s, "xk": s, "xv": s}
+
+
+def precompute_cross_kv(params, cfg, vision_embeds):
+    """Fill the cross-attention KV cache once per request (prefill side)."""
+    hd = cfg.resolved_head_dim
+
+    def one(bp):
+        b, nv, _ = vision_embeds.shape
+        kk = (vision_embeds @ bp["attn"]["wk"]).reshape(b, nv, -1, hd)
+        vv = (vision_embeds @ bp["attn"]["wv"]).reshape(b, nv, -1, hd)
+        return kk.transpose(0, 2, 1, 3), vv.transpose(0, 2, 1, 3)
+
+    xk, xv = jax.vmap(one)(params["cross_blocks"])
+    return xk, xv
+
+
+def _cross_decode(cfg, h, bp, xk, xv):
+    """Single-token cross attention against precomputed vision KV."""
+    from .layers import attention_scores, repeat_kv
+    b = h.shape[0]
+    hd = cfg.resolved_head_dim
+    x = rmsnorm(h, bp["attn_norm"], cfg.norm_eps)
+    q = (x @ bp["attn"]["wq"]).reshape(b, 1, -1, hd).transpose(0, 2, 1, 3)
+    n_rep = q.shape[1] // xk.shape[1]
+    out = attention_scores(q, repeat_kv(xk, n_rep), repeat_kv(xv, n_rep),
+                           None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    a = out @ bp["attn"]["wo"]
+    h = h + jnp.tanh(bp["gate_attn"]).astype(h.dtype) * a
+    f = swiglu(bp["ffn"], rmsnorm(h, bp["ffn_norm"], cfg.norm_eps))
+    return h + jnp.tanh(bp["gate_ffn"]).astype(h.dtype) * f
+
+
+def decode_step(params, cfg, token, cache, pos):
+    """Layer loop = fori_loop carrying the full self-attention cache and
+    updating per-layer slices in place (see transformer.decode_step for
+    the measured rationale); the cross-attention KV is read-only."""
+    b = token.shape[0]
+    k, n_units = _pattern(cfg)
+    n_self = n_units * (k - 1)
+    h = params["embed"][token]
+
+    take = lambda t, i: jax.tree.map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False), t)
+
+    def self_layer(u, j, carry):
+        h, kc_all, vc_all = carry
+        i = u * (k - 1) + j
+        bp = take(params["self_blocks"], i)
+        kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, i, 0, keepdims=False)
+        x = rmsnorm(h, bp["attn_norm"], cfg.norm_eps)
+        a, kc, vc = decode_attention(bp["attn"], x, cfg, kc, vc, pos)
+        h = h + a
+        f = swiglu(bp["ffn"], rmsnorm(h, bp["ffn_norm"], cfg.norm_eps))
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, i, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, i, 0)
+        return h + f, kc_all, vc_all
+
+    def unit(u, carry):
+        h, kc_all, vc_all = carry
+        # static (0, k-1) bounds so XLA proves both loops' trip counts
+        # (u-dependent bounds defeat known_trip_count and the roofline's
+        # flop attribution).
+        h, kc_all, vc_all = jax.lax.fori_loop(
+            0, k - 1, lambda j, c: self_layer(u, j, c),
+            (h, kc_all, vc_all))
+        cross = take(params["cross_blocks"], u)
+        xk = jax.lax.dynamic_index_in_dim(cache["xk"], u, 0, keepdims=False)
+        xv = jax.lax.dynamic_index_in_dim(cache["xv"], u, 0, keepdims=False)
+        h = _cross_decode(cfg, h, cross, xk, xv)
+        return h, kc_all, vc_all
+
+    h, k_new, v_new = jax.lax.fori_loop(
+        0, n_units, unit, (h, cache["k"], cache["v"]))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    logits = shard_hint(logits, ("pod", "data"), None, "model")
+    return logits, {"k": k_new, "v": v_new,
+                    "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts FFN (granite-moe 40e top-8, phi3.5-moe 16e top-2).
+
+GShard/flaxformer-style capacity-based dispatch: tokens are processed in
+groups; within a group each token's top-k experts receive it up to a static
+per-expert capacity (overflow tokens are dropped — their combine weight is
+zero). Expert weights are stacked (E, d, ff) so the whole layer is three
+einsums + routing, which (a) scans cleanly over layers, (b) shards over the
+``model`` axis as expert parallelism when E % tp == 0, falling back to
+tensor parallelism inside each expert otherwise (granite: 40 experts on
+tp=16 -> ff sharding).
+
+RoMe note (paper Fig 13): expert streams are the LBR stress case — each
+selected expert's weights are one contiguous row-aligned extent, but only
+top-k of E extents are touched per token group. repro.trace reproduces
+that access pattern from this exact dispatch math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_hint
+from .layers import dense_init
+
+
+def moe_params(key, cfg, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, m.n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (m.n_experts, d, m.expert_d_ff), dtype),
+        "w_up": dense_init(ks[2], (m.n_experts, d, m.expert_d_ff), dtype),
+        "w_down": dense_init(ks[3], (m.n_experts, m.expert_d_ff, d), dtype),
+    }
+
+
+def moe_param_specs(cfg, fsdp, tp: int) -> dict:
+    m = cfg.moe
+    ep = (m.n_experts % tp == 0)
+    if ep:
+        return {
+            "router": (None, None),
+            "w_gate": ("model", fsdp, None),
+            "w_up": ("model", fsdp, None),
+            "w_down": ("model", None, fsdp),
+        }
+    return {
+        "router": (None, None),
+        "w_gate": (None, fsdp, "model"),
+        "w_up": (None, fsdp, "model"),
+        "w_down": (None, "model", fsdp),
+    }
+
+
+def pick_group_size(cfg, cap: int = 512) -> int:
+    """Routing-group length bounding dispatch overhead.
+
+    The GShard dispatch/combine einsums cost ~2*g^2*k*cf*d FLOPs per group
+    vs 6*g*k*d*ff useful expert FLOPs — ratio cf*g/(3*ff). Tiny-expert
+    archs (granite: ff=512) need small groups: pick the largest power of
+    two with ratio <= ~10 % (EXPERIMENTS.md §Perf, confirmed hypothesis)."""
+    m = cfg.moe
+    target = max(64, int(0.3 * m.expert_d_ff / m.capacity_factor))
+    g = 64
+    while g * 2 <= min(cap, target):
+        g *= 2
+    return g
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg, group_size: int | None = None,
+            impl: str = "einsum") -> jax.Array:
+    """x: (b, s, d) -> (b, s, d).
+
+    ``impl="einsum"`` (default) is the classic GShard one-hot dispatch:
+    two (t x E x C) einsums move tokens into/out of the expert buffers —
+    dense MXU work that partitions cleanly under SPMD.
+    ``impl="gather"`` computes identical routing with an (E, C) index
+    table and gathers. Measured (EXPERIMENTS.md §Perf): gather LOSES badly
+    under SPMD training — the data-dependent scatter lowers to
+    all-to-all/collective-permute storms (751 GB/chip on granite train) —
+    the same trade GShard made. Kept for single-device serving research.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    tokens = b * s
+    if group_size is None:
+        group_size = pick_group_size(cfg)
+    g = min(group_size, tokens)
+    # Groups must not straddle pods: a group spanning the pod axis forces
+    # the dispatch einsum to reduce over it and every pod then runs the
+    # GLOBAL expert GEMMs (measured: phi3.5 decode multi-pod, useful
+    # flops 0.10 -> 0.75 with the cap). Within a pod XLA partitions the
+    # group internally (measured fine on the 16x16 mesh), so only the
+    # `pod` axis caps g.
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes)) \
+            if mesh is not None and mesh.axis_names else {}
+    except Exception:
+        sizes = {}
+    pods = sizes.get("pod", 1)
+    if pods > 1 and tokens % pods == 0:
+        g = max(1, min(g, tokens // pods))
+    while tokens % g:
+        g -= 1
+    n_groups = tokens // g
+    xf = x.reshape(n_groups, g, d)
+
+    # Routing in fp32.
+    logits = xf.astype(jnp.float32) @ params["router"]          # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)          # (G, g, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # Floor at top_k so tiny (decode-sized) groups cannot structurally
+    # drop a token's every slot.
+    capacity = max(m.top_k,
+                   int(m.capacity_factor * g * m.top_k / m.n_experts))
+
+    def positions(gi):
+        """Position of each (token, slot) within its expert, counted
+        slot-major so slot-0 assignments win capacity first. (g, k)."""
+        oh = jax.nn.one_hot(gi, m.n_experts, dtype=jnp.float32)
+        oh_sm = jnp.transpose(oh, (1, 0, 2)).reshape(m.top_k * g,
+                                                     m.n_experts)
+        pos_sm = jnp.cumsum(oh_sm, axis=0) - oh_sm
+        pos = jnp.transpose(pos_sm.reshape(m.top_k, g, m.n_experts),
+                            (1, 0, 2))                           # (g, k, E)
+        return jnp.sum(pos * oh, -1).astype(jnp.int32), oh       # (g, k)
+
+    def route_einsum(xg, gv, gi):
+        pos_tok, oh = positions(gi)
+        keep = (pos_tok[..., None] < capacity) & (oh > 0)
+        pos_oh = jax.nn.one_hot(pos_tok, capacity, dtype=jnp.float32)
+        dispatch = jnp.einsum("tke,tkc->tec", oh * keep, pos_oh)
+        combine = jnp.einsum("tk,tke,tkc->tec", gv, oh * keep, pos_oh)
+        ein = jnp.einsum("tec,td->ecd", dispatch, xg.astype(jnp.float32))
+        ein = ein.astype(x.dtype)
+        ein = shard_hint(ein, "model", None, None)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ein, params["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", ein, params["w_up"])
+        out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+        return jnp.einsum("tec,ecd->td", combine.astype(x.dtype), out)
+
+    def route_gather(xg, gv, gi):
+        pos_tok, _ = positions(gi)                               # (g, k)
+        keep = pos_tok < capacity
+        # (E, C) table of source-token ids; dropped slots point at token 0
+        # with zero combine weight.
+        table = jnp.zeros((m.n_experts, capacity), jnp.int32)
+        tok_ids = jnp.broadcast_to(jnp.arange(g, dtype=jnp.int32)[:, None],
+                                   (g, m.top_k))
+        e_idx = jnp.where(keep, gi, m.n_experts)       # overflow -> dropped
+        c_idx = jnp.clip(pos_tok, 0, capacity - 1)
+        table = table.at[e_idx, c_idx].set(tok_ids, mode="drop")
+        filled = jnp.zeros((m.n_experts, capacity), jnp.bool_) \
+            .at[e_idx, c_idx].set(True, mode="drop")
+        ein = xg[table] * filled[..., None].astype(x.dtype)     # (E, C, d)
+        ein = shard_hint(ein, "model", None, None)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ein, params["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", ein, params["w_up"])
+        out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])   # (E, C, d)
+        # Pull each (token, slot)'s result back and weight it.
+        back = out[gi, c_idx]                                    # (g, k, d)
+        w = (gv * keep).astype(x.dtype)
+        return jnp.einsum("tk,tkd->td", w, back)
+
+    route = route_gather if impl == "gather" else route_einsum
+    y = jax.vmap(route)(xf, gate_vals, gate_idx)
+    return y.reshape(b, s, d)
+
+
+def aux_load_balance_loss(router_probs: jax.Array,
+                          gate_idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    oh = jax.nn.one_hot(gate_idx[..., 0], n_experts, dtype=jnp.float32)
+    f = jnp.mean(oh, axis=tuple(range(oh.ndim - 1)))
+    p = jnp.mean(router_probs, axis=tuple(range(router_probs.ndim - 1)))
+    return n_experts * jnp.sum(f * p)

@@ -1,0 +1,210 @@
+"""Arch registry: uniform adapter over the model families.
+
+Every architecture exposes the same surface:
+
+    adapter = get_adapter("qwen3-14b")
+    params  = adapter.init(key, tp=16)
+    logits  = adapter.forward(params, batch)            # train / prefill
+    loss    = adapter.loss(params, batch)
+    state   = adapter.init_decode_state(batch, max_seq)
+    logits, state = adapter.decode(params, batch, state, pos)
+
+`batch` is a dict: {"tokens": (b, s)} plus per-family extras
+("vision_embeds" for vlm, "frames" for audio). The launch layer builds
+ShapeDtypeStruct stand-ins from `input_structs()` for the dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..configs.registry_configs import ALL_ARCHS
+from ..distributed.sharding import padded_vocab
+from . import mllama, rwkv6, transformer, whisper, zamba2
+
+
+def _xent(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean next-token cross entropy; logits (b, s, Vp), labels (b, s)."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    lb = labels[:, 1:]
+    # Padded vocab entries never win: mask them out of the logsumexp.
+    # Elementwise where (NOT .at[...].set on a static slice): a tail-slice
+    # update is not aligned to the vocab sharding, so XLA would replicate
+    # the full fp32 logits on every chip (measured: 13.6 GB/chip on
+    # whisper train_4k).
+    Vp = lg.shape[-1]
+    if Vp > vocab:
+        pad = jnp.arange(Vp) >= vocab
+        lg = jnp.where(pad, -1e9, lg)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+@dataclass
+class ModelAdapter:
+    cfg: ArchConfig
+    _init: Callable
+    _forward: Callable            # (params, cfg, batch, remat) -> logits
+    _decode: Callable             # (params, cfg, batch, state, pos)
+    _init_state: Callable         # (cfg, batch, max_seq, dtype) -> state
+    _param_specs: Callable
+    _state_specs: Callable
+    extra_inputs: tuple = ()
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key, tp: int = 1):
+        return self._init(self.cfg, key, tp)
+
+    def param_specs(self, fsdp=None, tp: int = 16):
+        return self._param_specs(self.cfg, fsdp, tp)
+
+    # -- train / prefill --------------------------------------------------------
+
+    def forward(self, params, batch: dict, remat: bool = False):
+        return self._forward(params, self.cfg, batch, remat)
+
+    def loss(self, params, batch: dict, remat: bool = False):
+        logits = self.forward(params, batch, remat)
+        return _xent(logits, batch["labels"], self.cfg.vocab)
+
+    # -- decode -----------------------------------------------------------------
+
+    def init_decode_state(self, batch: int, max_seq: int,
+                          dtype=jnp.bfloat16, tp: int = 1):
+        return self._init_state(self.cfg, batch, max_seq, dtype, tp)
+
+    def decode(self, params, batch: dict, state, pos):
+        return self._decode(params, self.cfg, batch, state, pos)
+
+    def state_specs(self):
+        return self._state_specs(self.cfg)
+
+    # -- dry-run input structures ------------------------------------------------
+
+    def input_structs(self, seq_len: int, global_batch: int,
+                      kind: str) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        i32 = jnp.int32
+        out: dict[str, Any] = {}
+        if kind in ("train", "prefill"):
+            out["tokens"] = jax.ShapeDtypeStruct((global_batch, seq_len), i32)
+            if kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct(
+                    (global_batch, seq_len), i32)
+        else:  # decode: one new token against a seq_len cache
+            out["tokens"] = jax.ShapeDtypeStruct((global_batch, 1), i32)
+        if "vision_embeds" in self.extra_inputs:
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (global_batch, c.n_vision_tokens, c.d_model), dt)
+        if "frames" in self.extra_inputs:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (global_batch, c.n_audio_frames, c.d_model), dt)
+        return out
+
+    def supports(self, shape_kind: str, seq_len: int) -> tuple[bool, str]:
+        """(runnable, reason-if-not) for an assigned (shape, seq) cell."""
+        c = self.cfg
+        if seq_len > 100_000 and not c.supports_long_context:
+            return False, ("pure full-attention arch: 512K dense-attention "
+                           "KV exceeds any sane decode budget (DESIGN.md)")
+        return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Family wiring
+# ---------------------------------------------------------------------------
+
+def _tfm_forward(params, cfg, batch, remat):
+    return transformer.forward(params, cfg, batch["tokens"], remat)
+
+
+def _tfm_decode(params, cfg, batch, state, pos):
+    return transformer.decode_step(params, cfg, batch["tokens"], state, pos)
+
+
+def _rwkv_forward(params, cfg, batch, remat):
+    return rwkv6.forward(params, cfg, batch["tokens"], remat)
+
+
+def _rwkv_decode(params, cfg, batch, state, pos):
+    return rwkv6.decode_step(params, cfg, batch["tokens"], state, pos)
+
+
+def _rwkv_init_state(cfg, batch, max_seq, dtype, tp=1):
+    return rwkv6.init_state(cfg, batch)
+
+
+def _zamba_forward(params, cfg, batch, remat):
+    return zamba2.forward(params, cfg, batch["tokens"], remat)
+
+
+def _zamba_decode(params, cfg, batch, state, pos):
+    return zamba2.decode_step(params, cfg, batch["tokens"], state, pos)
+
+
+def _mllama_forward(params, cfg, batch, remat):
+    return mllama.forward(params, cfg, batch["tokens"],
+                          batch["vision_embeds"], remat)
+
+
+def _mllama_decode(params, cfg, batch, state, pos):
+    return mllama.decode_step(params, cfg, batch["tokens"], state, pos)
+
+
+def _whisper_forward(params, cfg, batch, remat):
+    return whisper.forward(params, cfg, batch["tokens"], batch["frames"],
+                           remat)
+
+
+def _whisper_decode(params, cfg, batch, state, pos):
+    return whisper.decode_step(params, cfg, batch["tokens"], state, pos)
+
+
+_FAMILY = {
+    "dense": dict(_init=transformer.init, _forward=_tfm_forward,
+                  _decode=_tfm_decode, _init_state=transformer.init_cache,
+                  _param_specs=transformer.param_specs,
+                  _state_specs=transformer.cache_specs),
+    "moe": dict(_init=transformer.init, _forward=_tfm_forward,
+                _decode=_tfm_decode, _init_state=transformer.init_cache,
+                _param_specs=transformer.param_specs,
+                _state_specs=transformer.cache_specs),
+    "ssm": dict(_init=rwkv6.init, _forward=_rwkv_forward,
+                _decode=_rwkv_decode, _init_state=_rwkv_init_state,
+                _param_specs=rwkv6.param_specs,
+                _state_specs=rwkv6.state_specs),
+    "hybrid": dict(_init=zamba2.init, _forward=_zamba_forward,
+                   _decode=_zamba_decode, _init_state=zamba2.init_state,
+                   _param_specs=zamba2.param_specs,
+                   _state_specs=zamba2.state_specs),
+    "vlm": dict(_init=mllama.init, _forward=_mllama_forward,
+                _decode=_mllama_decode, _init_state=mllama.init_cache,
+                _param_specs=mllama.param_specs,
+                _state_specs=mllama.cache_specs,
+                extra_inputs=("vision_embeds",)),
+    "audio": dict(_init=whisper.init, _forward=_whisper_forward,
+                  _decode=_whisper_decode, _init_state=whisper.init_cache,
+                  _param_specs=whisper.param_specs,
+                  _state_specs=whisper.cache_specs,
+                  extra_inputs=("frames",)),
+}
+
+
+def make_adapter(cfg: ArchConfig) -> ModelAdapter:
+    wiring = dict(_FAMILY[cfg.family])
+    extra = wiring.pop("extra_inputs", ())
+    return ModelAdapter(cfg=cfg, extra_inputs=extra, **wiring)
+
+
+def get_adapter(arch_id_or_cfg) -> ModelAdapter:
+    cfg = (arch_id_or_cfg if isinstance(arch_id_or_cfg, ArchConfig)
+           else ALL_ARCHS[arch_id_or_cfg])
+    return make_adapter(cfg)

@@ -1,0 +1,222 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay
+(arXiv:2404.05892). rwkv6-3b: 32L, d_model 2560, d_ff 8960, vocab 65536.
+
+Per layer: time-mix (multi-head linear attention with per-channel
+data-dependent decay w_t and bonus u) + channel-mix. The recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,   o_t = r_t (diag(u) k_t^T v_t + S_{t-1})
+
+is evaluated with lax.scan over time for train/prefill and as a single
+state update for decode (state is O(1) in sequence length — this arch runs
+the long_500k cell).
+
+RoMe note: RWKV6 decode traffic is ~100 % weight streaming (no KV cache) —
+the paper's best case; the trace layer models it as pure sequential reads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint_residual, padded_vocab, shard_hint
+from .layers import dense_init, rmsnorm
+
+LORA_RANK = 64
+HEAD_DIM = 64
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def n_heads(cfg) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(cfg, key, tp: int = 1) -> dict:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    V = padded_vocab(cfg.vocab)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    def block_init(k):
+        ks = jax.random.split(k, 10)
+        return {
+            # time mix
+            "mu": jnp.full((5, d), 0.5, dt),       # r,k,v,g,w shift mixes
+            "wr": dense_init(ks[0], (d, d), dt),
+            "wk": dense_init(ks[1], (d, d), dt),
+            "wv": dense_init(ks[2], (d, d), dt),
+            "wg": dense_init(ks[3], (d, d), dt),
+            "wo": dense_init(ks[4], (d, d), dt),
+            "w0": jnp.full((d,), -5.0, jnp.float32),      # base decay
+            "w_lora_a": dense_init(ks[5], (d, LORA_RANK), dt),
+            "w_lora_b": dense_init(ks[6], (LORA_RANK, d), dt, scale=0.01),
+            "u": jnp.zeros((n_heads(cfg), HEAD_DIM), jnp.float32),  # bonus
+            "ln_x": jnp.ones((d,), dt),            # per-head group norm
+            "tm_norm": jnp.ones((d,), dt),
+            # channel mix
+            "mu_c": jnp.full((2, d), 0.5, dt),
+            "ck": dense_init(ks[7], (d, cfg.d_ff), dt),
+            "cv": dense_init(ks[8], (cfg.d_ff, d), dt),
+            "cr": dense_init(ks[9], (d, d), dt),
+            "cm_norm": jnp.ones((d,), dt),
+        }
+
+    blocks = jax.vmap(block_init)(jax.random.split(k_blocks, cfg.n_layers))
+    return {
+        "embed": dense_init(k_embed, (V, d), dt, scale=0.02),
+        "blocks": blocks,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": dense_init(k_head, (d, V), dt),
+    }
+
+
+def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
+    block = {
+        "mu": (None, None), "wr": (fsdp, "model"), "wk": (fsdp, "model"),
+        "wv": (fsdp, "model"), "wg": (fsdp, "model"), "wo": ("model", fsdp),
+        "w0": (None,), "w_lora_a": (fsdp, None), "w_lora_b": (None, "model"),
+        "u": (None, None), "ln_x": (None,), "tm_norm": (None,),
+        "mu_c": (None, None), "ck": (fsdp, "model"), "cv": ("model", fsdp),
+        "cr": (fsdp, None), "cm_norm": (None,),
+    }
+    return {
+        "embed": ("model", fsdp),
+        "blocks": jax.tree.map(lambda s: (None,) + s, block,
+                               is_leaf=lambda x: isinstance(x, tuple)),
+        "final_norm": (None,),
+        "lm_head": (fsdp, "model"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core mixing
+# ---------------------------------------------------------------------------
+
+def _decay(bp, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0, 1): w = exp(-exp(w0 + lora))."""
+    lora = jnp.tanh(xw @ bp["w_lora_a"]) @ bp["w_lora_b"]
+    return jnp.exp(-jnp.exp(bp["w0"] + lora.astype(jnp.float32)))
+
+
+def _time_mix_step(bp, cfg, x, x_prev, S):
+    """One token of time mixing. x: (b, d); S: (b, H, hd, hd)."""
+    H, hd = n_heads(cfg), HEAD_DIM
+    b = x.shape[0]
+    mix = x[:, None, :] + (x_prev - x)[:, None, :] * bp["mu"]     # (b, 5, d)
+    xr, xk, xv, xg, xw = [mix[:, i] for i in range(5)]
+    r = (xr @ bp["wr"]).reshape(b, H, hd).astype(jnp.float32)
+    k = (xk @ bp["wk"]).reshape(b, H, hd).astype(jnp.float32)
+    v = (xv @ bp["wv"]).reshape(b, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ bp["wg"])
+    w = _decay(bp, xw).reshape(b, H, hd)                          # (b,H,hd)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)                        # rank-1
+    o = jnp.einsum("bhk,bhkv->bhv", r, S + bp["u"][None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    o = o.reshape(b, H * hd)
+    # per-head group norm
+    o = o.reshape(b, H, hd)
+    o = (o - o.mean(-1, keepdims=True)) \
+        * jax.lax.rsqrt(o.var(-1, keepdims=True) + 64e-5)
+    o = o.reshape(b, H * hd).astype(x.dtype) * bp["ln_x"]
+    return (o * g) @ bp["wo"], S
+
+
+def _channel_mix_step(bp, x, x_prev):
+    mix = x[:, None, :] + (x_prev - x)[:, None, :] * bp["mu_c"]
+    xk, xr = mix[:, 0], mix[:, 1]
+    k = jnp.square(jax.nn.relu(xk @ bp["ck"]))
+    return (k @ bp["cv"]) * jax.nn.sigmoid(xr @ bp["cr"])
+
+
+def _layer_seq(bp, cfg, h):
+    """Full-sequence layer via scan over time. h: (b, s, d)."""
+    b, s, d = h.shape
+    S0 = jnp.zeros((b, n_heads(cfg), HEAD_DIM, HEAD_DIM), jnp.float32)
+
+    def tm(carry, x):
+        x_prev, S = carry
+        xn = x  # already normed
+        o, S = _time_mix_step(bp, cfg, xn, x_prev, S)
+        return (xn, S), o
+
+    hn = rmsnorm(h, bp["tm_norm"], cfg.norm_eps)
+    (_, _), o = jax.lax.scan(tm, (jnp.zeros((b, d), h.dtype), S0),
+                             hn.transpose(1, 0, 2))
+    h = h + o.transpose(1, 0, 2)
+
+    hn = rmsnorm(h, bp["cm_norm"], cfg.norm_eps)
+
+    def cm(x_prev, x):
+        return x, _channel_mix_step(bp, x, x_prev)
+
+    _, oc = jax.lax.scan(cm, jnp.zeros((b, d), h.dtype),
+                         hn.transpose(1, 0, 2))
+    return hint_residual(h + oc.transpose(1, 0, 2))
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, tokens, remat: bool = False):
+    h = params["embed"][tokens]
+    h = shard_hint(h, ("pod", "data"), None, None)
+    layer = _layer_seq
+    if remat:
+        layer = jax.checkpoint(_layer_seq, static_argnums=(1,))
+
+    def scan_fn(h, bp):
+        return layer(bp, cfg, h), None
+
+    h, _ = jax.lax.scan(scan_fn, h, params["blocks"])
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    return shard_hint(logits, ("pod", "data"), None, "model")
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    """Recurrent decode state (per layer): previous token activations and
+    the (H, hd, hd) linear-attention state — O(1) in sequence length."""
+    d, L = cfg.d_model, cfg.n_layers
+    return {
+        "x_tm": jnp.zeros((L, batch, d), jnp.dtype(cfg.dtype)),
+        "x_cm": jnp.zeros((L, batch, d), jnp.dtype(cfg.dtype)),
+        "S": jnp.zeros((L, batch, n_heads(cfg), HEAD_DIM, HEAD_DIM),
+                       jnp.float32),
+    }
+
+
+def state_specs(cfg) -> dict:
+    return {
+        "x_tm": (None, ("pod", "data"), None),
+        "x_cm": (None, ("pod", "data"), None),
+        "S": (None, ("pod", "data"), "model", None, None),
+    }
+
+
+def decode_step(params, cfg, token, state, pos=None):
+    """token: (b, 1). Returns (logits (b, 1, V), new_state)."""
+    h = params["embed"][token][:, 0]      # (b, d)
+
+    def scan_fn(h, layer):
+        bp, x_tm, x_cm, S = layer
+        hn = rmsnorm(h, bp["tm_norm"], cfg.norm_eps)
+        o, S = _time_mix_step(bp, cfg, hn, x_tm, S)
+        h = h + o
+        hn2 = rmsnorm(h, bp["cm_norm"], cfg.norm_eps)
+        oc = _channel_mix_step(bp, hn2, x_cm)
+        return h + oc, (hn, hn2, S)
+
+    h, (x_tm, x_cm, S) = jax.lax.scan(
+        scan_fn, h, (params["blocks"], state["x_tm"], state["x_cm"],
+                     state["S"]))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["lm_head"])[:, None, :]
+    logits = shard_hint(logits, ("pod", "data"), None, "model")
+    return logits, {"x_tm": x_tm, "x_cm": x_cm, "S": S}

@@ -1,0 +1,196 @@
+"""Dense / MoE decoder-only transformer LM (qwen2, minitron, h2o-danube,
+qwen3, granite-moe, phi3.5-moe).
+
+Scan-over-layers with stacked per-layer parameters keeps the HLO one block
+deep regardless of depth (critical for 100-layer dry-run compiles).
+Supports full-sequence forward (train/prefill) and single-token decode
+against a KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import (hint_residual, padded_heads,
+                                    padded_vocab, shard_hint)
+from . import moe as moe_lib
+from .layers import (attn_params, decode_attention, dense_init, ffn_params,
+                     rmsnorm, self_attention, swiglu)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(cfg, key, tp: int = 1) -> dict:
+    dt = _dtype(cfg)
+    nH = padded_heads(cfg.n_heads, tp)
+    V = padded_vocab(cfg.vocab)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    def block_init(k):
+        ka, kf = jax.random.split(k)
+        p = {
+            "attn": attn_params(ka, cfg, nH, cfg.n_kv_heads, dt),
+            "attn_norm": jnp.ones((cfg.d_model,), dt),
+            "ffn_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if cfg.moe:
+            p["moe"] = moe_lib.moe_params(kf, cfg, dt)
+        else:
+            p["ffn"] = ffn_params(kf, cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    blocks = jax.vmap(block_init)(jax.random.split(k_blocks, cfg.n_layers))
+    params = {
+        "embed": dense_init(k_embed, (V, cfg.d_model), dt, scale=0.02),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, V), dt)
+    return params
+
+
+def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
+    """PartitionSpec tuples mirroring init()'s structure. `fsdp` is the mesh
+    axis name for ZeRO-3 parameter sharding (None to replicate over data)."""
+    hd = cfg.resolved_head_dim
+    kv_shardable = (cfg.n_kv_heads * hd) % tp == 0 and cfg.n_kv_heads >= tp
+    attn = {
+        "wq": (fsdp, "model"),
+        "wk": (fsdp, "model" if kv_shardable else None),
+        "wv": (fsdp, "model" if kv_shardable else None),
+        "wo": ("model", fsdp),
+    }
+    if cfg.qkv_bias:
+        attn |= {"bq": ("model",),
+                 "bk": ("model" if kv_shardable else None,),
+                 "bv": ("model" if kv_shardable else None,)}
+    if cfg.qk_norm:
+        attn |= {"q_norm": (None,), "k_norm": (None,)}
+    block = {"attn": attn, "attn_norm": (None,), "ffn_norm": (None,)}
+    if cfg.moe:
+        block["moe"] = moe_lib.moe_param_specs(cfg, fsdp, tp)
+    else:
+        block["ffn"] = {"w_gate": (fsdp, "model"), "w_up": (fsdp, "model"),
+                        "w_down": ("model", fsdp)}
+    specs = {
+        "embed": ("model", fsdp),
+        "blocks": jax.tree.map(lambda s: (None,) + s, block,
+                               is_leaf=lambda x: isinstance(x, tuple)),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = (fsdp, "model")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_forward(cfg, h, bp, positions):
+    a = self_attention(bp["attn"], rmsnorm(h, bp["attn_norm"], cfg.norm_eps),
+                       cfg, positions)
+    a = shard_hint(a, ("pod", "data"), None, "model")
+    h = h + a
+    x = rmsnorm(h, bp["ffn_norm"], cfg.norm_eps)
+    if cfg.moe:
+        f = moe_lib.moe_ffn(bp["moe"], x, cfg)
+    else:
+        f = swiglu(bp["ffn"], x)
+    return hint_residual(h + f)
+
+
+def forward(params: dict, cfg, tokens: jax.Array,
+            remat: bool = False) -> jax.Array:
+    """tokens: (b, s) int32 -> logits (b, s, vocab_padded)."""
+    b, s = tokens.shape
+    h = params["embed"][tokens]
+    h = shard_hint(h, ("pod", "data"), None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    step = partial(_block_forward, cfg)
+    if remat:
+        step = jax.checkpoint(step, static_argnums=())
+
+    def scan_fn(h, bp):
+        return step(h, bp, positions), None
+
+    h, _ = jax.lax.scan(scan_fn, h, params["blocks"])
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    return shard_hint(logits, ("pod", "data"), None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               tp: int = 1) -> dict:
+    hd = cfg.resolved_head_dim
+    S = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, S, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg) -> dict:
+    """KV cache shards sequence over `model` (context-parallel decode —
+    partial-softmax reductions become XLA all-reduces) and batch over the DP
+    axes."""
+    s = (None, ("pod", "data"), None, "model", None)
+    return {"k": s, "v": s}
+
+
+def decode_step(params: dict, cfg, token: jax.Array, cache: dict,
+                pos: jax.Array) -> tuple:
+    """token: (b, 1) int32; pos: scalar int32. Returns (logits, new_cache).
+
+    The layer loop is a fori_loop carrying the FULL stacked KV cache and
+    updating each layer's slice in place — NOT a scan with the cache as
+    xs/ys. Scanning the cache double-buffers it (xs read + ys stack) and,
+    through the ys dynamic-update-slice, rewrites the whole stack every
+    iteration in the lowered program (measured on qwen2-7b decode_32k:
+    EXPERIMENTS.md §Perf); the fori_loop carry aliases in place and the
+    per-layer traffic is one slice read + one slot write.
+
+    With a sliding window the cache is a ring buffer of window size."""
+    b = token.shape[0]
+    h = params["embed"][token]
+    L = cache["k"].shape[0]
+    S = cache["k"].shape[3]
+    slot = jnp.mod(pos, S) if cfg.sliding_window else pos
+
+    def body(i, carry):
+        h, kc_all, vc_all = carry
+        bp = jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+            params["blocks"])
+        kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, i, 0, keepdims=False)
+        x = rmsnorm(h, bp["attn_norm"], cfg.norm_eps)
+        a, kc, vc = decode_attention(bp["attn"], x, cfg, kc, vc, pos, slot)
+        h = h + a
+        x = rmsnorm(h, bp["ffn_norm"], cfg.norm_eps)
+        f = moe_lib.moe_ffn(bp["moe"], x, cfg) if cfg.moe \
+            else swiglu(bp["ffn"], x)
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, i, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, i, 0)
+        return h + f, kc_all, vc_all
+
+    h, k_new, v_new = jax.lax.fori_loop(
+        0, L, body, (h, cache["k"], cache["v"]))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    logits = shard_hint(logits, ("pod", "data"), None, "model")
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,295 @@
+"""Whisper-small backbone: encoder-decoder transformer (arXiv:2212.04356).
+12 encoder + 12 decoder layers, d_model 768, 12 heads, d_ff 3072,
+vocab 51865 (padded to 51968).
+
+The conv frontend is a STUB per the brief: `input_specs()` provides
+precomputed frame embeddings (b, n_audio_frames, d_model). Positional
+information uses sinusoidal embeddings on both sides (the original uses
+learned embeddings on the decoder; sinusoids remove the fixed-length table
+so the assigned decode_32k cell lowers cleanly — adaptation noted in
+DESIGN.md). Pre-LN with biased projections and GELU MLPs, faithful to the
+original block structure. Decoder output head ties the token embedding.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import (hint_residual, padded_heads,
+                                    padded_vocab, shard_hint)
+from .layers import (CHUNKED_ATTN_THRESHOLD, attention_scores,
+                     chunked_attention, dense_init, layernorm, repeat_kv)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def sinusoid_pos(positions: jax.Array, d: int) -> jax.Array:
+    """(..., s) int32 -> (..., s, d) float32 sinusoidal embeddings."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg, nH, dt):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, nH * hd), dt),
+        "bq": jnp.zeros((nH * hd,), dt),
+        "wk": dense_init(ks[1], (d, nH * hd), dt),
+        "wv": dense_init(ks[2], (d, nH * hd), dt),
+        "bv": jnp.zeros((nH * hd,), dt),
+        "wo": dense_init(ks[3], (nH * hd, d), dt),
+        "bo": jnp.zeros((d,), dt),
+    }
+
+
+def _mlp_init(key, cfg, dt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, (cfg.d_model, cfg.d_ff), dt),
+        "b_up": jnp.zeros((cfg.d_ff,), dt),
+        "w_down": dense_init(k2, (cfg.d_ff, cfg.d_model), dt),
+        "b_down": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def _ln_init(cfg, dt):
+    return {"w": jnp.ones((cfg.d_model,), dt),
+            "b": jnp.zeros((cfg.d_model,), dt)}
+
+
+def init(cfg, key, tp: int = 1) -> dict:
+    dt = _dtype(cfg)
+    nH = padded_heads(cfg.n_heads, tp)
+    V = padded_vocab(cfg.vocab)
+    keys = jax.random.split(key, 4)
+
+    def enc_block(k):
+        ka, km = jax.random.split(k)
+        return {"attn": _attn_init(ka, cfg, nH, dt),
+                "ln_attn": _ln_init(cfg, dt),
+                "mlp": _mlp_init(km, cfg, dt),
+                "ln_mlp": _ln_init(cfg, dt)}
+
+    def dec_block(k):
+        ka, kx, km = jax.random.split(k, 3)
+        return {"attn": _attn_init(ka, cfg, nH, dt),
+                "ln_attn": _ln_init(cfg, dt),
+                "xattn": _attn_init(kx, cfg, nH, dt),
+                "ln_xattn": _ln_init(cfg, dt),
+                "mlp": _mlp_init(km, cfg, dt),
+                "ln_mlp": _ln_init(cfg, dt)}
+
+    return {
+        "embed": dense_init(keys[0], (V, cfg.d_model), dt, scale=0.02),
+        "encoder": jax.vmap(enc_block)(
+            jax.random.split(keys[1], cfg.encoder_layers)),
+        "decoder": jax.vmap(dec_block)(
+            jax.random.split(keys[2], cfg.n_layers)),
+        "ln_enc": _ln_init(cfg, dt),
+        "ln_dec": _ln_init(cfg, dt),
+    }
+
+
+def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
+    attn = {"wq": (fsdp, "model"), "bq": ("model",), "wk": (fsdp, "model"),
+            "wv": (fsdp, "model"), "bv": ("model",), "wo": ("model", fsdp),
+            "bo": (None,)}
+    mlp = {"w_up": (fsdp, "model"), "b_up": ("model",),
+           "w_down": ("model", fsdp), "b_down": (None,)}
+    ln = {"w": (None,), "b": (None,)}
+    enc = {"attn": attn, "ln_attn": ln, "mlp": mlp, "ln_mlp": ln}
+    dec = enc | {"xattn": attn, "ln_xattn": ln}
+    stack = lambda blk: jax.tree.map(lambda s: (None,) + s, blk,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return {"embed": ("model", fsdp), "encoder": stack(enc),
+            "decoder": stack(dec), "ln_enc": ln, "ln_dec": ln}
+
+
+# ---------------------------------------------------------------------------
+# Attention helpers (biased projections, whisper-style)
+# ---------------------------------------------------------------------------
+
+def _heads(cfg, x, w, b=None):
+    bsz, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y.reshape(bsz, s, -1, hd).transpose(0, 2, 1, 3)
+
+
+def _attn(params, cfg, x, kv, mask, causal: bool = False):
+    q = _heads(cfg, x, params["wq"], params["bq"])
+    k = _heads(cfg, kv, params["wk"])
+    v = _heads(cfg, kv, params["wv"], params["bv"])
+    # Long causal self-attention takes the chunked online-softmax path —
+    # the dense (s x s) fp32 logits alone are 8.6 GB/chip at 32K
+    # (whisper prefill_32k buffer census, EXPERIMENTS.md).
+    if causal and x.shape[1] >= CHUNKED_ATTN_THRESHOLD:
+        out = chunked_attention(q, k, v)
+    else:
+        out = attention_scores(q, k, v, mask)
+    b, h, s, hd = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return out @ params["wo"] + params["bo"]
+
+
+def _mlp(params, x):
+    return jax.nn.gelu(x @ params["w_up"] + params["b_up"]) \
+        @ params["w_down"] + params["b_down"]
+
+
+def _ln(p, x, eps=1e-5):
+    return layernorm(x, p["w"], p["b"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder
+# ---------------------------------------------------------------------------
+
+def _enc_block(cfg, h, bp):
+    h = h + _attn(bp["attn"], cfg, _ln(bp["ln_attn"], h),
+                  _ln(bp["ln_attn"], h), None)
+    h = h + _mlp(bp["mlp"], _ln(bp["ln_mlp"], h))
+    return hint_residual(h)
+
+
+def encode(params, cfg, frames, remat: bool = False):
+    """frames: (b, n_frames, d_model) stub embeddings -> encoder output."""
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = frames + sinusoid_pos(pos, cfg.d_model).astype(frames.dtype)
+    h = shard_hint(h, ("pod", "data"), None, None)
+
+    block = _enc_block
+    if remat:
+        block = jax.checkpoint(_enc_block, static_argnums=(0,))
+
+    def blk(h, bp):
+        return block(cfg, h, bp), None
+
+    h, _ = jax.lax.scan(blk, h, params["encoder"])
+    return _ln(params["ln_enc"], h)
+
+
+def _dec_block(cfg, h, bp, enc, mask):
+    x = _ln(bp["ln_attn"], h)
+    h = h + _attn(bp["attn"], cfg, x, x, mask, causal=True)
+    h = h + _attn(bp["xattn"], cfg, _ln(bp["ln_xattn"], h), enc, None)
+    h = h + _mlp(bp["mlp"], _ln(bp["ln_mlp"], h))
+    return hint_residual(h)
+
+
+def forward(params, cfg, tokens, frames, remat: bool = False):
+    """Teacher-forced training forward: (b, s) tokens + frames -> logits."""
+    enc = encode(params, cfg, frames, remat)
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = params["embed"][tokens] + sinusoid_pos(pos, cfg.d_model) \
+        .astype(_dtype(cfg))
+    from .layers import causal_mask
+    mask = causal_mask(s, s)
+
+    block = _dec_block
+    if remat:
+        block = jax.checkpoint(_dec_block, static_argnums=(0,))
+
+    def blk(h, bp):
+        return block(cfg, h, bp, enc, mask), None
+
+    h, _ = jax.lax.scan(blk, h, params["decoder"])
+    h = _ln(params["ln_dec"], h)
+    logits = h @ params["embed"].T
+    return shard_hint(logits, ("pod", "data"), None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               tp: int = 1) -> dict:
+    hd = cfg.resolved_head_dim
+    # MHA: the KV heads are the (TP-padded) query heads.
+    nH = padded_heads(cfg.n_heads, tp)
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, nH, max_seq, hd), dtype),
+        "v": jnp.zeros((L, batch, nH, max_seq, hd), dtype),
+        # cross KV precomputed from encoder output
+        "xk": jnp.zeros((L, batch, nH, cfg.n_audio_frames, hd), dtype),
+        "xv": jnp.zeros((L, batch, nH, cfg.n_audio_frames, hd), dtype),
+    }
+
+
+def cache_specs(cfg) -> dict:
+    s = (None, ("pod", "data"), None, "model", None)
+    return {"k": s, "v": s, "xk": s, "xv": s}
+
+
+def precompute_cross_kv(params, cfg, enc_out):
+    def one(bp):
+        k = _heads(cfg, enc_out, bp["xattn"]["wk"])
+        v = _heads(cfg, enc_out, bp["xattn"]["wv"], bp["xattn"]["bv"])
+        return k, v
+
+    return jax.vmap(one)(params["decoder"])
+
+
+def decode_step(params, cfg, token, cache, pos):
+    """fori_loop with in-place per-layer cache updates and the
+    context-parallel cached-attention primitive (see
+    transformer.decode_step / EXPERIMENTS.md §Perf A.1-A.2)."""
+    from .layers import cached_attention_update
+    b = token.shape[0]
+    posb = jnp.broadcast_to(pos, (b, 1))
+    h = params["embed"][token] + sinusoid_pos(posb, cfg.d_model) \
+        .astype(_dtype(cfg))
+    L = cache["k"].shape[0]
+
+    def blk(i, carry):
+        h, kc_all, vc_all = carry
+        bp = jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+            params["decoder"])
+        kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, i, 0, keepdims=False)
+        xk = jax.lax.dynamic_index_in_dim(cache["xk"], i, 0, keepdims=False)
+        xv = jax.lax.dynamic_index_in_dim(cache["xv"], i, 0, keepdims=False)
+        x = _ln(bp["ln_attn"], h)
+        q = _heads(cfg, x, bp["attn"]["wq"], bp["attn"]["bq"])
+        k = _heads(cfg, x, bp["attn"]["wk"])
+        v = _heads(cfg, x, bp["attn"]["wv"], bp["attn"]["bv"])
+        out, kc, vc = cached_attention_update(q, k, v, kc, vc, pos, pos)
+        out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+        h = h + (out @ bp["attn"]["wo"] + bp["attn"]["bo"])
+        # cross attention against precomputed encoder KV
+        xq = _heads(cfg, _ln(bp["ln_xattn"], h), bp["xattn"]["wq"],
+                    bp["xattn"]["bq"])
+        xout = attention_scores(xq, xk, xv, None)
+        xout = xout.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+        h = h + (xout @ bp["xattn"]["wo"] + bp["xattn"]["bo"])
+        h = h + _mlp(bp["mlp"], _ln(bp["ln_mlp"], h))
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, i, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, i, 0)
+        return h, kc_all, vc_all
+
+    h, k_new, v_new = jax.lax.fori_loop(0, L, blk,
+                                        (h, cache["k"], cache["v"]))
+    h = _ln(params["ln_dec"], h)
+    logits = h @ params["embed"].T
+    logits = shard_hint(logits, ("pod", "data"), None, "model")
+    return logits, {"k": k_new, "v": v_new, "xk": cache["xk"],
+                    "xv": cache["xv"]}

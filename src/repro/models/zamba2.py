@@ -1,0 +1,336 @@
+"""Zamba2 — Mamba2 (SSD) backbone with one *shared* attention block applied
+periodically (arXiv:2411.15242). zamba2-1.2b: 38 Mamba2 layers, d_model 2048,
+ssm_state 64, one shared GQA(32h/kv32) + FFN(8192) block every
+`shared_attn_every` layers (shared parameters across all its invocations —
+the Zamba trick).
+
+The SSD recurrence per head h with scalar decay a_t:
+    H_t = a_t * H_{t-1} + dt_t * (B_t outer x_t),  y_t = C_t . H_t + D * x_t
+is evaluated by lax.scan over time for train/prefill and as a single state
+update for decode (O(1) state; this arch runs the long_500k cell — the
+shared attention uses a sliding window there, an adaptation recorded in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMConfig
+from ..distributed.sharding import (hint_residual, padded_heads,
+                                    padded_vocab, shard_hint)
+from .layers import (attn_params, decode_attention, dense_init, ffn_params,
+                     rmsnorm, self_attention, swiglu)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _ssm(cfg) -> SSMConfig:
+    return cfg.ssm or SSMConfig()
+
+
+def inner_dim(cfg) -> int:
+    return _ssm(cfg).expand * cfg.d_model
+
+
+def ssm_heads(cfg) -> int:
+    return inner_dim(cfg) // _ssm(cfg).head_dim
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(cfg, key, tp: int = 1) -> dict:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    s = _ssm(cfg)
+    din = inner_dim(cfg)
+    nh = ssm_heads(cfg)
+    V = padded_vocab(cfg.vocab)
+    k_embed, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+
+    def mamba_init(k):
+        ks = jax.random.split(k, 3)
+        return {
+            "in_proj": dense_init(ks[0],
+                                  (d, 2 * din + 2 * s.state_dim + nh), dt),
+            "conv_w": dense_init(ks[1],
+                                 (s.conv_width, din + 2 * s.state_dim), dt,
+                                 scale=0.5),
+            "A_log": jnp.zeros((nh,), jnp.float32),
+            "D": jnp.ones((nh,), jnp.float32),
+            "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+            "out_proj": dense_init(ks[2], (din, d), dt),
+            "norm": jnp.ones((d,), dt),
+            "gate_norm": jnp.ones((din,), dt),
+        }
+
+    blocks = jax.vmap(mamba_init)(jax.random.split(k_blocks, cfg.n_layers))
+    nH = padded_heads(cfg.n_heads, tp)
+    ka, kf = jax.random.split(k_shared)
+    shared = {
+        "attn": attn_params(ka, cfg, nH, cfg.n_kv_heads, dt),
+        "attn_norm": jnp.ones((d,), dt),
+        "ffn": ffn_params(kf, d, cfg.d_ff, dt),
+        "ffn_norm": jnp.ones((d,), dt),
+    }
+    return {
+        "embed": dense_init(k_embed, (V, d), dt, scale=0.02),
+        "blocks": blocks,
+        "shared": shared,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": dense_init(k_head, (d, V), dt),
+    }
+
+
+def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
+    mamba = {
+        "in_proj": (fsdp, "model"), "conv_w": (None, "model"),
+        "A_log": (None,), "D": (None,), "dt_bias": (None,),
+        "out_proj": ("model", fsdp), "norm": (None,), "gate_norm": (None,),
+    }
+    hd = cfg.resolved_head_dim
+    kv_shardable = (cfg.n_kv_heads * hd) % tp == 0 and cfg.n_kv_heads >= tp
+    shared = {
+        "attn": {"wq": (fsdp, "model"),
+                 "wk": (fsdp, "model" if kv_shardable else None),
+                 "wv": (fsdp, "model" if kv_shardable else None),
+                 "wo": ("model", fsdp)},
+        "attn_norm": (None,),
+        "ffn": {"w_gate": (fsdp, "model"), "w_up": (fsdp, "model"),
+                "w_down": ("model", fsdp)},
+        "ffn_norm": (None,),
+    }
+    return {
+        "embed": ("model", fsdp),
+        "blocks": jax.tree.map(lambda sp: (None,) + sp, mamba,
+                               is_leaf=lambda x: isinstance(x, tuple)),
+        "shared": shared,
+        "final_norm": (None,),
+        "lm_head": (fsdp, "model"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 core
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg, proj):
+    s = _ssm(cfg)
+    din = inner_dim(cfg)
+    nh = ssm_heads(cfg)
+    z, x, B, C, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + s.state_dim,
+               2 * din + 2 * s.state_dim], axis=-1)
+    return z, x, B, C, dt
+
+
+def _ssd_scan(bp, cfg, xc: jax.Array, Bc: jax.Array, Cc: jax.Array,
+              dt_raw: jax.Array, H0: jax.Array):
+    """Sequential SSD over time. xc: (b,s,din); Bc/Cc: (b,s,N);
+    dt_raw: (b,s,nh). Returns y (b,s,din), final state (b,nh,hd,N)."""
+    s_cfg = _ssm(cfg)
+    nh, hd, N = ssm_heads(cfg), s_cfg.head_dim, s_cfg.state_dim
+    b = xc.shape[0]
+    A = -jnp.exp(bp["A_log"])                                   # (nh,) < 0
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["dt_bias"])
+
+    def step(Hs, inp):
+        x_t, B_t, C_t, dt_t = inp                    # (b,din),(b,N),(b,N),(b,nh)
+        xh = x_t.reshape(b, nh, hd).astype(jnp.float32)
+        a = jnp.exp(dt_t * A)                                   # (b,nh)
+        dBx = jnp.einsum("bn,bhp->bhpn", B_t.astype(jnp.float32), xh) \
+            * dt_t[..., None, None]
+        Hs = a[..., None, None] * Hs + dBx                      # (b,nh,hd,N)
+        y = jnp.einsum("bhpn,bn->bhp", Hs, C_t.astype(jnp.float32))
+        y = y + bp["D"][None, :, None] * xh
+        return Hs, y.reshape(b, nh * hd)
+
+    Hs, ys = jax.lax.scan(
+        step, H0,
+        (xc.transpose(1, 0, 2), Bc.transpose(1, 0, 2),
+         Cc.transpose(1, 0, 2), dt.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(xc.dtype), Hs
+
+
+def _causal_conv(conv_w, x):
+    """Depthwise causal conv over time. x: (b,s,c); conv_w: (w,c)."""
+    w = conv_w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * conv_w[i] for i in range(w))
+    return jax.nn.silu(out)
+
+
+def _mamba_block_seq(bp, cfg, h):
+    hn = rmsnorm(h, bp["norm"], cfg.norm_eps)
+    proj = hn @ bp["in_proj"]
+    z, x, B, C, dtr = _split_proj(cfg, proj)
+    xBC = _causal_conv(bp["conv_w"], jnp.concatenate([x, B, C], -1))
+    s = _ssm(cfg)
+    din = inner_dim(cfg)
+    xc, Bc, Cc = jnp.split(xBC, [din, din + s.state_dim], -1)
+    H0 = jnp.zeros((h.shape[0], ssm_heads(cfg), s.head_dim, s.state_dim),
+                   jnp.float32)
+    y, _ = _ssd_scan(bp, cfg, xc, Bc, Cc, dtr, H0)
+    y = rmsnorm(y * jax.nn.silu(z), bp["gate_norm"], cfg.norm_eps)
+    return hint_residual(h + y @ bp["out_proj"])
+
+
+def _shared_block_seq(sp, cfg, h, positions):
+    a = self_attention(sp["attn"],
+                       rmsnorm(h, sp["attn_norm"], cfg.norm_eps),
+                       cfg, positions)
+    h = h + shard_hint(a, ("pod", "data"), None, "model")
+    f = swiglu(sp["ffn"], rmsnorm(h, sp["ffn_norm"], cfg.norm_eps))
+    return hint_residual(h + f)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def _pattern(cfg):
+    """Layer pattern: shared attention after every `shared_attn_every`
+    mamba blocks."""
+    k = cfg.shared_attn_every or (cfg.n_layers + 1)
+    n_shared = cfg.n_layers // k
+    return k, n_shared
+
+
+def forward(params, cfg, tokens, remat: bool = False):
+    b, s = tokens.shape
+    h = params["embed"][tokens]
+    h = shard_hint(h, ("pod", "data"), None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    k, n_shared = _pattern(cfg)
+
+    mamba = _mamba_block_seq
+    if remat:
+        mamba = jax.checkpoint(_mamba_block_seq, static_argnums=(1,))
+
+    def unit(h, bps):
+        def inner(hh, bp):
+            return mamba(bp, cfg, hh), None
+        h, _ = jax.lax.scan(inner, h, bps)
+        return h
+
+    # n_shared pattern units of (k mamba + shared attn), then the tail.
+    n_pattern_layers = n_shared * k
+    head_stack = jax.tree.map(lambda a: a[:n_pattern_layers]
+                              .reshape((n_shared, k) + a.shape[1:]),
+                              params["blocks"])
+    tail_stack = jax.tree.map(lambda a: a[n_pattern_layers:],
+                              params["blocks"])
+
+    def unit_scan(h, bps):
+        h = unit(h, bps)
+        h = _shared_block_seq(params["shared"], cfg, h, positions)
+        return h, None
+
+    h, _ = jax.lax.scan(unit_scan, h, head_stack)
+    if cfg.n_layers - n_pattern_layers > 0:
+        h = unit(h, tail_stack)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    return shard_hint(logits, ("pod", "data"), None, "model")
+
+
+def init_state(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               tp: int = 1) -> dict:
+    """Decode state: per-layer SSM state + conv tail, plus a KV cache for
+    the shared attention block at each of its application depths (ring
+    buffer of the sliding window when configured)."""
+    s = _ssm(cfg)
+    k, n_shared = _pattern(cfg)
+    S = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    hd = cfg.resolved_head_dim
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, ssm_heads(cfg), s.head_dim,
+                          s.state_dim), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, s.conv_width - 1,
+                           inner_dim(cfg) + 2 * s.state_dim),
+                          jnp.dtype(cfg.dtype)),
+        "k": jnp.zeros((n_shared, batch, cfg.n_kv_heads, S, hd), dtype),
+        "v": jnp.zeros((n_shared, batch, cfg.n_kv_heads, S, hd), dtype),
+    }
+
+
+def state_specs(cfg) -> dict:
+    return {
+        "ssm": (None, ("pod", "data"), "model", None, None),
+        "conv": (None, ("pod", "data"), None, "model"),
+        "k": (None, ("pod", "data"), None, "model", None),
+        "v": (None, ("pod", "data"), None, "model", None),
+    }
+
+
+def _mamba_block_step(bp, cfg, h, ssm_state, conv_tail):
+    """Single-token mamba block. h: (b, d)."""
+    s = _ssm(cfg)
+    din = inner_dim(cfg)
+    hn = rmsnorm(h, bp["norm"], cfg.norm_eps)
+    proj = hn @ bp["in_proj"]
+    z, x, B, C, dtr = _split_proj(cfg, proj)
+    xBC = jnp.concatenate([x, B, C], -1)                        # (b, c)
+    win = jnp.concatenate([conv_tail, xBC[:, None, :]], 1)      # (b, w, c)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, bp["conv_w"]))
+    xc, Bc, Cc = jnp.split(conv_out, [din, din + s.state_dim], -1)
+    y, Hs = _ssd_scan(bp, cfg, xc[:, None], Bc[:, None], Cc[:, None],
+                      dtr[:, None], ssm_state)
+    y = y[:, 0]
+    y = rmsnorm(y * jax.nn.silu(z), bp["gate_norm"], cfg.norm_eps)
+    return h + y @ bp["out_proj"], Hs, win[:, 1:]
+
+
+def decode_step(params, cfg, token, state, pos):
+    b = token.shape[0]
+    h = params["embed"][token][:, 0]
+    k, n_shared = _pattern(cfg)
+    S = state["k"].shape[3]
+    slot = jnp.mod(pos, S) if cfg.sliding_window else pos
+
+    def mamba_scan(h, layer):
+        bp, ssm_s, conv_t = layer
+        h, ssm_s, conv_t = _mamba_block_step(bp, cfg, h, ssm_s, conv_t)
+        return h, (ssm_s, conv_t)
+
+    n_pattern = n_shared * k
+    take = lambda a, lo, hi: jax.tree.map(lambda x: x[lo:hi], a)
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for u in range(n_shared):
+        lo, hi = u * k, (u + 1) * k
+        h, (ssm_s, conv_t) = jax.lax.scan(
+            mamba_scan, h,
+            (take(params["blocks"], lo, hi), state["ssm"][lo:hi],
+             state["conv"][lo:hi]))
+        new_ssm.append(ssm_s)
+        new_conv.append(conv_t)
+        sp = params["shared"]
+        x = rmsnorm(h[:, None, :], sp["attn_norm"], cfg.norm_eps)
+        a, kc, vc = decode_attention(sp["attn"], x, cfg,
+                                     state["k"][u], state["v"][u], pos, slot)
+        h = h + a[:, 0]
+        f = swiglu(sp["ffn"], rmsnorm(h, sp["ffn_norm"], cfg.norm_eps))
+        h = h + f
+        new_k.append(kc)
+        new_v.append(vc)
+    if cfg.n_layers - n_pattern > 0:
+        h, (ssm_s, conv_t) = jax.lax.scan(
+            mamba_scan, h,
+            (take(params["blocks"], n_pattern, cfg.n_layers),
+             state["ssm"][n_pattern:], state["conv"][n_pattern:]))
+        new_ssm.append(ssm_s)
+        new_conv.append(conv_t)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["lm_head"])[:, None, :]
+    logits = shard_hint(logits, ("pod", "data"), None, "model")
+    new_state = {
+        "ssm": jnp.concatenate(new_ssm, 0),
+        "conv": jnp.concatenate(new_conv, 0),
+        "k": jnp.stack(new_k, 0),
+        "v": jnp.stack(new_v, 0),
+    }
+    return logits, new_state

@@ -1,0 +1,7 @@
+from .accelerator import (N_ACCELERATORS, AcceleratorSpec, paper_accelerator,
+                          tpu_v5e)
+from .tpot import StepTime, max_batch, prefill_ns, step_time, tpot_ns
+
+__all__ = ["N_ACCELERATORS", "AcceleratorSpec", "paper_accelerator",
+           "tpu_v5e", "StepTime", "max_batch", "prefill_ns", "step_time",
+           "tpot_ns"]

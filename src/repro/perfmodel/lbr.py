@@ -1,0 +1,43 @@
+"""Channel load-balance ratio (paper Fig 13).
+
+LBR quantifies how uniformly a step's memory extents spread over the
+memory channels at RoMe's 4 KB striping granularity, normalized to the
+HBM4 baseline (whose 32 B stripes make LBR ~= 1 for any realistic extent).
+Computed per layer kind (attention vs FFN) from the same layer-op traces
+that drive the TPOT model, so Fig 12 and Fig 13 share one source of truth.
+"""
+from __future__ import annotations
+
+from ..configs.paper_workloads import PaperWorkload
+from ..core.address_map import load_balance_ratio, make_address_map
+from ..core.timing import hbm4_config, rome_config
+from ..trace.layergraph import decode_ops
+
+
+def lbr_by_kind(w: PaperWorkload, batch: int, seq_len: int = 8192,
+                n_devices: int = 8, n_cubes: int = 8) -> dict:
+    """{'attn': LBR, 'ffn': LBR} for RoMe, normalized to HBM4."""
+    ops = decode_ops(w, batch, seq_len, n_devices)
+    amap_r = make_address_map(rome_config(), n_cubes)
+    amap_h = make_address_map(hbm4_config(), n_cubes)
+    out = {}
+    for kind in ("attn", "ffn"):
+        k_ops = [op for op in ops if op.kind == kind and op.extents]
+        if not k_ops:
+            out[kind] = 1.0
+            continue
+        # Byte-weighted mean over the kind's ops; normalize to baseline.
+        def weighted(amap):
+            num = den = 0.0
+            for op in k_ops:
+                lbr = load_balance_ratio(amap, op.extents)
+                num += lbr * op.read_bytes
+                den += op.read_bytes
+            return num / den if den else 1.0
+        out[kind] = weighted(amap_r) / max(weighted(amap_h), 1e-9)
+    return out
+
+
+def lbr_sweep(w: PaperWorkload, batches=(1, 4, 16, 64, 256),
+              seq_len: int = 8192) -> dict:
+    return {b: lbr_by_kind(w, b, seq_len) for b in batches}

@@ -1,0 +1,110 @@
+"""TPOT model (paper Fig 12): decode/prefill step time under HBM4 vs RoMe.
+
+Per layer-op roofline: t_op = max(memory_time, compute_time) +
+kernel overhead. memory_time divides the op's bytes by the *effective*
+bandwidth: peak x calibrated channel efficiency x the op's load-balance
+ratio (RoMe's 4 KB striping granularity; HBM4's 32 B granularity keeps
+LBR ~= 1). The calibrated efficiencies come from the cycle-level engine
+(repro.core.analytic), so this model and the engine agree on overlapping
+regimes by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..configs.paper_workloads import PaperWorkload
+from ..core.address_map import AddressMap, load_balance_ratio, make_address_map
+from ..core.analytic import calibrate
+from ..trace.layergraph import LayerOp, decode_ops, prefill_ops
+from .accelerator import AcceleratorSpec, N_ACCELERATORS
+
+
+@dataclass
+class StepTime:
+    total_ns: float
+    mem_ns: float
+    comp_ns: float
+    per_kind_ns: dict
+    lbr_per_kind: dict
+
+
+def op_times_ns(op: LayerOp, acc: AcceleratorSpec, amap: AddressMap,
+                read_eff: float, write_eff: float) -> tuple[float, float, float]:
+    """(mem_ns, comp_ns, lbr) for one op."""
+    lbr = load_balance_ratio(amap, op.extents) if op.extents else 1.0
+    peak = acc.peak_bw_gbps           # GB/s == B/ns
+    read_ns = (op.read_bytes / lbr) / (peak * read_eff) if op.read_bytes else 0.0
+    write_ns = op.write_bytes / (peak * write_eff) if op.write_bytes else 0.0
+    comp_ns = op.flops / (acc.bf16_tflops * 1e3)   # TFLOPs -> ns
+    return read_ns + write_ns, comp_ns, lbr
+
+
+def step_time(ops: list[LayerOp], acc: AcceleratorSpec) -> StepTime:
+    eff = calibrate(acc.mem_cfg)
+    amap = make_address_map(acc.mem_cfg, acc.n_hbm_cubes)
+    total = mem_total = comp_total = 0.0
+    per_kind: dict = {}
+    lbr_acc: dict = {}
+    for op in ops:
+        m, c, lbr = op_times_ns(op, acc, amap, eff.read_eff, eff.write_eff)
+        t = max(m, c) + acc.kernel_overhead_ns
+        total += t
+        mem_total += m
+        comp_total += c
+        per_kind[op.kind] = per_kind.get(op.kind, 0.0) + t
+        if op.kind in ("attn", "ffn"):
+            b, ideal = lbr_acc.get(op.kind, (0.0, 0.0))
+            lbr_acc[op.kind] = (b + op.read_bytes,
+                                ideal + op.read_bytes / max(lbr, 1e-9))
+    lbr_per_kind = {k: (b / ideal if ideal else 1.0)
+                    for k, (b, ideal) in lbr_acc.items()}
+    return StepTime(total, mem_total, comp_total, per_kind, lbr_per_kind)
+
+
+# ---------------------------------------------------------------------------
+# Public API (Fig 12 / Fig 13)
+# ---------------------------------------------------------------------------
+
+def tpot_ns(w: PaperWorkload, acc: AcceleratorSpec, batch: int,
+            seq_len: int = 8192, n_devices: int = N_ACCELERATORS) -> StepTime:
+    ops = decode_ops(w, batch, seq_len, n_devices)
+    return step_time(ops, acc)
+
+
+def prefill_ns(w: PaperWorkload, acc: AcceleratorSpec, batch: int,
+               seq_len: int = 8192,
+               n_devices: int = N_ACCELERATORS) -> StepTime:
+    ops = prefill_ops(w, batch, seq_len, n_devices)
+    return step_time(ops, acc)
+
+
+def max_batch(w: PaperWorkload, seq_len: int = 8192,
+              mem_capacity_gb: float = 256.0,
+              n_devices: int = N_ACCELERATORS) -> int:
+    """Largest power-of-two batch whose weights + KV fit system memory."""
+    weights = _total_weight_bytes(w)
+    cap = mem_capacity_gb * 1e9 * n_devices
+    b = 1
+    while True:
+        kv = 2 * b * seq_len * w.kv_bytes_per_token_per_layer * w.n_layers
+        if weights + kv > cap or b > 4096:
+            return max(1, b // 2)
+        b *= 2
+
+
+def _total_weight_bytes(w: PaperWorkload) -> float:
+    d = w.d_model
+    attn = w.n_layers * (2 * d * (w.n_heads + w.n_kv_heads) * w.head_dim)
+    if w.mla_kv_lora:
+        attn = w.n_layers * (d * w.mla_q_lora
+                             + w.mla_q_lora * w.n_heads * (w.head_dim + w.mla_rope_dim)
+                             + d * (w.mla_kv_lora + w.mla_rope_dim)
+                             + w.mla_kv_lora * w.n_heads * 2 * w.head_dim
+                             + w.n_heads * w.head_dim * d)
+    if w.is_moe:
+        moe_layers = w.n_layers - w.n_dense_layers
+        ffn = moe_layers * (w.n_experts + w.n_shared_experts) * 3 * d * w.d_ff
+        ffn += w.n_dense_layers * 3 * d * w.dense_d_ff
+    else:
+        ffn = w.n_layers * 3 * d * w.d_ff
+    return (attn + ffn + 2 * d * w.vocab) * w.bytes_per_param

@@ -1,0 +1,5 @@
+from .kv_cache import RowPagedKVCache, ROW_BYTES, tokens_per_row
+from .batching import ContinuousBatcher, Request
+
+__all__ = ["RowPagedKVCache", "ROW_BYTES", "tokens_per_row",
+           "ContinuousBatcher", "Request"]

@@ -1,0 +1,90 @@
+"""Continuous batching (Orca-style iteration-level scheduling).
+
+Requests join/leave the running decode batch at token boundaries; a fixed
+batch-slot array keeps the jit'd decode step shape-stable (empty slots are
+masked). The scheduler is host-side and O(batch) per step; admission is
+FIFO with a KV-pool admission check so the pool can never thrash.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    out_tokens: list = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+class ContinuousBatcher:
+    """Iteration-level scheduler over a fixed number of batch slots."""
+
+    def __init__(self, n_slots: int, admit: Optional[Callable] = None):
+        self.n_slots = n_slots
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * n_slots
+        self.admit = admit or (lambda req: True)
+        self.completed: list[Request] = []
+        self.steps = 0
+        self.slot_steps = 0
+        self.busy_slot_steps = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # -- one scheduling iteration ---------------------------------------------
+
+    def schedule(self) -> list[tuple[int, Request]]:
+        """Fill free slots from the queue (FIFO + admission check); returns
+        newly admitted (slot, request) pairs — callers run prefill for them."""
+        admitted = []
+        for slot in range(self.n_slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            if not self.admit(self.queue[0]):
+                break                        # pool full: preserve FIFO order
+            req = self.queue.popleft()
+            req.slot = slot
+            self.active[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    def record_tokens(self, tokens: np.ndarray) -> list[Request]:
+        """Account one decode step's sampled tokens (n_slots,); retire
+        finished requests. Returns the requests that completed this step."""
+        self.steps += 1
+        finished = []
+        for slot, req in enumerate(self.active):
+            self.slot_steps += 1
+            if req is None:
+                continue
+            self.busy_slot_steps += 1
+            req.out_tokens.append(int(tokens[slot]))
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                req.slot = -1
+                self.active[slot] = None
+                self.completed.append(req)
+                finished.append(req)
+        return finished
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slot-steps that carried a live request."""
+        return (self.busy_slot_steps / self.slot_steps
+                if self.slot_steps else 0.0)
+
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.active)

@@ -1,0 +1,3 @@
+from .layergraph import LayerOp, RowAllocator, decode_ops, prefill_ops
+
+__all__ = ["LayerOp", "RowAllocator", "decode_ops", "prefill_ops"]

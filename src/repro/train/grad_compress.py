@@ -1,0 +1,57 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for bandwidth-constrained cross-pod all-reduce).
+
+Per-tensor symmetric quantization: q = round(g / s) with s = max|g| / 127.
+The quantization residual is carried in an error-feedback buffer and added
+back before the next compression, so the scheme is unbiased over time
+(Seide et al. / EF-SGD). Intended use: compress before the cross-pod
+('pod' axis) reduce where links are slowest; the within-pod reduce stays
+fp32. All ops are jit-compatible pytree maps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    buf: dict      # residual pytree (fp32), like grads
+
+
+def ef_init(grads_like) -> ErrorFeedback:
+    return ErrorFeedback(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(int8 payload, fp32 scale). Scale is per-tensor."""
+    g32 = g.astype(jnp.float32)
+    s = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g32 / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def decompress_int8(q: jax.Array, s: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def compress_tree(grads, ef: ErrorFeedback):
+    """Quantize grads+residual; returns ((q, s) pytrees, new ErrorFeedback)."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = treedef.flatten_up_to(ef.buf)
+    q_leaves, s_leaves, r_leaves = [], [], []
+    for g, e in zip(g_leaves, e_leaves):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        q_leaves.append(q)
+        s_leaves.append(s)
+        r_leaves.append(corrected - decompress_int8(q, s))
+    return (treedef.unflatten(q_leaves), treedef.unflatten(s_leaves)), \
+        ErrorFeedback(treedef.unflatten(r_leaves))
+
+
+def decompress_tree(qs, scales, dtype=jnp.float32):
+    return jax.tree.map(lambda q, s: decompress_int8(q, s, dtype), qs, scales)

@@ -1,0 +1,7 @@
+# NOTE (brief): XLA_FLAGS / device-count overrides are NOT set here —
+# smoke tests and benches must see the real single CPU device. Tests that
+# need a multi-device mesh spawn a subprocess with the flag set.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,61 @@
+"""Address-map stripe math and LBR properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (hbm4_config, load_balance_ratio, make_address_map,
+                        rome_config)
+from repro.core.address_map import channel_bytes
+
+
+def test_channel_bytes_exact_small():
+    amap = make_address_map(rome_config(), n_cubes=1)   # 36 channels, 4 KB
+    cb = channel_bytes(amap, [(0, 4096 * 36)])
+    assert np.all(cb == 4096)
+
+
+def test_partial_stripe_accounting():
+    amap = make_address_map(rome_config(), n_cubes=1)
+    cb = channel_bytes(amap, [(100, 5000)])
+    assert cb.sum() == 5000
+
+
+def test_lbr_perfectly_balanced():
+    amap = make_address_map(rome_config(), n_cubes=8)
+    n = amap.n_channels
+    assert load_balance_ratio(amap, [(0, 4096 * n * 7)]) == 1.0
+
+
+def test_lbr_single_row_worst_case():
+    amap = make_address_map(rome_config(), n_cubes=8)
+    lbr = load_balance_ratio(amap, [(0, 4096)])
+    assert lbr == 1.0 / amap.n_channels
+
+
+def test_hbm4_fine_stripes_balance():
+    """32 B stripes keep HBM4 LBR ~1 even for modest extents (the paper's
+    baseline normalization)."""
+    amap = make_address_map(hbm4_config(), n_cubes=8)
+    assert load_balance_ratio(amap, [(0, 1 << 20)]) > 0.99
+
+
+@settings(deadline=None, max_examples=50)
+@given(start=st.integers(min_value=0, max_value=1 << 24),
+       nbytes=st.integers(min_value=1, max_value=1 << 22))
+def test_channel_bytes_conserved(start, nbytes):
+    """Property: stripe accounting conserves total bytes exactly."""
+    amap = make_address_map(rome_config(), n_cubes=2)
+    cb = channel_bytes(amap, [(start, nbytes)])
+    assert cb.sum() == nbytes
+    assert np.all(cb >= 0)
+
+
+@settings(deadline=None, max_examples=30)
+@given(extents=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=1 << 22),
+              st.integers(min_value=1, max_value=1 << 20)),
+    min_size=1, max_size=8))
+def test_lbr_bounds(extents):
+    """Property: 0 < LBR <= 1."""
+    amap = make_address_map(rome_config(), n_cubes=1)
+    lbr = load_balance_ratio(amap, extents)
+    assert 0.0 < lbr <= 1.0 + 1e-12

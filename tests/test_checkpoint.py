@@ -1,0 +1,73 @@
+"""Checkpoint: round-trip, atomicity, resume, async, exotic dtypes."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16) * 1.5,
+                  "d": jnp.array(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), t)
+    r = ckpt.restore(str(tmp_path), 3, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_bf16_dtype_survives(tmp_path):
+    t = {"w": jnp.full((4,), 1.25, jnp.bfloat16)}
+    ckpt.save(str(tmp_path), 0, t)
+    r = ckpt.restore(str(tmp_path), 0, t)
+    assert r["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(r["w"], np.float32),
+                                  np.asarray(t["w"], np.float32))
+
+
+def test_latest_step_skips_torn_saves(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 5, t)
+    # torn save: directory without a complete manifest
+    os.makedirs(tmp_path / "step_000009")
+    with open(tmp_path / "step_000009" / "manifest.json", "w") as f:
+        json.dump({"step": 9, "status": "writing"}, f)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_structure_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 0, _tree())
+    with pytest.raises(ValueError, match="structure mismatch"):
+        ckpt.restore(str(tmp_path), 0, {"only": jnp.zeros(3)})
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    saver = ckpt.AsyncCheckpointer()
+    saver.save(str(tmp_path), 2, t)
+    saver.save(str(tmp_path), 4, t)     # joins the in-flight save first
+    saver.close()
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    r = ckpt.restore(str(tmp_path), 2, t)
+    np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t["a"]))
+
+
+def test_overwrite_same_step(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t)
+    t2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.bfloat16 else x, t)
+    ckpt.save(str(tmp_path), 7, t2)
+    r = ckpt.restore(str(tmp_path), 7, t)
+    np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t2["a"]))

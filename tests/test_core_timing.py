@@ -1,0 +1,59 @@
+"""Timing tables (II/III/V), geometry, and system configs."""
+import pytest
+
+from repro.core import (ChannelGeometry, CubeGeometry, HBM4Timing,
+                        RoMeTiming, hbm4_config, rome_config)
+
+
+def test_channel_geometry_hbm4():
+    g = ChannelGeometry()
+    assert g.bandwidth_gbps == 64.0          # 64 pins x 8 Gbps
+    assert g.banks_per_channel == 128
+    assert g.cols_per_row == 32              # 1 KB row / 32 B col
+
+
+def test_cube_bandwidth_table_v():
+    assert CubeGeometry().bandwidth_tbps == pytest.approx(2.048)  # ~2 TB/s
+    r = rome_config()
+    assert r.cube_bw_gbps / hbm4_config().cube_bw_gbps == pytest.approx(
+        36 / 32)                              # +12.5 %
+
+
+def test_table_v_values():
+    h = hbm4_config()
+    assert (h.channels_per_cube, h.banks_per_channel, h.row_bytes,
+            h.ag_mc_bytes) == (32, 128, 1024, 32)
+    r = rome_config()
+    assert (r.channels_per_cube, r.banks_per_channel, r.row_bytes,
+            r.ag_mc_bytes) == (36, 32, 4096, 4096)
+    assert r.vbas_per_channel == 16
+
+
+def test_rome_timing_table_iii():
+    t = RoMeTiming()
+    assert (t.tR2RS, t.tR2RR) == (64.0, 68.0)
+    assert (t.tR2WS, t.tR2WR) == (69.0, 73.0)
+    assert (t.tW2RS, t.tW2RR) == (71.0, 75.0)
+    assert (t.tW2WS, t.tW2WR) == (64.0, 68.0)
+    assert (t.tRD_row, t.tWR_row) == (95.0, 115.0)
+    assert t.n_managed() == 10
+    assert HBM4Timing().n_managed() == 15
+
+
+def test_rome_gap_matrix():
+    t = RoMeTiming()
+    # same VBA chains on the row-op latency
+    assert t.gap_ns(False, False, True, True) == t.tRD_row
+    assert t.gap_ns(True, True, True, True) == t.tWR_row
+    # different SID adds 1-2 nCK over different VBA
+    for pw, nw in ((False, False), (False, True), (True, False),
+                   (True, True)):
+        s = t.gap_ns(pw, nw, False, True)
+        r = t.gap_ns(pw, nw, False, False)
+        assert r - s == 4.0
+
+
+def test_hbm4_timing_table_v():
+    t = HBM4Timing()
+    assert (t.tRC, t.tRP, t.tRAS, t.tCL) == (45.0, 16.0, 29.0, 16.0)
+    assert (t.tCCDL, t.tCCDS, t.tRRDS) == (2.0, 1.0, 2.0)

@@ -1,0 +1,110 @@
+"""Cycle-level engine invariants for both controllers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine as eng
+
+
+def test_hbm4_bandwidth_below_peak():
+    sim = eng.HBM4ChannelSim()
+    r = sim.run(eng.sequential_read_txns_hbm4(1 << 17))
+    assert 0 < r.bandwidth_gbps <= sim.g.bandwidth_gbps + 1e-9
+
+
+def test_hbm4_stream_efficiency():
+    """A well-tuned MC on a bulk stream sustains >90 % of peak."""
+    sim = eng.HBM4ChannelSim(max_ref_postpone=32)
+    r = sim.run(eng.sequential_read_txns_hbm4(1 << 18))
+    assert r.bandwidth_gbps / sim.g.bandwidth_gbps > 0.90
+
+
+def test_rome_stream_efficiency():
+    sim = eng.RoMeChannelSim()
+    r = sim.run(eng.sequential_read_txns_rome(1 << 20))
+    assert r.bandwidth_gbps / sim.g.bandwidth_gbps > 0.95
+
+
+def test_rome_beats_hbm4_per_channel_is_false_without_extra_channels():
+    """Per channel the two are comparable (both near peak) — RoMe's system
+    win comes from +4 channels, not per-channel magic (paper §VI-B)."""
+    h = eng.HBM4ChannelSim(max_ref_postpone=32)
+    rh = h.run(eng.sequential_read_txns_hbm4(1 << 18))
+    r = eng.RoMeChannelSim()
+    rr = r.run(eng.sequential_read_txns_rome(1 << 20))
+    eff_h = rh.bandwidth_gbps / h.g.bandwidth_gbps
+    eff_r = rr.bandwidth_gbps / r.g.bandwidth_gbps
+    assert abs(eff_h - eff_r) < 0.10
+
+
+def test_rome_queue_depth_two_saturates():
+    r2 = eng.RoMeChannelSim(queue_depth=2, refresh=False)
+    r8 = eng.RoMeChannelSim(queue_depth=8, refresh=False)
+    t2 = r2.run(eng.sequential_read_txns_rome(1 << 19))
+    t8 = r8.run(eng.sequential_read_txns_rome(1 << 19))
+    assert t2.total_ns <= t8.total_ns * 1.02
+
+
+def test_hbm4_shallow_queue_starves():
+    deep = eng.HBM4ChannelSim(queue_depth=64, refresh=False)
+    shallow = eng.HBM4ChannelSim(queue_depth=2, refresh=False)
+    txns = eng.sequential_read_txns_hbm4(1 << 16, layout="row_linear")
+    td = deep.run(list(txns))
+    ts = shallow.run(list(txns))
+    assert ts.total_ns > 1.3 * td.total_ns
+
+
+def test_writes_slower_than_reads_rome_same_vba():
+    """tWR_row (115) > tRD_row (95) binds back-to-back ops on ONE VBA;
+    across interleaved VBAs both directions pace at tX2XS = 64."""
+    rd = eng.RoMeChannelSim(refresh=False, n_vbas=1).run(
+        eng.sequential_read_txns_rome(1 << 18, n_vbas=1))
+    wr = eng.RoMeChannelSim(refresh=False, n_vbas=1).run(
+        eng.sequential_read_txns_rome(1 << 18, n_vbas=1, is_write=True))
+    assert wr.total_ns > rd.total_ns
+
+
+def test_completion_times_finite_and_positive():
+    sim = eng.RoMeChannelSim()
+    r = sim.run(eng.sequential_read_txns_rome(1 << 16))
+    assert np.all(np.isfinite(r.finish_ns)) and np.all(r.finish_ns > 0)
+
+
+def test_act_counts():
+    """RoMe: exactly 2 ACT per row command; HBM4 stream: ~1 ACT per KB."""
+    rome = eng.RoMeChannelSim(refresh=False)
+    rr = rome.run(eng.sequential_read_txns_rome(1 << 18))
+    assert rr.cmd_counts["ACT"] == 2 * rr.cmd_counts["row_commands"]
+    hbm = eng.HBM4ChannelSim(refresh=False)
+    rh = hbm.run(eng.sequential_read_txns_hbm4(1 << 18))
+    kb = (1 << 18) / 1024
+    assert rh.cmd_counts["ACT"] == pytest.approx(kb, rel=0.02)
+
+
+def test_interleaved_streams_inflate_acts():
+    """Stream interleaving forces re-activations on the baseline — the
+    mechanism behind RoMe's Fig 14 ACT-energy advantage. Measured curve:
+    1.0 ACT/KB at 8 streams (clean), 4.1 at 32, 17+ at 64 (the per-stream
+    queue window shrinks below a row's 32 columns and bank collisions
+    force re-ACTs)."""
+    solo = eng.HBM4ChannelSim(refresh=False).run(
+        eng.sequential_read_txns_hbm4(1 << 16, layout="row_linear"))
+    mixed = eng.HBM4ChannelSim(refresh=False).run(
+        eng.interleaved_stream_txns_hbm4(32, 1 << 14))
+    kb_solo = (1 << 16) / 1024
+    kb_mixed = 32 * (1 << 14) / 1024
+    assert mixed.cmd_counts["ACT"] / kb_mixed > \
+        2.0 * solo.cmd_counts["ACT"] / kb_solo
+
+
+@settings(deadline=None, max_examples=20)
+@given(nbytes=st.sampled_from([1 << 14, 1 << 15, 1 << 16]),
+       depth=st.integers(min_value=1, max_value=8))
+def test_rome_properties(nbytes, depth):
+    """Property: bandwidth <= peak; more queue never hurts makespan by
+    more than jitter; byte accounting exact."""
+    sim = eng.RoMeChannelSim(queue_depth=depth, refresh=False)
+    txns = eng.sequential_read_txns_rome(nbytes)
+    r = sim.run(txns)
+    assert r.bandwidth_gbps <= sim.g.bandwidth_gbps + 1e-9
+    assert r.bytes_moved == len(txns) * 4096

@@ -1,0 +1,101 @@
+"""Layer-level math: chunked attention exactness, masks, rope, energy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import EnergyParams, hbm4_energy, rome_energy
+from repro.models.layers import (apply_rope, attention_scores, causal_mask,
+                                 chunked_attention, repeat_kv, rmsnorm)
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.parametrize("s,qc,kc", [(100, 32, 32), (256, 64, 128),
+                                     (64, 64, 64), (130, 32, 48)])
+def test_chunked_attention_exact(s, qc, kc):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, s, 16))
+    k = jax.random.normal(ks[1], (1, 2, s, 16))
+    v = jax.random.normal(ks[2], (1, 2, s, 16))
+    ref = attention_scores(q, k, v, causal_mask(s, s))
+    out = chunked_attention(q, k, v, q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(s=st.integers(min_value=8, max_value=96),
+       win=st.integers(min_value=2, max_value=64))
+def test_chunked_attention_sliding_window_property(s, win):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 1, s, 8))
+    k = jax.random.normal(ks[1], (1, 1, s, 8))
+    v = jax.random.normal(ks[2], (1, 1, s, 8))
+    ref = attention_scores(q, k, v, causal_mask(s, s, win))
+    out = chunked_attention(q, k, v, sliding_window=win, q_chunk=16,
+                            kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_causal_mask_swa():
+    m = causal_mask(5, 5, sliding_window=2)
+    expect = np.array([[1, 0, 0, 0, 0],
+                       [1, 1, 0, 0, 0],
+                       [0, 1, 1, 0, 0],
+                       [0, 0, 1, 1, 0],
+                       [0, 0, 0, 1, 1]], bool)
+    np.testing.assert_array_equal(np.asarray(m), expect)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(KEY, (1, 1, 8, 32))
+    pos = jnp.arange(8)[None, None, :]
+    y = apply_rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[[i]]]), theta=1e4)
+        kj = apply_rope(k, jnp.array([[[j]]]), theta=1e4)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+
+
+def test_repeat_kv():
+    x = jnp.arange(2 * 2 * 3 * 4).reshape(2, 2, 3, 4).astype(jnp.float32)
+    y = repeat_kv(x, 3)
+    assert y.shape == (2, 6, 3, 4)
+    np.testing.assert_array_equal(np.asarray(y[:, 0]), np.asarray(y[:, 2]))
+
+
+def test_rmsnorm_unit_scale():
+    x = jax.random.normal(KEY, (4, 64)) * 10
+    y = rmsnorm(x, jnp.ones((64,)))
+    rms = np.sqrt(np.mean(np.asarray(y, np.float32) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=0.05)
+
+
+# --- energy model -------------------------------------------------------------
+
+def test_rome_energy_act_structural():
+    p = EnergyParams()
+    nbytes = 1 << 20
+    n_rows = nbytes // 4096
+    e = rome_energy(nbytes, n_rows, 0, 1000.0, 36, p=p)
+    assert e.act_pj == 4 * n_rows * p.e_act_pj
+    # one row command vs 32 column commands per KB on the interposer
+    h = hbm4_energy(nbytes, nbytes // 1024, nbytes // 32, 0, 1000.0, 32,
+                    p=p)
+    assert e.ca_pj < h.ca_pj / 20
+
+
+def test_overfetch_increases_data_energy():
+    e0 = rome_energy(1 << 20, 256, 0, 1000.0, 36, overfetch_frac=0.0)
+    e1 = rome_energy(1 << 20, 256, 0, 1000.0, 36, overfetch_frac=1.0)
+    assert e1.data_core_pj == pytest.approx(2 * e0.data_core_pj)

@@ -1,0 +1,61 @@
+"""Roofline report rendering + dryrun record schema."""
+import json
+import os
+
+import pytest
+
+from repro.launch.report import notes, one_liner, render
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+@pytest.fixture(scope="module")
+def results():
+    if not os.path.exists(RESULTS):
+        pytest.skip("dry-run results not present")
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def test_all_cells_recorded(results):
+    # 10 archs x 4 shapes x 2 meshes
+    assert len(results) == 80
+    assert all(v["status"] in ("OK", "SKIP") for v in results.values())
+
+
+def test_ok_cells_have_roofline(results):
+    for k, v in results.items():
+        if v["status"] != "OK":
+            continue
+        rf = v["roofline"]
+        assert rf["t_memory_ms"] > 0
+        assert rf["bottleneck"] in ("compute", "memory", "collective")
+        assert 0 < rf["roofline_fraction"] <= 1.0
+        assert v["mem_per_chip_gb"] > 0
+
+
+def test_skips_are_exactly_the_declared_long_context_cells(results):
+    skips = {k for k, v in results.items() if v["status"] == "SKIP"}
+    long_attn_archs = {"qwen2-7b", "minitron-8b", "qwen3-14b",
+                       "llama-3.2-vision-90b", "whisper-small",
+                       "granite-moe-3b-a800m", "phi3.5-moe-42b-a6.6b"}
+    expect = {f"{a}|long_500k|{m}" for a in long_attn_archs
+              for m in ("single", "multi")}
+    assert skips == expect
+
+
+def test_render_and_notes(results):
+    table = render(results)
+    assert table.count("\n") >= 80
+    assert "| bound |" in table.splitlines()[0]
+    n = notes(results)
+    assert "memory-bound" in n or "compute-bound" in n
+
+
+def test_multi_pod_cells_use_512_chips(results):
+    for k, v in results.items():
+        if v["status"] == "OK" and v["mesh"] == "multi":
+            assert v["n_chips"] == 512
+        if v["status"] == "OK" and v["mesh"] == "single":
+            assert v["n_chips"] == 256

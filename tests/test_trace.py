@@ -1,0 +1,46 @@
+"""Layer-op trace census: bytes/flops bookkeeping for the perf model."""
+import pytest
+
+from repro.configs.paper_workloads import PAPER_WORKLOADS
+from repro.trace.layergraph import RowAllocator, decode_ops, prefill_ops
+
+
+def test_row_allocator_alignment():
+    a = RowAllocator()
+    b1, n1 = a.alloc(100)
+    b2, n2 = a.alloc(5000)
+    assert b1 % 4096 == 0 and b2 % 4096 == 0
+    assert b2 >= b1 + 4096            # rounded up to whole rows
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_WORKLOADS))
+def test_decode_ops_structure(name):
+    w = PAPER_WORKLOADS[name]
+    ops = decode_ops(w, batch=64, seq_len=8192)
+    kinds = {o.kind for o in ops}
+    assert {"attn", "ffn", "head"} <= kinds
+    assert len([o for o in ops if o.kind == "attn"]) == w.n_layers
+    for o in ops:
+        assert o.flops > 0
+        assert o.read_bytes >= 0
+
+
+def test_prefill_scales_flops_not_extents():
+    w = PAPER_WORKLOADS["grok-1"]
+    d = decode_ops(w, 8, 8192)
+    p = prefill_ops(w, 8, 8192)
+    # weights are read once either way; flops scale with tokens
+    assert sum(o.flops for o in p) > 1000 * sum(o.flops for o in d)
+    assert p[0].extents == d[0].extents
+
+
+def test_moe_extents_sparser_than_dense():
+    """Small batch activates few experts -> few (large) extents; large
+    batch touches all experts (the Fig 13 LBR_FFN mechanism)."""
+    w = PAPER_WORKLOADS["deepseek-v3"]
+    small = decode_ops(w, 1, 8192)
+    big = decode_ops(w, 256, 8192)
+    s_moe = [o for o in small if o.kind == "ffn" and len(o.extents) > 1]
+    b_moe = [o for o in big if o.kind == "ffn" and len(o.extents) > 1]
+    assert s_moe and b_moe
+    assert len(b_moe[0].extents) > len(s_moe[0].extents)
