@@ -14,16 +14,17 @@ import sys
 import time
 import traceback
 
-from . import (engine_xval, fig09_command_schedule, fig10_ca_pins,
-               fig12_tpot, fig13_lbr, fig14_energy, queue_depth,
-               refresh_stall, sparse_overfetch, tab_mc_complexity,
-               vba_design_space)
+from . import (engine_dequeue, engine_xval, fig09_command_schedule,
+               fig10_ca_pins, fig12_tpot, fig13_lbr, fig14_energy,
+               queue_depth, refresh_stall, sparse_overfetch,
+               tab_mc_complexity, vba_design_space)
 
 ALL = [
     ("fig09_command_schedule", fig09_command_schedule),
     ("fig10_ca_pins", fig10_ca_pins),
     ("tab_mc_complexity", tab_mc_complexity),
     ("queue_depth", queue_depth),
+    ("engine_dequeue", engine_dequeue),
     ("vba_design_space", vba_design_space),
     ("engine_xval", engine_xval),
     ("fig12_tpot", fig12_tpot),

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs.registry_configs import ALL_ARCHS
 from repro.data.pipeline import make_pipeline
 from repro.distributed import checkpoint as ckpt
@@ -49,7 +50,7 @@ def main(argv=None) -> int:
     mesh = make_mesh((1, 1), ("data", "model"))
     pipe = make_pipeline(cfg.vocab, args.seq_len, args.global_batch, seed=7)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = ad.init(jax.random.PRNGKey(7), tp=1)
         n_params = sum(x.size for x in jax.tree.leaves(params))
         print(f"[e2e] model: {n_params/1e6:.1f}M params")

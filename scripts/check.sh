@@ -1,0 +1,5 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (ROADMAP.md). Usage: scripts/check.sh [pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,41 @@
+"""JAX version-compatibility layer.
+
+Every JAX API whose surface drifted across the versions this repo supports
+(0.4.35 – 0.6.x) is adapted exactly once, here, by feature detection at
+import time — source modules import the stable names below and never touch
+the drifting spellings directly.
+
+Policy (documented in CHANGES.md): when an API moves, add the adapter here
+with a feature probe (``hasattr`` / ``TypeError`` fallback, never a version
+string compare), keep the *new* JAX spelling as the canonical argument
+surface, and cover both branches in tests where the installed JAX allows.
+
+Stable surface:
+  * :func:`tpu_compiler_params`      — pltpu.CompilerParams / TPUCompilerParams
+  * :func:`make_mesh`                — jax.make_mesh with/without axis_types
+  * :func:`set_mesh`                 — jax.set_mesh / sharding.use_mesh / Mesh ctx
+  * :func:`active_mesh_axis_names`   — abstract mesh / thread-resource env
+  * :func:`mesh_axis_sizes`          — Mesh.axis_sizes / devices.shape
+  * :func:`normalize_cost_analysis`  — dict vs list[dict] returns
+  * :func:`xla_cost_analysis`        — Compiled -> normalized flat dict
+  * :func:`tree_map`                 — jax.tree.map / jax.tree_util.tree_map
+"""
+from __future__ import annotations
+
+from .hlo import normalize_cost_analysis, xla_cost_analysis
+from .pallas import tpu_compiler_params
+from .sharding import (active_mesh, active_mesh_axis_names, make_mesh,
+                       mesh_axis_sizes, set_mesh)
+from .tree import tree_map
+
+__all__ = [
+    "tpu_compiler_params",
+    "make_mesh",
+    "set_mesh",
+    "active_mesh",
+    "active_mesh_axis_names",
+    "mesh_axis_sizes",
+    "normalize_cost_analysis",
+    "xla_cost_analysis",
+    "tree_map",
+]

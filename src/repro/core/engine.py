@@ -19,6 +19,7 @@ TPOT reproduction. Transactions are one AG_MC unit each (32 B vs 4 KB).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from itertools import islice
 
 import numpy as np
 
@@ -51,6 +52,69 @@ class SimResult:
         if self.total_ns <= 0:
             return 0.0
         return self.bytes_moved / self.total_ns  # B/ns == GB/s
+
+
+class _PendingQueue:
+    """Arrival-ordered outstanding transactions with O(1) dequeue.
+
+    ``list.remove`` made every dequeue O(n) worst-case in the number of
+    outstanding transactions — and, because it matches by dataclass
+    equality, it removed the *wrong object* when two field-identical
+    transactions were in flight (one got serviced twice, the other
+    never). Removal here is by identity: tombstone the slot via an
+    id->slot map, with a head cursor that skips tombstones. The scheduler
+    only removes transactions inside the first ``queue_depth`` live
+    entries, so at most ``queue_depth`` interior tombstones exist at any
+    time and every window scan is O(queue_depth); with no interior
+    tombstones (the common head-of-queue dequeue) the window is a plain
+    list slice."""
+
+    __slots__ = ("_slots", "_pos", "_head", "_n", "_tomb")
+
+    def __init__(self, txns: list):
+        self._slots = list(txns)
+        self._pos = {id(tx): i for i, tx in enumerate(self._slots)}
+        if len(self._pos) != len(self._slots):
+            raise ValueError(
+                "trace contains the same Txn object more than once; pass "
+                "distinct Txn instances (field-identical copies are fine)")
+        self._head = 0
+        self._n = len(self._slots)
+        self._tomb = 0                 # tombstones at index >= _head
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+    def _skip_tombstones(self) -> None:
+        slots, h = self._slots, self._head
+        while h < len(slots) and slots[h] is None:
+            h += 1
+            self._tomb -= 1
+        self._head = h
+
+    def head(self) -> Txn:
+        """Oldest outstanding transaction."""
+        self._skip_tombstones()
+        return self._slots[self._head]
+
+    def first(self, depth: int) -> list:
+        """The scheduler window: up to `depth` oldest live transactions."""
+        self._skip_tombstones()
+        slots, h, tomb = self._slots, self._head, self._tomb
+        if tomb == 0:
+            return slots[h:h + depth]
+        # Every tombstone index t satisfies t < h + depth + tomb (removals
+        # only happen inside the window), so this slice is guaranteed to
+        # contain the full window; filter/islice keep the scan in C.
+        return list(islice(filter(None, slots[h:h + depth + tomb]), depth))
+
+    def remove(self, tx: Txn) -> None:
+        self._slots[self._pos.pop(id(tx))] = None
+        self._n -= 1
+        self._tomb += 1
 
 
 # ===========================================================================
@@ -105,7 +169,9 @@ class HBM4ChannelSim:
     def run(self, txns: list[Txn]) -> SimResult:
         t = self.t
         order = sorted(range(len(txns)), key=lambda i: txns[i].arrival_ns)
-        pending = [txns[i] for i in order]
+        ordered = [txns[i] for i in order]
+        idx_in_finish = {id(tx): order[k] for k, tx in enumerate(ordered)}
+        pending = _PendingQueue(ordered)
         finish = np.zeros(len(txns))
         banks = [_BankState() for _ in range(self.n_banks)]
         # Per-PC shared resources.
@@ -120,12 +186,10 @@ class HBM4ChannelSim:
         pc_last_act = [-1e18, -1e18]          # tRRDS
         pc_last_act_bg = [dict(), dict()]     # tRRDL
         counts = {"ACT": 0, "RD": 0, "WR": 0, "PRE": 0, "REFpb": 0,
-                  "ca_commands": 0}
+                  "ca_commands": 0, "ref_backlog_max": 0}
         # Rotating per-bank refresh.
         next_ref_t = t.tREFIpb
         next_ref_bank = 0
-
-        idx_in_finish = {id(tx): order[k] for k, tx in enumerate(pending)}
         now = 0.0
 
         def act_ready(bank_id: int, b: _BankState, at: float) -> float:
@@ -160,6 +224,8 @@ class HBM4ChannelSim:
         ref_backlog = 0
 
         while pending:
+            qwin = pending.first(self.queue_depth)
+
             # -- refresh: rotating REFpb with demand-aware postponement.
             # A REFpb due for a bank with queued demand is postponed (JEDEC
             # allows bounded postponement); once the backlog hits the cap it
@@ -168,9 +234,10 @@ class HBM4ChannelSim:
             while self.refresh and next_ref_t <= now:
                 ref_backlog += 1
                 next_ref_t += t.tREFIpb
+            counts["ref_backlog_max"] = max(counts["ref_backlog_max"],
+                                            ref_backlog)
             while ref_backlog > 0:
-                demanded = any(tx.bank == next_ref_bank
-                               for tx in pending[: self.queue_depth])
+                demanded = any(tx.bank == next_ref_bank for tx in qwin)
                 if demanded and ref_backlog < self.max_ref_postpone:
                     break
                 b = banks[next_ref_bank]
@@ -188,10 +255,16 @@ class HBM4ChannelSim:
                 ref_backlog -= 1
 
             # -- FR-FCFS over the queue window ---------------------------------
-            window = [tx for tx in pending[: self.queue_depth]
-                      if tx.arrival_ns <= now]
+            window = [tx for tx in qwin if tx.arrival_ns <= now]
             if not window:
-                now = max(now, pending[0].arrival_ns)
+                # Idle: jump to the next event — arrival OR refresh due —
+                # so refreshes due during a sparse-arrival gap are issued
+                # in the gap (bounded postponement) instead of piling up
+                # behind the next arrival.
+                cand = pending.head().arrival_ns
+                if self.refresh:
+                    cand = min(cand, next_ref_t)
+                now = max(now + 1e-9, cand)
                 continue
 
             issued = False
@@ -281,8 +354,7 @@ class HBM4ChannelSim:
             if not issued:
                 # Nothing issueable: jump to the next event (refresh or
                 # arrival) to guarantee progress.
-                nxt = [tx.arrival_ns for tx in pending[: self.queue_depth]
-                       if tx.arrival_ns > now]
+                nxt = [tx.arrival_ns for tx in qwin if tx.arrival_ns > now]
                 cand = min(nxt) if nxt else now + t.tREFIpb
                 if self.refresh:
                     cand = min(cand, next_ref_t)
@@ -325,9 +397,10 @@ class RoMeChannelSim:
     def run(self, txns: list[Txn]) -> SimResult:
         t = self.t
         order = sorted(range(len(txns)), key=lambda i: txns[i].arrival_ns)
-        pending = [txns[i] for i in order]
+        ordered = [txns[i] for i in order]
+        idx_in_finish = {id(tx): order[k] for k, tx in enumerate(ordered)}
+        pending = _PendingQueue(ordered)
         finish = np.zeros(len(txns))
-        idx_in_finish = {id(tx): order[k] for k, tx in enumerate(pending)}
 
         vba_busy_until = np.zeros(self.n_vbas)   # Reading/Writing/Refreshing
         last_cmd_t = -1e18
@@ -335,7 +408,7 @@ class RoMeChannelSim:
         last_cmd_vba = -1
         last_cmd_sid = -1
         counts = {"ACT": 0, "RD": 0, "WR": 0, "PRE": 0, "REFpb": 0,
-                  "row_commands": 0, "ca_commands": 0}
+                  "row_commands": 0, "ca_commands": 0, "ref_backlog_max": 0}
         sched_rd = self._cg.expand(is_write=False)
         sched_wr = self._cg.expand(is_write=True)
         bursts = 2 * self._cg.bursts_per_bank()
@@ -357,15 +430,18 @@ class RoMeChannelSim:
         ref_backlog = 0
 
         while pending:
+            qwin = pending.first(self.queue_depth)
+
             # VBA-paired refresh, anchored at due time (may overlap across
             # VBAs — the paper's "up to three refreshing simultaneously"),
             # with the same demand-aware bounded postponement as the baseline.
             while self.refresh and next_ref_t <= now:
                 ref_backlog += 1
                 next_ref_t += 2 * t.tREFIpb
+            counts["ref_backlog_max"] = max(counts["ref_backlog_max"],
+                                            ref_backlog)
             while ref_backlog > 0:
-                demanded = any(tx.bank == next_ref_vba
-                               for tx in pending[: self.queue_depth])
+                demanded = any(tx.bank == next_ref_vba for tx in qwin)
                 if demanded and ref_backlog < self.max_ref_postpone:
                     break
                 v = next_ref_vba
@@ -378,14 +454,17 @@ class RoMeChannelSim:
                 next_ref_vba = (next_ref_vba + 1) % self.n_vbas
                 ref_backlog -= 1
 
-            window = [tx for tx in pending[: self.queue_depth]
-                      if tx.arrival_ns <= now]
+            window = [tx for tx in qwin if tx.arrival_ns <= now]
             if not window:
-                now = pending[0].arrival_ns if pending else now
+                # Idle: jump to the next event — arrival OR refresh due —
+                # exactly like the conventional-MC path. Jumping straight to
+                # the next arrival would skip refreshes that come due during
+                # the gap, postponing them without bound behind the arrival
+                # instead of issuing them in the idle window.
+                cand = pending.head().arrival_ns
                 if self.refresh:
-                    now = min(now, max(next_ref_t, now)) if not pending else \
-                        max(min(pending[0].arrival_ns, 1e18), now)
-                now = max(now, pending[0].arrival_ns) if pending else now
+                    cand = min(cand, next_ref_t)
+                now = max(now + 1e-9, cand)
                 continue
 
             # Oldest-first with VBA interleaving: prefer a request whose VBA
@@ -412,7 +491,7 @@ class RoMeChannelSim:
             counts["ca_commands"] += 1
             finish[idx_in_finish[id(best)]] = best_t + sched.last_data_ns
             pending.remove(best)
-            now = best_t
+            now = max(now, best_t)
 
         bytes_moved = len(txns) * self.row_bytes
         return SimResult(finish, float(finish.max(initial=0.0)), bytes_moved,

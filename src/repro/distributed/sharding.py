@@ -15,6 +15,9 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import active_mesh, mesh_axis_sizes, tree_map
+from ..compat import active_mesh_axis_names as _active_axis_names
+
 BATCH_AXES = ("pod", "data")    # batch dim shards over both DP axes
 TP_AXIS = "model"
 
@@ -52,16 +55,6 @@ def hint_residual(h):
     if h.ndim != 3 or h.shape[1] <= 1:
         return shard_hint(h, BATCH_AXES, None, None)
     return shard_hint(h, BATCH_AXES, act_seq_axis(), None)
-
-
-def _active_axis_names() -> tuple:
-    try:
-        m = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return ()
-    if m is None:
-        return ()
-    return tuple(m.axis_names) if m.axis_names else ()
 
 
 def filter_spec(entries: tuple, axis_names: tuple) -> tuple:
@@ -109,14 +102,10 @@ def constrain_like(tree, specs):
     at trace time). No-op outside a mesh. Used to pin gradient
     accumulators to the parameter sharding so XLA emits per-microbatch
     reduce-scatters instead of full all-reduces (§Perf)."""
-    import jax.numpy as jnp
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return tree
+    mesh = active_mesh()
     if mesh is None or not mesh.axis_names:
         return tree
-    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    sizes = mesh_axis_sizes(mesh)
 
     def entry_ok(e, dim):
         axes = [a for a in (e if isinstance(e, (tuple, list)) else (e,))
@@ -151,7 +140,7 @@ def constrain_like(tree, specs):
             return x
         return jax.lax.with_sharding_constraint(x, P(*entries))
 
-    return jax.tree.map(one, tree, specs, is_leaf=is_spec)
+    return tree_map(one, tree, specs, is_leaf=is_spec)
 
 
 def pad_to_multiple(n: int, m: int) -> int:

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...compat.pallas import tpu_compiler_params
+
 DRAM_ROW_BYTES = 4096
 NEG_INF = -1e30
 
@@ -115,7 +117,7 @@ def rwkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((b, H, s, hd), r.dtype),
                    jax.ShapeDtypeStruct((b, H, hd, hd), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(rr, kk, vv, ww, u)

@@ -28,9 +28,10 @@ import traceback
 
 import jax
 
+from ..compat import set_mesh
 from ..configs.registry_configs import ALL_ARCHS
 from ..configs.shapes import SHAPES
-from .hlo_analysis import analyze_hlo
+from .hlo_analysis import analyze_hlo, xla_cost_analysis
 from .mesh import make_production_mesh
 from .plans import cell_supported, make_cell
 from .roofline import Roofline, model_bytes, model_flops
@@ -54,11 +55,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 "status": "SKIP", "reason": reason}
 
     t0 = time.time()
-    # jax.set_mesh (not `with mesh:`) — only set_mesh installs the abstract
+    # compat.set_mesh resolves to jax.set_mesh where available (not a bare
+    # `with mesh:`) — on those versions only set_mesh installs the abstract
     # mesh that with_sharding_constraint needs during tracing; under a bare
     # Mesh context every shard_hint in the model silently no-ops (measured:
     # llama-90b train activations lost their batch sharding, 1.7 TB/chip).
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         plan = make_cell(arch, shape_name, mesh, **(opt_flags or {}))
         jitted = jax.jit(plan.fn, donate_argnums=plan.donate)
         lowered = jitted.lower(*plan.args)
@@ -67,7 +69,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = xla_cost_analysis(compiled)
         hlo = compiled.as_text()
     st = analyze_hlo(hlo)
 

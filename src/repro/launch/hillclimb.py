@@ -17,6 +17,7 @@ import jax
 
 from ..configs.registry_configs import ALL_ARCHS
 from ..configs.shapes import SHAPES
+from ..compat import set_mesh
 from .hlo_analysis import HloModule
 from .mesh import make_production_mesh
 from .plans import make_cell
@@ -34,7 +35,7 @@ def measure(arch: str, shape_name: str, mesh_kind: str = "single",
     shape = SHAPES[shape_name]
     cfg = ALL_ARCHS[arch]
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         plan = make_cell(arch, shape_name, mesh, **(opts or {}))
         compiled = jax.jit(plan.fn, donate_argnums=plan.donate) \
             .lower(*plan.args).compile()

@@ -28,6 +28,10 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
+from ..compat.hlo import normalize_cost_analysis, xla_cost_analysis  # noqa: F401
+# Re-exported: every consumer of Compiled.cost_analysis() goes through
+# these (the raw return drifted from list[dict] to dict across JAX versions).
+
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute", "ragged-all-to-all")
 
@@ -51,6 +55,9 @@ _DTYPE_BYTES = {
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+# First operand after 'op(': optional inline type then the operand name.
+_OPERAND_RE = (r"\(\s*(?:([a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?)\s+)?"
+               r"%?([\w\.\-]+)")
 
 
 def _parse_instr_line(line: str):
@@ -296,8 +303,11 @@ class HloModule:
 
     @staticmethod
     def _first_operand(ci: Instruction):
-        m = re.search(re.escape(ci.op) + r"\(%([\w\.\-]+)", ci.line)
-        return m.group(1) if m else None
+        # Operands print as '%name' or 'f32[2,3]{1,0} %name' depending on
+        # the XLA version; take the %name of the first operand either way
+        # (the shape token contains commas, so no splitting on ',').
+        m = re.search(re.escape(ci.op) + _OPERAND_RE, ci.line)
+        return m.group(2) if m else None
 
     def _fusion_traffic(self, inst: Instruction, ops: list[int],
                         res: int) -> int:
@@ -394,11 +404,16 @@ class HloModule:
         for _, dims in shape_dims(inst.result):
             for d in dims:
                 out *= d
-        mlhs = re.search(r"dot\(%?([\w\.\-]+)", inst.line)
+        # lhs operand: inline-typed ('f32[64,64]{1,0} %x') on older XLA
+        # text, bare '%x' on newer — prefer the inline shape, fall back to
+        # the symbol table. The shape token itself contains commas, so the
+        # operand cannot be split on ','.
+        mlhs = re.search("dot" + _OPERAND_RE, inst.line)
         mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.line)
         contract = 1
         if mlhs and mcd:
-            lhs_shape = shape_dims(symbols.get(mlhs.group(1), ""))
+            lhs_shape = shape_dims(mlhs.group(1) or "") \
+                or shape_dims(symbols.get(mlhs.group(2), ""))
             if lhs_shape:
                 dims = lhs_shape[0][1]
                 for ix in mcd.group(1).split(","):

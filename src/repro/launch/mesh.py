@@ -4,25 +4,24 @@
 importing this module never touches jax device state. The single-pod mesh
 is 16x16 = 256 chips (one TPU v5e pod); the multi-pod mesh prepends a
 ``pod`` axis: (2, 16, 16) = 512 chips.
+
+Mesh construction goes through repro.compat so the Auto-axis-type kwarg is
+used where the installed JAX has it and dropped where it doesn't.
 """
 from __future__ import annotations
 
-import jax
+from ..compat.sharding import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary mesh (elastic re-mesh, tests)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def mesh_devices(mesh) -> int:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import mesh_axis_sizes, tree_map
 from ..configs.registry_configs import ALL_ARCHS
 from ..configs.shapes import SHAPES, InputShape
 from ..distributed.sharding import activation_sharding
@@ -38,7 +39,7 @@ TP = 16   # model-axis width of the production mesh
 # ---------------------------------------------------------------------------
 
 def _axis_size(mesh, name) -> int:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+    return mesh_axis_sizes(mesh)[name]
 
 
 def concretize_entry(entry, dim: int, mesh) -> Any:
@@ -87,11 +88,11 @@ def with_sharding(structs, specs, mesh):
         return jax.ShapeDtypeStruct(s.shape, s.dtype,
                                     sharding=NamedSharding(mesh, p))
 
-    return jax.tree.map(one, structs, specs, is_leaf=lambda x: is_spec(x))
+    return tree_map(one, structs, specs, is_leaf=lambda x: is_spec(x))
 
 
 def replicated(structs, mesh):
-    return jax.tree.map(
+    return tree_map(
         lambda s: jax.ShapeDtypeStruct(
             s.shape, s.dtype, sharding=NamedSharding(mesh, P())), structs)
 
@@ -112,8 +113,8 @@ def abstract_opt_state(params_structs, specs, mesh):
     """AdamW moments shard exactly like their parameters (fp32)."""
     f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
                                          sharding=s.sharding)
-    mu = jax.tree.map(f32, params_structs)
-    nu = jax.tree.map(f32, params_structs)
+    mu = tree_map(f32, params_structs)
+    nu = tree_map(f32, params_structs)
     step = jax.ShapeDtypeStruct((), jnp.int32,
                                 sharding=NamedSharding(mesh, P()))
     return AdamWState(step=step, mu=mu, nu=nu)
@@ -164,7 +165,7 @@ def train_memory_plan(cfg, shape: InputShape, mesh,
     additionally shard the residual stream's sequence dim over the model
     axis (sequence parallelism). Production practice: global batch is set
     by the recipe; microbatching + SP are the memory knobs."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = mesh_axis_sizes(mesh)
     dp = sizes.get("data", 1) * sizes.get("pod", 1)
     tp = sizes.get("model", 1)
     b_local = max(1, shape.global_batch // dp)
@@ -231,7 +232,7 @@ def auto_fsdp_serving(cfg, mesh, budget_gb: float = 4.0) -> bool:
     `data` too and pay the per-layer gather. Measured (EXPERIMENTS.md
     §Perf B.2): llama-90b decode −37.6 GB/chip and −54 ms memory for
     +8.6 ms collective; phi3.5-moe decode 22.0 -> 5.6 GB/chip."""
-    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    tp = mesh_axis_sizes(mesh).get("model", 1)
     return (cfg.n_params() * 2 / tp) / 1e9 > budget_gb
 
 

@@ -24,6 +24,7 @@ from ..models.registry import get_adapter
 from ..serve.batching import ContinuousBatcher, Request
 from ..serve.kv_cache import ROW_BYTES
 from .mesh import make_mesh
+from ..compat import set_mesh
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:
@@ -56,7 +57,7 @@ def main(argv=None) -> int:
         batcher.submit(Request(rid, prompt,
                                max_new_tokens=args.max_new))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = adapter.init(jax.random.PRNGKey(args.seed), tp=1)
         cache = adapter.init_decode_state(args.slots, args.max_seq)
 

@@ -29,6 +29,7 @@ from ..distributed import checkpoint as ckpt
 from ..models.registry import get_adapter
 from ..train.train_step import TrainState, make_train_step, train_state_init
 from .mesh import make_mesh
+from ..compat import set_mesh
 
 
 def build(arch: str, use_reduced: bool, mesh_shape: tuple, seq_len: int,
@@ -74,7 +75,7 @@ def main(argv=None) -> int:
     pipe = make_pipeline(cfg.vocab, args.seq_len, args.global_batch,
                          seed=args.seed)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = adapter.init(jax.random.PRNGKey(args.seed), tp=tp)
         state = train_state_init(params)
 

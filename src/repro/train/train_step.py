@@ -13,6 +13,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import tree_map
 from ..distributed.sharding import constrain_like, shard_hint
 from .optimizer import AdamWState, adamw_init, adamw_update
 
@@ -68,19 +69,19 @@ def make_train_step(loss_fn: Callable, *, microbatches: int = 1,
             return shard_hint(y, None, ("pod", "data"),
                               *([None] * (y.ndim - 2)))
 
-        mb = jax.tree.map(split, batch)
-        zero = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+        mb = tree_map(split, batch)
+        zero = pin(tree_map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                 state.params))
 
         def body(carry, microbatch):
             acc, loss_acc = carry
             loss, grads = grad_fn(state.params, microbatch)
-            acc = pin(jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+            acc = pin(tree_map(lambda a, g: a + g.astype(jnp.float32),
                                    acc, pin(grads)))
             return (acc, loss_acc + loss), None
 
         (gacc, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), mb)
-        grads = jax.tree.map(lambda g: g / microbatches, gacc)
+        grads = tree_map(lambda g: g / microbatches, gacc)
         params, opt = adamw_update(state.params, grads, state.opt, lr=lr,
                                    weight_decay=weight_decay,
                                    grad_clip=grad_clip)

@@ -1,0 +1,158 @@
+"""Minimal hypothesis-compatible property-testing shim.
+
+The tier-1 suite must run in offline containers where `hypothesis` cannot
+be installed. This module re-exports the real hypothesis when it is
+importable and otherwise provides a small drop-in subset:
+
+  * ``given(**strategies)`` / ``settings(max_examples=, deadline=)``
+  * ``strategies.integers | floats | booleans | sampled_from | lists |
+    tuples``
+
+The shim draws examples from a PRNG seeded by the test's qualified name
+(deterministic across runs), always tries the strategy-space boundary
+points first (min/max for scalars, min/max size for lists), and reports
+the falsifying example on failure. No shrinking.
+
+Usage in tests:  ``from _proptest import given, settings, strategies as st``
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """A draw function plus an optional list of boundary examples tried
+    before any random draws."""
+
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self.boundaries = tuple(boundaries)
+
+    def example(self, rng: random.Random, i: int):
+        if i < len(self.boundaries):
+            return self.boundaries[i]
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int = -(1 << 16), max_value: int = 1 << 16):
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         boundaries=(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               allow_nan: bool = False, allow_infinity: bool = False):
+        return _Strategy(lambda r: r.uniform(min_value, max_value),
+                         boundaries=(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)),
+                         boundaries=(False, True))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        if not elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+        return _Strategy(lambda r: r.choice(elements),
+                         boundaries=(elements[0], elements[-1]))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elements.example(r, len(elements.boundaries) + k)
+                    for k in range(n)]
+
+        def sized(n):
+            # boundary lists themselves use boundary elements where possible
+            return lambda r: [elements.example(r, k) for k in range(n)]
+
+        return _Strategy(draw, boundaries=()) if min_size == max_size == 0 \
+            else _BoundaryCallable(draw, (sized(min_size), sized(max_size)))
+
+    @staticmethod
+    def tuples(*elements: _Strategy):
+        def draw(r):
+            return tuple(e.example(r, len(e.boundaries)) for e in elements)
+
+        lo = tuple(e.boundaries[0] if e.boundaries else None
+                   for e in elements)
+        hi = tuple(e.boundaries[-1] if e.boundaries else None
+                   for e in elements)
+        if any(b is None for b in lo + hi):
+            return _Strategy(draw)
+        return _Strategy(draw, boundaries=(lo, hi))
+
+
+class _BoundaryCallable(_Strategy):
+    """Strategy whose boundary examples need the RNG (sized lists)."""
+
+    def __init__(self, draw, boundary_fns):
+        super().__init__(draw)
+        self._boundary_fns = tuple(boundary_fns)
+
+    def example(self, rng: random.Random, i: int):
+        if i < len(self._boundary_fns):
+            return self._boundary_fns[i](rng)
+        return self._draw(rng)
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording run settings on the given-wrapped test."""
+
+    def deco(fn):
+        fn._proptest_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test once per drawn example. Strategy-provided parameters
+    are removed from the wrapper's signature so pytest does not try to
+    resolve them as fixtures."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_proptest_settings", None) or {}
+            n = cfg.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = {name: s.example(rng, i)
+                         for name, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"Falsifying example ({fn.__name__}, "
+                        f"example {i + 1}/{n}): {drawn!r}") from e
+
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs])
+        return wrapper
+
+    return deco
+
+
+class _StrategiesModule(_Strategies):
+    pass
+
+
+strategies = _StrategiesModule()
+
+try:                                        # defer to real hypothesis
+    from hypothesis import given, settings, strategies  # noqa: F811,F401
+except ImportError:
+    pass

@@ -1,6 +1,6 @@
 """Address-map stripe math and LBR properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _proptest import given, settings, strategies as st
 
 from repro.core import (hbm4_config, load_balance_ratio, make_address_map,
                         rome_config)

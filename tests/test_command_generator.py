@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _proptest import given, settings, strategies as st
 
 from repro.core import CommandGenerator, HBM4Timing, RoMeTiming
 from repro.core.command_generator import (command_issue_latency_ns,

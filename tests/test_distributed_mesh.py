@@ -24,6 +24,7 @@ def test_cp_attention_matches_local():
     out = _run("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh, set_mesh
         from repro.models.layers import cached_attention_update
         ks = jax.random.split(jax.random.PRNGKey(1), 5)
         b, hq, hkv, S, hd = 2, 8, 2, 32, 16
@@ -35,9 +36,8 @@ def test_cp_attention_matches_local():
         pos = jnp.array(20, jnp.int32)
         o_ref, kc_ref, vc_ref = cached_attention_update(
             q, kn, vn, kc, vc, pos, pos)
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((2, 4), ('data', 'model'))
+        with set_mesh(mesh):
             spec = NamedSharding(mesh, P('data', None, 'model', None))
             kc_s, vc_s = jax.device_put(kc, spec), jax.device_put(vc, spec)
             o, kc2, vc2 = jax.jit(cached_attention_update)(
@@ -75,15 +75,15 @@ def test_spmd_train_step_runs_on_mesh():
     mesh with FSDP+TP shardings and finite loss."""
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.compat import make_mesh, set_mesh
         from repro.configs.base import reduced
         from repro.configs.registry_configs import ALL_ARCHS
         from repro.models.registry import get_adapter
         from repro.train.train_step import make_train_step, train_state_init
         cfg = reduced(ALL_ARCHS['qwen2-7b'])
         ad = get_adapter(cfg)
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((4, 2), ('data', 'model'))
+        with set_mesh(mesh):
             params = ad.init(jax.random.PRNGKey(0), tp=2)
             state = train_state_init(params)
             step = make_train_step(lambda p, b: ad.loss(p, b, remat=True),

@@ -1,7 +1,7 @@
 """Cycle-level engine invariants for both controllers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _proptest import given, settings, strategies as st
 
 from repro.core import engine as eng
 
@@ -95,6 +95,47 @@ def test_interleaved_streams_inflate_acts():
     kb_mixed = 32 * (1 << 14) / 1024
     assert mixed.cmd_counts["ACT"] / kb_mixed > \
         2.0 * solo.cmd_counts["ACT"] / kb_solo
+
+
+def test_rome_sparse_arrivals_refresh_paced():
+    """Regression (idle-advance): with sparse arrivals the sim must jump
+    to min(next arrival, next refresh due) — refreshes due inside an idle
+    gap are issued in the gap, so the postponement backlog stays within
+    the JEDEC bound instead of piling up behind the next arrival."""
+    sim = eng.RoMeChannelSim()
+    period = 2 * sim.t.tREFIpb
+    gap = 40 * period                       # 40 refreshes due per gap
+    txns = [eng.Txn(arrival_ns=i * gap, bank=i % sim.n_vbas, row=i)
+            for i in range(4)]
+    r = sim.run(txns)
+    assert r.cmd_counts["ref_backlog_max"] <= sim.max_ref_postpone
+    # Refresh kept pace with wall-clock across the whole span (one
+    # VBA-paired REFpb counts 2; slack = postponement cap + final partial).
+    span = 3 * gap
+    assert r.cmd_counts["REFpb"] >= 2 * (span // period - sim.max_ref_postpone)
+    assert np.all(np.isfinite(r.finish_ns)) and np.all(np.diff(r.finish_ns) > 0)
+
+
+def test_hbm4_sparse_arrivals_refresh_paced():
+    """Same idle-advance property for the conventional controller."""
+    sim = eng.HBM4ChannelSim()
+    gap = 40 * sim.t.tREFIpb
+    txns = [eng.Txn(arrival_ns=i * gap, bank=i % sim.n_banks, row=i)
+            for i in range(4)]
+    r = sim.run(txns)
+    assert r.cmd_counts["ref_backlog_max"] <= sim.max_ref_postpone
+    assert np.all(np.isfinite(r.finish_ns)) and np.all(r.finish_ns > 0)
+
+
+def test_duplicate_txns_each_complete_once():
+    """Field-identical transactions are distinct requests: dequeue is by
+    identity, so each must complete exactly once, at distinct times."""
+    for sim in (eng.RoMeChannelSim(refresh=False),
+                eng.HBM4ChannelSim(refresh=False)):
+        txns = [eng.Txn(arrival_ns=0.0, bank=0, row=0) for _ in range(3)]
+        r = sim.run(txns)
+        assert np.all(r.finish_ns > 0)
+        assert len(np.unique(r.finish_ns)) == 3
 
 
 @settings(deadline=None, max_examples=20)

@@ -4,8 +4,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.compat.hlo import normalize_cost_analysis
 from repro.launch.hlo_analysis import (HloModule, analyze_hlo, shape_bytes,
-                                       _parse_instr_line)
+                                       xla_cost_analysis, _parse_instr_line)
 
 
 def test_shape_bytes():
@@ -77,11 +78,20 @@ def test_cost_analysis_counts_while_once():
 
     xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     c = jax.jit(f).lower(xs, xs).compile()
-    xla_flops = c.cost_analysis()["flops"]
+    xla_flops = xla_cost_analysis(c)["flops"]
     ours = analyze_hlo(c.as_text()).flops
     per_iter = 2 * 64 ** 3
     assert xla_flops < 2 * per_iter          # counted once
     assert ours == pytest.approx(10 * per_iter, rel=0.01)
+
+
+def test_normalize_cost_analysis_shapes():
+    """Both historical return shapes of Compiled.cost_analysis() normalize
+    to the same flat dict."""
+    assert normalize_cost_analysis({"flops": 2.0}) == {"flops": 2.0}
+    assert normalize_cost_analysis([{"flops": 2.0}]) == {"flops": 2.0}
+    assert normalize_cost_analysis([]) == {}
+    assert normalize_cost_analysis(None) == {}
 
 
 def test_real_module_collective_symbols():

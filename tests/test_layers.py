@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _proptest import given, settings, strategies as st
 
 from repro.core.energy import EnergyParams, hbm4_energy, rome_energy
 from repro.models.layers import (apply_rope, attention_scores, causal_mask,

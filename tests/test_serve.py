@@ -1,7 +1,7 @@
 """Serving layer: row-paged KV cache invariants + continuous batching."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _proptest import given, settings, strategies as st
 
 from repro.serve.batching import ContinuousBatcher, Request
 from repro.serve.kv_cache import ROW_BYTES, RowPagedKVCache, tokens_per_row

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _proptest import given, settings, strategies as st
 
 from repro.train.grad_compress import (ErrorFeedback, compress_int8,
                                        compress_tree, decompress_int8,
