@@ -1,10 +1,16 @@
 """Cross-validation: vectorized analytic service-time model vs the
-cycle-level engine on overlapping regimes (DESIGN.md §2 requirement).
+cycle-level engine (DESIGN.md §2 requirement), at two levels:
+
+1. single-channel bulk streams (the calibration regime itself), and
+2. multi-channel (addr, nbytes) extents through :class:`SystemSim` — the
+   extent-level path the TPOT model consumes, checked against
+   ``analytic.transfer_time_ns`` for reads and writes.
 """
 from __future__ import annotations
 
-from repro.core import analytic, engine as eng
-from repro.core.address_map import make_address_map
+from repro.core import analytic
+from repro.core import sched as eng
+from repro.core.system_sim import SystemSim, bulk_stream_extents
 from repro.core.timing import hbm4_config, rome_config
 
 
@@ -23,8 +29,6 @@ def run() -> dict:
         for nbytes in (1 << 16, 1 << 18, 1 << 20):
             r = sim.run(mk(nbytes))
             engine_ns = r.total_ns
-            amap = make_address_map(cfg, n_cubes=1)
-            # Single-channel view: scale to the one channel being modeled.
             eff = analytic.calibrate(cfg)
             e = eff.read_eff
             analytic_ns = nbytes / (cfg.channel_bw_gbps * e)
@@ -34,6 +38,27 @@ def run() -> dict:
                             "rel_err": round(rel, 4)}
             assert rel < 0.08, (name, nbytes, rel)
         out[name] = rows
+
+    # Extent-level: SystemSim vs transfer_time_ns on multi-channel
+    # bulk-stream regimes (reads and writes).
+    sysrows = {}
+    for name, cfg in (("hbm4", hbm4_config()), ("rome", rome_config())):
+        for nch, extents, is_write in (
+                (2, bulk_stream_extents(1 << 18), False),
+                (4, bulk_stream_extents(1 << 19, n_extents=2), False),
+                (2, bulk_stream_extents(1 << 18), True)):
+            sim = SystemSim(cfg, n_channels=nch)
+            r = sim.run_extents(extents, is_write=is_write)
+            ana = analytic.transfer_time_ns(extents, cfg, sim.amap,
+                                            is_write=is_write)
+            rel = abs(r.total_ns - ana) / r.total_ns
+            key = f"{name}_ch{nch}_{'wr' if is_write else 'rd'}"
+            sysrows[key] = {"system_ns": round(r.total_ns, 1),
+                            "analytic_ns": round(ana, 1),
+                            "lbr": round(r.load_balance_ratio, 4),
+                            "rel_err": round(rel, 4)}
+            assert rel < 0.10, (key, rel)
+    out["system_sim"] = sysrows
     return out
 
 

@@ -11,7 +11,7 @@ Asserts the structural properties the paper specifies:
 """
 from __future__ import annotations
 
-from repro.core import CommandGenerator, HBM4Timing, RoMeTiming
+from repro.core import CommandGenerator, HBM4Timing, RoMeRowPolicy, RoMeTiming
 
 
 def run() -> dict:
@@ -35,6 +35,15 @@ def run() -> dict:
     d_rd = cg.derived_tRD_row()
     d_wr = cg.derived_tWR_row()
     d_r2rs = cg.derived_tR2RS()
+
+    # The schedules the running RoMe policy services transactions with
+    # must be these same static expansions (the policy delegates all
+    # intra-row sequencing to the command generator).
+    pol = RoMeRowPolicy()
+    assert pol._sched_rd.last_data_ns == rd.last_data_ns
+    assert pol._sched_wr.last_data_ns == wr.last_data_ns
+    assert pol._bursts == 2 * cg.bursts_per_bank() == 64
+
     return {
         "rd_schedule_first3": [repr(c) for c in rd.commands[:3]],
         "derived_tRD_row_ns": d_rd, "table_tRD_row_ns": table_v.tRD_row,

@@ -7,7 +7,7 @@ baseline's 18 pins; the freed pins fund 4 extra channels (+12 pins).
 """
 from __future__ import annotations
 
-from repro.core import (command_issue_latency_ns, extra_channels,
+from repro.core import (RoMeTiming, command_issue_latency_ns, extra_channels,
                         freed_pins_per_channel, min_ca_pins,
                         min_required_interval_ns)
 from repro.core.command_generator import HBM4_CA_PINS, ROME_CA_PINS
@@ -20,6 +20,15 @@ def run() -> dict:
     n_extra, extra_pins = extra_channels()
     assert n_min == ROME_CA_PINS == 5
     assert curve[5] < lim <= curve[4]
+    # Sanity vs the scheduler policy's own pacing: the tightest Table III
+    # row-to-row gap the RoMe policy ever enforces (tX2XS/tX2XR >= 64 ns)
+    # is far above the 5-pin issue latency, so for data commands C/A
+    # serialization is never the bottleneck — only the REF-after-row case
+    # (2*tRRDS) binds, which is exactly `lim`.
+    t = RoMeTiming()
+    min_gap = min(t.tR2RS, t.tR2RR, t.tR2WS, t.tR2WR,
+                  t.tW2RS, t.tW2RR, t.tW2WS, t.tW2WR)
+    assert curve[5] < lim < min_gap
     assert freed_pins_per_channel() == 13
     assert n_extra == 4 and extra_pins == 12
     reduction = 1 - ROME_CA_PINS / HBM4_CA_PINS

@@ -6,9 +6,10 @@ RoMe saturates with a depth of TWO (tR2RS:tRD_row < 2x).
 """
 from __future__ import annotations
 
-from repro.core import engine as eng
+from repro.core import sched as eng
 
 HBM4_DEPTHS = (2, 4, 8, 16, 32, 45, 64, 96)
+CLOSED_DEPTHS = (2, 16, 64)
 ROME_DEPTHS = (1, 2, 3, 4, 8)
 NBYTES = 1 << 18
 
@@ -23,6 +24,15 @@ def run() -> dict:
         r = sim.run(eng.sequential_read_txns_hbm4(NBYTES,
                                                   layout="row_linear"))
         hbm4[d] = r.bandwidth_gbps / sim.g.bandwidth_gbps
+    closed = {}
+    for d in CLOSED_DEPTHS:
+        # Closed-page comparison point: sheds the row-locality state but
+        # pays ACT+PRE per 32 B column — simplicity without RoMe's
+        # granularity change caps far below peak at every depth.
+        sim = eng.HBM4ClosedPageChannelSim(queue_depth=d, refresh=False)
+        r = sim.run(eng.sequential_read_txns_hbm4(NBYTES // 8,
+                                                  layout="row_linear"))
+        closed[d] = r.bandwidth_gbps / sim.g.bandwidth_gbps
     rome = {}
     for d in ROME_DEPTHS:
         sim = eng.RoMeChannelSim(queue_depth=d, refresh=False)
@@ -34,8 +44,12 @@ def run() -> dict:
     assert rome[2] >= max(hbm4.values()) - 0.02
     # Shallow HBM4 queues lose substantial bandwidth.
     assert hbm4[2] < 0.70 * max(hbm4.values()), hbm4
+    # Closed page never saturates: always-precharge at column granularity.
+    assert max(closed.values()) < 0.5 * max(hbm4.values()), closed
     return {
         "hbm4_eff_by_depth": {k: round(v, 4) for k, v in hbm4.items()},
+        "hbm4_closed_eff_by_depth": {k: round(v, 4)
+                                     for k, v in closed.items()},
         "rome_eff_by_depth": {k: round(v, 4) for k, v in rome.items()},
         "rome_saturation_depth": min(d for d, e in rome.items()
                                      if e >= 0.95),

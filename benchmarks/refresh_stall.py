@@ -8,7 +8,7 @@ Also measures the end-to-end bandwidth cost of refresh for both systems.
 from __future__ import annotations
 
 from repro.core import CommandGenerator
-from repro.core import engine as eng
+from repro.core import sched as eng
 
 
 def run() -> dict:

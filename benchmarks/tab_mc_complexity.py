@@ -1,11 +1,17 @@
 """Table IV: MC complexity — timing params, bank FSMs, bank states, page
 policy, scheduling — plus the §VI-C area ratio (RoMe scheduler = 9.1 % of
 conventional).
+
+Two independent sources must agree: the architectural census in
+``repro.core.mc`` (prose facts) and the *introspected* state footprint of
+the scheduler policies that actually run in the engine
+(``SchedulerPolicy.state_footprint()``).
 """
 from __future__ import annotations
 
-from repro.core import (conventional_mc_complexity, max_concurrent_refreshing,
-                        rome_mc_complexity)
+from repro.core import (FRFCFSOpenPagePolicy, RoMeRowPolicy,
+                        complexity_of_policy, conventional_mc_complexity,
+                        max_concurrent_refreshing, rome_mc_complexity)
 from repro.core.area import (command_generator_overhead_frac,
                              conventional_mc_area, mc_area_ratio,
                              rome_mc_area)
@@ -17,6 +23,16 @@ def run() -> dict:
     assert h.n_timing_params == 15 and r.n_timing_params == 10
     assert h.n_bank_states == 7 and r.n_bank_states == 4
     assert r.n_bank_fsms == 5
+    # The running schedulers must report the same census they are claimed
+    # to have (one engine, N policies — the contrast is structural).
+    hp = complexity_of_policy(FRFCFSOpenPagePolicy(), h.request_queue_depth)
+    rp = complexity_of_policy(RoMeRowPolicy(), r.request_queue_depth)
+    for census, pol in ((h, hp), (r, rp)):
+        assert (census.n_timing_params, census.n_bank_fsms,
+                census.n_bank_states, census.page_policy,
+                census.scheduling) == \
+               (pol.n_timing_params, pol.n_bank_fsms,
+                pol.n_bank_states, pol.page_policy, pol.scheduling)
     # 2 active + up to 3 refreshing concurrently = 5 FSMs (§V-A)
     assert 2 + max_concurrent_refreshing() == r.n_bank_fsms
     ratio = mc_area_ratio()

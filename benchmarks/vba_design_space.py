@@ -9,7 +9,7 @@ only point with NO internal DRAM change, and is adopted.
 from __future__ import annotations
 
 from repro.core import ADOPTED, ALL_VBA_CONFIGS
-from repro.core import engine as eng
+from repro.core import sched as eng
 
 
 def run() -> dict:

@@ -3,16 +3,21 @@ to end):
 
     PYTHONPATH=src python examples/rome_vs_hbm4.py
 
-1. calibrates both controllers with the cycle-level engine,
-2. builds per-device layer-op traces for the three paper LLMs,
-3. reports TPOT (Fig 12), LBR (Fig 13), and energy (Fig 14) side by side.
+1. calibrates both controllers with the cycle-level engine (one shared
+   scheduler core, per-controller policies — repro.core.sched),
+2. cross-checks the extent-level analytic model against the multi-channel
+   SystemSim ground truth,
+3. builds per-device layer-op traces for the three paper LLMs,
+4. reports TPOT (Fig 12), LBR (Fig 13), and energy (Fig 14) side by side.
 """
 import sys
 
 sys.path.insert(0, "src")
 
 from repro.configs.paper_workloads import PAPER_WORKLOADS
-from repro.core.analytic import calibrate_hbm4, calibrate_rome
+from repro.core.analytic import calibrate_hbm4, calibrate_rome, transfer_time_ns
+from repro.core.system_sim import SystemSim, bulk_stream_extents
+from repro.core.timing import hbm4_config, rome_config
 from repro.perfmodel.accelerator import paper_accelerator
 from repro.perfmodel.energy_model import decode_energy
 from repro.perfmodel.lbr import lbr_by_kind
@@ -25,6 +30,17 @@ def main():
     print(f"HBM4: read eff {h.read_eff:.3f}, ACT/KB {h.act_per_kb:.2f}")
     print(f"RoMe: read eff {r.read_eff:.3f}, ACT/KB {r.act_per_kb:.2f} "
           f"(structural minimum: 0.5)")
+
+    print("\n=== extent-level ground truth (multi-channel SystemSim) ===")
+    extents = bulk_stream_extents(1 << 18)
+    for name, cfg in (("HBM4", hbm4_config()), ("RoMe", rome_config())):
+        sim = SystemSim(cfg, n_channels=2)
+        res = sim.run_extents(extents)
+        ana = transfer_time_ns(extents, cfg, sim.amap)
+        print(f"{name}: 256 KB over 2 channels — SystemSim "
+              f"{res.total_ns:.0f} ns ({res.bandwidth_gbps:.1f} GB/s, "
+              f"LBR {res.load_balance_ratio:.3f}) vs analytic "
+              f"{ana:.0f} ns ({abs(res.total_ns - ana) / res.total_ns:.1%} off)")
 
     acc_h, acc_r = paper_accelerator("hbm4"), paper_accelerator("rome")
     for name, w in PAPER_WORKLOADS.items():

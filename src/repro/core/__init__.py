@@ -12,10 +12,16 @@ from .command_generator import (CommandGenerator, command_issue_latency_ns,
                                 extra_channels, freed_pins_per_channel,
                                 min_ca_pins, min_required_interval_ns)
 from .energy import EnergyBreakdown, EnergyParams, hbm4_energy, rome_energy
-from .engine import (HBM4ChannelSim, RoMeChannelSim, SimResult, Txn,
-                     sequential_read_txns_hbm4, sequential_read_txns_rome)
-from .mc import (MCComplexity, conventional_mc_complexity,
-                 max_concurrent_refreshing, rome_mc_complexity)
+from .mc import (MCComplexity, complexity_of_policy,
+                 conventional_mc_complexity, max_concurrent_refreshing,
+                 rome_mc_complexity)
+from .sched import (ChannelSimCore, FRFCFSOpenPagePolicy,
+                    HBM4ChannelSim, HBM4ClosedPagePolicy,
+                    HBM4ClosedPageChannelSim, RoMeChannelSim, RoMeRowPolicy,
+                    SchedulerPolicy, SimResult, Txn,
+                    interleaved_stream_txns_hbm4, make_channel_sim,
+                    sequential_read_txns_hbm4, sequential_read_txns_rome)
+from .system_sim import SystemResult, SystemSim, bulk_stream_extents
 from .timing import (ChannelGeometry, CubeGeometry, HBM4Timing,
                      MemSystemConfig, RoMeTiming, hbm4_config, rome_config)
 from .vba import ADOPTED, ALL_VBA_CONFIGS, BankMode, PCMode, VBAConfig
@@ -27,9 +33,14 @@ __all__ = [
     "CommandGenerator", "command_issue_latency_ns", "extra_channels",
     "freed_pins_per_channel", "min_ca_pins", "min_required_interval_ns",
     "EnergyBreakdown", "EnergyParams", "hbm4_energy", "rome_energy",
-    "HBM4ChannelSim", "RoMeChannelSim", "SimResult", "Txn",
+    "ChannelSimCore", "SchedulerPolicy", "FRFCFSOpenPagePolicy",
+    "HBM4ClosedPagePolicy", "RoMeRowPolicy", "make_channel_sim",
+    "HBM4ChannelSim", "HBM4ClosedPageChannelSim", "RoMeChannelSim",
+    "SimResult", "Txn",
     "sequential_read_txns_hbm4", "sequential_read_txns_rome",
-    "MCComplexity", "conventional_mc_complexity",
+    "interleaved_stream_txns_hbm4",
+    "SystemSim", "SystemResult", "bulk_stream_extents",
+    "MCComplexity", "complexity_of_policy", "conventional_mc_complexity",
     "max_concurrent_refreshing", "rome_mc_complexity",
     "ChannelGeometry", "CubeGeometry", "HBM4Timing", "MemSystemConfig",
     "RoMeTiming", "hbm4_config", "rome_config",

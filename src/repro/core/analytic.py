@@ -16,9 +16,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from . import engine as eng
+from . import sched as eng
 from .address_map import AddressMap, channel_bytes
-from .timing import MemSystemConfig, hbm4_config, rome_config
+from .timing import HBM4Timing, MemSystemConfig, hbm4_config, rome_config
 
 
 @dataclass(frozen=True)
@@ -94,7 +94,16 @@ def transfer_time_ns(extents: list[tuple[int, int]], cfg: MemSystemConfig,
     Completion is gated by the most-loaded channel (LBR effect, Fig 13);
     each channel streams at `eff` fraction of peak. `act_inflation`
     multiplies the calibrated ACT rate for interleaved-stream row conflicts
-    (conventional MC only; RoMe's ACT count is structural).
+    (conventional MC only; RoMe's ACT count is structural): the gating
+    channel's time is the max of its column-bus time and its row-command
+    (ACT) time, so once re-activations push the ACT rate past the row bus's
+    issue capacity the transfer becomes ACT-bound. Pass the measured
+    multiplier from :func:`repro.perfmodel.energy_model.act_inflation`
+    (ACT/KB relative to the 1/KB structural minimum) — the same curve that
+    drives the Fig 14 energy accounting.
+
+    Cross-validated at the extent level against
+    :class:`repro.core.system_sim.SystemSim` in tests/test_core_memory.py.
     """
     eff = eff or calibrate(cfg)
     e = eff.write_eff if is_write else eff.read_eff
@@ -107,7 +116,20 @@ def transfer_time_ns(extents: list[tuple[int, int]], cfg: MemSystemConfig,
     if cfg.ag_mc_bytes >= cfg.row_bytes:
         rows = np.ceil(max_bytes / cfg.row_bytes)
         max_bytes = float(rows) * cfg.row_bytes
-    return max_bytes / bw
+        return max_bytes / bw
+    col_ns = max_bytes / bw
+    if act_inflation > 1.0:
+        # Row-command-path roofline: each PC sustains one ACT per
+        # max(tRRDS, tFAW/4); inflated ACT counts saturate that before the
+        # column bus once streams interleave heavily (cf. the measured
+        # act_inflation_curve and Fig 14).
+        t = HBM4Timing()
+        n_acts = eff.act_per_kb * act_inflation * (max_bytes / 1024.0)
+        act_slot_ns = max(t.tRRDS, t.tFAW / 4.0)
+        pcs = cfg.geometry.channel.pseudo_channels
+        act_ns = n_acts * act_slot_ns / pcs
+        return max(col_ns, act_ns)
+    return col_ns
 
 
 def stream_bandwidth_gbps(cfg: MemSystemConfig, n_cubes: int = 8,

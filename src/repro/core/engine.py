@@ -1,593 +1,44 @@
-"""Event-driven per-channel cycle-level simulator (Ramulator-lite).
+"""Compatibility facade over :mod:`repro.core.sched`.
 
-Two controller models share a common transaction format:
+The cycle-level channel simulators used to live here as two
+hand-duplicated ~130-line ``run()`` loops; they are now a single shared
+event loop (:class:`repro.core.sched.ChannelSimCore`) driven by pluggable
+:class:`~repro.core.sched.SchedulerPolicy` implementations:
 
-* :class:`HBM4ChannelSim` — conventional MC: FR-FCFS over a bounded CAM
-  request queue, open-page policy, 7-state bank FSM semantics, bank-group /
-  pseudo-channel interleaving, tFAW/tRRD/tCCD/turnaround constraints,
-  rotating per-bank refresh.
-* :class:`RoMeChannelSim` — the paper's MC: three commands (RD_row, WR_row,
-  REF), 4-state VBA FSM, oldest-first VBA interleaving, a queue of depth 2-4,
-  VBA-paired refresh (§V-B). All intra-row sequencing is delegated to the
-  command generator (statically timed), so the sim only enforces the ten
-  Table III row-to-row gaps.
+* :class:`HBM4ChannelSim` — ``FRFCFSOpenPagePolicy``: FR-FCFS over a
+  bounded CAM request queue, open-page policy, 7-state bank FSM semantics,
+  bank-group / pseudo-channel interleaving, tFAW/tRRD/tCCD (incl. the
+  cross-SID tCCDR) and turnaround constraints, rotating per-bank refresh.
+  ``page_policy="closed"`` selects the auto-precharge variant.
+* :class:`RoMeChannelSim` — ``RoMeRowPolicy``: three commands (RD_row,
+  WR_row, REF), 4-state VBA FSM, oldest-first VBA interleaving, a queue of
+  depth 2-4, VBA-paired refresh (§V-B). Intra-row sequencing is delegated
+  to the statically-timed command generator, so the policy only enforces
+  the ten Table III row-to-row gaps.
 
-The engine is used for µbenchmarks (Fig 9/10 validation, queue-depth sweep,
-VBA design space) and to calibrate the vectorized analytic model used by the
-TPOT reproduction. Transactions are one AG_MC unit each (32 B vs 4 KB).
+This module re-exports the whole legacy surface (sims, ``Txn``,
+``SimResult``, ``_PendingQueue``, trace helpers) so existing imports keep
+working unchanged; new code should import from :mod:`repro.core.sched`
+(policies, factory, introspection) and :mod:`repro.core.system_sim`
+(multi-channel extent-level runs). The engine backs the µbenchmarks
+(Fig 9/10 validation, queue-depth sweep, VBA design space) and calibrates
+the vectorized analytic model used by the TPOT reproduction.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from itertools import islice
-
-import numpy as np
-
-from .command_generator import CommandGenerator
-from .timing import ChannelGeometry, HBM4Timing, RoMeTiming
-
-
-@dataclass
-class Txn:
-    """One memory transaction at MC access granularity."""
-
-    arrival_ns: float
-    bank: int           # flat bank id within the channel (HBM4) / VBA id (RoMe)
-    row: int
-    col: int = 0        # column index within the row (HBM4 only)
-    is_write: bool = False
-    sid: int = 0        # stack id (rank)
-    stream: int = 0     # software stream tag (for stats only)
-
-
-@dataclass
-class SimResult:
-    finish_ns: np.ndarray          # completion time per txn (input order)
-    total_ns: float                # makespan
-    bytes_moved: int
-    cmd_counts: dict = field(default_factory=dict)  # ACT/RD/WR/PRE/REF/row cmds
-
-    @property
-    def bandwidth_gbps(self) -> float:
-        if self.total_ns <= 0:
-            return 0.0
-        return self.bytes_moved / self.total_ns  # B/ns == GB/s
-
-
-class _PendingQueue:
-    """Arrival-ordered outstanding transactions with O(1) dequeue.
-
-    ``list.remove`` made every dequeue O(n) worst-case in the number of
-    outstanding transactions — and, because it matches by dataclass
-    equality, it removed the *wrong object* when two field-identical
-    transactions were in flight (one got serviced twice, the other
-    never). Removal here is by identity: tombstone the slot via an
-    id->slot map, with a head cursor that skips tombstones. The scheduler
-    only removes transactions inside the first ``queue_depth`` live
-    entries, so at most ``queue_depth`` interior tombstones exist at any
-    time and every window scan is O(queue_depth); with no interior
-    tombstones (the common head-of-queue dequeue) the window is a plain
-    list slice."""
-
-    __slots__ = ("_slots", "_pos", "_head", "_n", "_tomb")
-
-    def __init__(self, txns: list):
-        self._slots = list(txns)
-        self._pos = {id(tx): i for i, tx in enumerate(self._slots)}
-        if len(self._pos) != len(self._slots):
-            raise ValueError(
-                "trace contains the same Txn object more than once; pass "
-                "distinct Txn instances (field-identical copies are fine)")
-        self._head = 0
-        self._n = len(self._slots)
-        self._tomb = 0                 # tombstones at index >= _head
-
-    def __len__(self) -> int:
-        return self._n
-
-    def __bool__(self) -> bool:
-        return self._n > 0
-
-    def _skip_tombstones(self) -> None:
-        slots, h = self._slots, self._head
-        while h < len(slots) and slots[h] is None:
-            h += 1
-            self._tomb -= 1
-        self._head = h
-
-    def head(self) -> Txn:
-        """Oldest outstanding transaction."""
-        self._skip_tombstones()
-        return self._slots[self._head]
-
-    def first(self, depth: int) -> list:
-        """The scheduler window: up to `depth` oldest live transactions."""
-        self._skip_tombstones()
-        slots, h, tomb = self._slots, self._head, self._tomb
-        if tomb == 0:
-            return slots[h:h + depth]
-        # Every tombstone index t satisfies t < h + depth + tomb (removals
-        # only happen inside the window), so this slice is guaranteed to
-        # contain the full window; filter/islice keep the scan in C.
-        return list(islice(filter(None, slots[h:h + depth + tomb]), depth))
-
-    def remove(self, tx: Txn) -> None:
-        self._slots[self._pos.pop(id(tx))] = None
-        self._n -= 1
-        self._tomb += 1
-
-
-# ===========================================================================
-# Conventional HBM4 channel
-# ===========================================================================
-
-class _BankState:
-    __slots__ = ("open_row", "t_act", "t_last_rd", "t_last_wr_data",
-                 "t_rp_done", "t_ref_done")
-
-    def __init__(self) -> None:
-        self.open_row: int | None = None
-        self.t_act = -1e18
-        self.t_last_rd = -1e18
-        self.t_last_wr_data = -1e18
-        self.t_rp_done = 0.0
-        self.t_ref_done = 0.0
-
-
-class HBM4ChannelSim:
-    """One HBM4 channel = 2 pseudo channels, simulated jointly.
-
-    Each PC owns half the DQ pins and its own banks; the two PCs share C/A
-    but we assume C/A is never the bottleneck for the baseline (it has 18
-    pins). Bank ids 0..127: pc = bank // 64, bank group = (bank % 64) // 4.
-    """
-
-    def __init__(self, timing: HBM4Timing | None = None,
-                 geometry: ChannelGeometry | None = None,
-                 queue_depth: int = 64,
-                 refresh: bool = True,
-                 max_ref_postpone: int = 8):
-        self.t = timing or HBM4Timing()
-        self.g = geometry or ChannelGeometry()
-        self.queue_depth = queue_depth
-        self.refresh = refresh
-        self.max_ref_postpone = max_ref_postpone
-        self.banks_per_pc = self.g.banks_per_pc
-        self.n_banks = self.g.banks_per_channel
-        self.burst_ns = self.g.burst_ns  # 32 B over one PC's pins
-
-    # -- helpers ---------------------------------------------------------------
-
-    def _bg(self, bank: int) -> int:
-        return (bank % self.banks_per_pc) // self.g.banks_per_group
-
-    def _pc(self, bank: int) -> int:
-        return bank // self.banks_per_pc
-
-    # -- main loop ---------------------------------------------------------
-
-    def run(self, txns: list[Txn]) -> SimResult:
-        t = self.t
-        order = sorted(range(len(txns)), key=lambda i: txns[i].arrival_ns)
-        ordered = [txns[i] for i in order]
-        idx_in_finish = {id(tx): order[k] for k, tx in enumerate(ordered)}
-        pending = _PendingQueue(ordered)
-        finish = np.zeros(len(txns))
-        banks = [_BankState() for _ in range(self.n_banks)]
-        # Per-PC shared resources.
-        pc_bus_free = [0.0, 0.0]              # DQ bus next-free
-        pc_last_burst = [-1e18, -1e18]        # last RD/WR cmd time (tCCDS)
-        pc_last_burst_bg = [dict(), dict()]   # bg -> last cmd time (tCCDL)
-        pc_last_burst_sid = [dict(), dict()]  # sid -> last cmd time (tCCDR)
-        pc_last_was_write = [False, False]
-        pc_last_rd_cmd = [-1e18, -1e18]
-        pc_last_wr_data_end = [-1e18, -1e18]
-        pc_act_times = [[], []]               # for tFAW (per PC)
-        pc_last_act = [-1e18, -1e18]          # tRRDS
-        pc_last_act_bg = [dict(), dict()]     # tRRDL
-        counts = {"ACT": 0, "RD": 0, "WR": 0, "PRE": 0, "REFpb": 0,
-                  "ca_commands": 0, "ref_backlog_max": 0}
-        # Rotating per-bank refresh.
-        next_ref_t = t.tREFIpb
-        next_ref_bank = 0
-        now = 0.0
-
-        def act_ready(bank_id: int, b: _BankState, at: float) -> float:
-            pc = self._pc(bank_id)
-            bg = self._bg(bank_id)
-            r = max(at, b.t_rp_done, b.t_ref_done,
-                    pc_last_act[pc] + t.tRRDS,
-                    pc_last_act_bg[pc].get(bg, -1e18) + t.tRRDL)
-            acts = pc_act_times[pc]
-            if len(acts) >= 4:
-                r = max(r, acts[-4] + t.tFAW)
-            return r
-
-        def col_ready(bank_id: int, b: _BankState, is_write: bool,
-                      at: float) -> float:
-            pc = self._pc(bank_id)
-            bg = self._bg(bank_id)
-            trcd = t.tRCDWR if is_write else t.tRCDRD
-            r = max(at, b.t_act + trcd, b.t_ref_done,
-                    pc_last_burst[pc] + t.tCCDS,
-                    pc_last_burst_bg[pc].get(bg, -1e18) + t.tCCDL)
-            if is_write and not pc_last_was_write[pc]:
-                r = max(r, pc_last_rd_cmd[pc] + t.tRTW)
-            if not is_write and pc_last_was_write[pc]:
-                r = max(r, pc_last_wr_data_end[pc] + t.tWTRS)
-            return r
-
-        def pre_ready(b: _BankState, at: float) -> float:
-            return max(at, b.t_act + t.tRAS, b.t_last_rd + t.tRTP,
-                       b.t_last_wr_data + t.tWR)
-
-        ref_backlog = 0
-
-        while pending:
-            qwin = pending.first(self.queue_depth)
-
-            # -- refresh: rotating REFpb with demand-aware postponement.
-            # A REFpb due for a bank with queued demand is postponed (JEDEC
-            # allows bounded postponement); once the backlog hits the cap it
-            # is forced regardless. Each issue is anchored at its own due
-            # time so refreshes of different banks may overlap. ---------------
-            while self.refresh and next_ref_t <= now:
-                ref_backlog += 1
-                next_ref_t += t.tREFIpb
-            counts["ref_backlog_max"] = max(counts["ref_backlog_max"],
-                                            ref_backlog)
-            while ref_backlog > 0:
-                demanded = any(tx.bank == next_ref_bank for tx in qwin)
-                if demanded and ref_backlog < self.max_ref_postpone:
-                    break
-                b = banks[next_ref_bank]
-                due = next_ref_t - ref_backlog * t.tREFIpb
-                start = max(due, b.t_rp_done, b.t_ref_done)
-                if b.open_row is not None:
-                    pr = pre_ready(b, start)
-                    b.t_rp_done = pr + t.tRP
-                    b.open_row = None
-                    counts["PRE"] += 1
-                    start = b.t_rp_done
-                b.t_ref_done = start + t.tRFCpb
-                counts["REFpb"] += 1
-                next_ref_bank = (next_ref_bank + 1) % self.n_banks
-                ref_backlog -= 1
-
-            # -- FR-FCFS over the queue window ---------------------------------
-            window = [tx for tx in qwin if tx.arrival_ns <= now]
-            if not window:
-                # Idle: jump to the next event — arrival OR refresh due —
-                # so refreshes due during a sparse-arrival gap are issued
-                # in the gap (bounded postponement) instead of piling up
-                # behind the next arrival.
-                cand = pending.head().arrival_ns
-                if self.refresh:
-                    cand = min(cand, next_ref_t)
-                now = max(now + 1e-9, cand)
-                continue
-
-            issued = False
-
-            # Row-bus work (runs concurrently with the column bus): progress
-            # the oldest row-miss whose bank's open row is no longer needed by
-            # any queued hit. This is what deep queues buy the conventional
-            # MC — lookahead to overlap ACT/PRE of upcoming rows with the
-            # bursts of the current ones.
-            prepared: set[int] = set()
-            for tx in window:
-                b = banks[tx.bank]
-                if b.open_row == tx.row or tx.bank in prepared:
-                    continue
-                if b.open_row is not None:
-                    # Keep a row open while queued hits still target it.
-                    if any(h.bank == tx.bank and h.row == b.open_row
-                           for h in window):
-                        prepared.add(tx.bank)
-                        continue
-                    pr = pre_ready(b, max(tx.arrival_ns, b.t_ref_done))
-                    b.t_rp_done = pr + t.tRP
-                    b.open_row = None
-                    counts["PRE"] += 1
-                    counts["ca_commands"] += 1
-                    now = max(now, pr)
-                else:
-                    ar = act_ready(tx.bank, b,
-                                   max(tx.arrival_ns, b.t_ref_done))
-                    pc = self._pc(tx.bank)
-                    bg = self._bg(tx.bank)
-                    b.t_act = ar
-                    b.open_row = tx.row
-                    pc_last_act[pc] = ar
-                    pc_last_act_bg[pc][bg] = ar
-                    pc_act_times[pc].append(ar)
-                    if len(pc_act_times[pc]) > 8:
-                        pc_act_times[pc] = pc_act_times[pc][-8:]
-                    counts["ACT"] += 1
-                    counts["ca_commands"] += 1
-                    now = max(now, ar)
-                prepared.add(tx.bank)
-                issued = True
-
-            # Column-bus work: earliest-ready row hit (FR), oldest on ties.
-            # Issue times are governed by per-resource clocks (bank readiness,
-            # per-PC burst spacing, DQ bus) — the column C/A path sustains one
-            # command per PC per tCCDS, so a pick may legally land before
-            # `now` (commands ride independent buses).
-            best = None
-            best_t = None
-            for tx in window:
-                b = banks[tx.bank]
-                if b.open_row == tx.row and b.t_act <= 1e17:
-                    r = col_ready(tx.bank, b, tx.is_write, tx.arrival_ns)
-                    if best_t is None or r < best_t - 1e-12:
-                        best, best_t = tx, r
-            if best is not None:
-                tx, r = best, best_t
-                b = banks[tx.bank]
-                pc = self._pc(tx.bank)
-                bg = self._bg(tx.bank)
-                lat = t.tCWL if tx.is_write else t.tCL
-                data_start = max(r + lat, pc_bus_free[pc])
-                # If the bus is the constraint, push the command time too.
-                cmd_t = data_start - lat
-                data_end = data_start + self.burst_ns
-                pc_bus_free[pc] = data_end
-                pc_last_burst[pc] = cmd_t
-                pc_last_burst_bg[pc][bg] = cmd_t
-                pc_last_burst_sid[pc][tx.sid] = cmd_t
-                pc_last_was_write[pc] = tx.is_write
-                counts["ca_commands"] += 1
-                if tx.is_write:
-                    b.t_last_wr_data = data_end
-                    pc_last_wr_data_end[pc] = data_end
-                    counts["WR"] += 1
-                else:
-                    b.t_last_rd = cmd_t
-                    pc_last_rd_cmd[pc] = cmd_t
-                    counts["RD"] += 1
-                finish[idx_in_finish[id(tx)]] = data_end
-                pending.remove(tx)
-                now = max(now, cmd_t)
-                issued = True
-
-            if not issued:
-                # Nothing issueable: jump to the next event (refresh or
-                # arrival) to guarantee progress.
-                nxt = [tx.arrival_ns for tx in qwin if tx.arrival_ns > now]
-                cand = min(nxt) if nxt else now + t.tREFIpb
-                if self.refresh:
-                    cand = min(cand, next_ref_t)
-                now = max(now + 1e-9, cand)
-
-        bytes_moved = len(txns) * self.g.col_bytes
-        return SimResult(finish, float(finish.max(initial=0.0)), bytes_moved,
-                         counts)
-
-
-# ===========================================================================
-# RoMe channel
-# ===========================================================================
-
-class RoMeChannelSim:
-    """RoMe MC + command generator for one channel (§V-A).
-
-    Queue of depth `queue_depth` (default 2 — the paper's saturation point),
-    oldest-first with VBA interleaving: avoid back-to-back commands to the
-    same VBA when another ready request exists. The Table III gaps are the
-    only timing state; per-VBA busy-until and refresh-until complete the
-    4-state FSM (Idle / Reading / Writing / Refreshing).
-    """
-
-    def __init__(self, timing: RoMeTiming | None = None,
-                 geometry: ChannelGeometry | None = None,
-                 n_vbas: int = 16,
-                 queue_depth: int = 2,
-                 refresh: bool = True,
-                 max_ref_postpone: int = 8):
-        self.t = timing or RoMeTiming()
-        self.g = geometry or ChannelGeometry()
-        self.n_vbas = n_vbas
-        self.queue_depth = queue_depth
-        self.refresh = refresh
-        self.max_ref_postpone = max_ref_postpone
-        self.row_bytes = self.g.row_bytes * 2 * self.g.pseudo_channels  # 4 KB
-        self._cg = CommandGenerator()
-
-    def run(self, txns: list[Txn]) -> SimResult:
-        t = self.t
-        order = sorted(range(len(txns)), key=lambda i: txns[i].arrival_ns)
-        ordered = [txns[i] for i in order]
-        idx_in_finish = {id(tx): order[k] for k, tx in enumerate(ordered)}
-        pending = _PendingQueue(ordered)
-        finish = np.zeros(len(txns))
-
-        vba_busy_until = np.zeros(self.n_vbas)   # Reading/Writing/Refreshing
-        last_cmd_t = -1e18
-        last_cmd_write = False
-        last_cmd_vba = -1
-        last_cmd_sid = -1
-        counts = {"ACT": 0, "RD": 0, "WR": 0, "PRE": 0, "REFpb": 0,
-                  "row_commands": 0, "ca_commands": 0, "ref_backlog_max": 0}
-        sched_rd = self._cg.expand(is_write=False)
-        sched_wr = self._cg.expand(is_write=True)
-        bursts = 2 * self._cg.bursts_per_bank()
-
-        # VBA-paired refresh every 2*tREFIpb, rotating (§V-B).
-        next_ref_t = 2 * t.tREFIpb
-        next_ref_vba = 0
-        now = 0.0
-
-        def start_time(tx: Txn, at: float) -> float:
-            r = max(at, tx.arrival_ns, vba_busy_until[tx.bank])
-            if last_cmd_t > -1e17:
-                gap = t.gap_ns(last_cmd_write, tx.is_write,
-                               same_vba=(tx.bank == last_cmd_vba),
-                               same_sid=(tx.sid == last_cmd_sid))
-                r = max(r, last_cmd_t + gap)
-            return r
-
-        ref_backlog = 0
-
-        while pending:
-            qwin = pending.first(self.queue_depth)
-
-            # VBA-paired refresh, anchored at due time (may overlap across
-            # VBAs — the paper's "up to three refreshing simultaneously"),
-            # with the same demand-aware bounded postponement as the baseline.
-            while self.refresh and next_ref_t <= now:
-                ref_backlog += 1
-                next_ref_t += 2 * t.tREFIpb
-            counts["ref_backlog_max"] = max(counts["ref_backlog_max"],
-                                            ref_backlog)
-            while ref_backlog > 0:
-                demanded = any(tx.bank == next_ref_vba for tx in qwin)
-                if demanded and ref_backlog < self.max_ref_postpone:
-                    break
-                v = next_ref_vba
-                due = next_ref_t - ref_backlog * 2 * t.tREFIpb
-                start = max(due, vba_busy_until[v])
-                vba_busy_until[v] = start + t.tRFCpb + t.tRREFpb
-                counts["REFpb"] += 2
-                counts["row_commands"] += 1
-                counts["ca_commands"] += 1
-                next_ref_vba = (next_ref_vba + 1) % self.n_vbas
-                ref_backlog -= 1
-
-            window = [tx for tx in qwin if tx.arrival_ns <= now]
-            if not window:
-                # Idle: jump to the next event — arrival OR refresh due —
-                # exactly like the conventional-MC path. Jumping straight to
-                # the next arrival would skip refreshes that come due during
-                # the gap, postponing them without bound behind the arrival
-                # instead of issuing them in the idle window.
-                cand = pending.head().arrival_ns
-                if self.refresh:
-                    cand = min(cand, next_ref_t)
-                now = max(now + 1e-9, cand)
-                continue
-
-            # Oldest-first with VBA interleaving: prefer a request whose VBA
-            # differs from the last-issued one if it is ready no later.
-            cands = [(start_time(tx, now), i, tx) for i, tx in enumerate(window)]
-            cands.sort(key=lambda c: (c[0], c[1]))
-            best_t, _, best = cands[0]
-            for ct, _, tx in cands:
-                if tx.bank != last_cmd_vba and ct <= best_t + 1e-9:
-                    best_t, best = ct, tx
-                    break
-
-            sched = sched_wr if best.is_write else sched_rd
-            svc = t.tWR_row if best.is_write else t.tRD_row
-            vba_busy_until[best.bank] = best_t + svc
-            last_cmd_t = best_t
-            last_cmd_write = best.is_write
-            last_cmd_vba = best.bank
-            last_cmd_sid = best.sid
-            counts["ACT"] += 2
-            counts["PRE"] += 2
-            counts["WR" if best.is_write else "RD"] += bursts
-            counts["row_commands"] += 1
-            counts["ca_commands"] += 1
-            finish[idx_in_finish[id(best)]] = best_t + sched.last_data_ns
-            pending.remove(best)
-            now = max(now, best_t)
-
-        bytes_moved = len(txns) * self.row_bytes
-        return SimResult(finish, float(finish.max(initial=0.0)), bytes_moved,
-                         counts)
-
-
-# ===========================================================================
-# Trace helpers
-# ===========================================================================
-
-def sequential_read_txns_hbm4(nbytes: int, geometry: ChannelGeometry | None = None,
-                              arrival_ns: float = 0.0,
-                              is_write: bool = False,
-                              layout: str = "bg_striped") -> list[Txn]:
-    """Channel-local sequential stream decomposed into 32 B column txns.
-
-    ``layout`` selects the address map within the channel:
-
-    * ``"bg_striped"`` — consecutive 32 B units alternate pseudo channels,
-      then rotate bank groups (so bursts mesh at tCCDS, not tCCDL), then fill
-      columns of a row; banks within a bank group ping-pong across row
-      boundaries to hide tRC. This is the bandwidth-maximizing sweep winner
-      (§VI-A) and needs only modest queue lookahead.
-    * ``"row_linear"`` — consecutive units fill one bank's row before moving
-      to the next bank group's row (page-interleaved map, classic open-page
-      streaming). A single row drains at tCCDL (half rate); saturation
-      *requires* the scheduler to interleave bursts from ≥2 open rows in
-      different bank groups, i.e. a queue that spans multiple rows — this is
-      the regime behind the paper's "HBM4 requires ≥45 entries" claim.
-    """
-    g = geometry or ChannelGeometry()
-    txns: list[Txn] = []
-    n_units = nbytes // g.col_bytes
-    nbg = g.bank_groups
-    cols = g.cols_per_row
-    for u in range(n_units):
-        pc = u % g.pseudo_channels
-        j = u // g.pseudo_channels          # unit index within the PC
-        if layout == "bg_striped":
-            bg = j % nbg
-            k = j // nbg                    # burst index within this BG's stream
-            col = k % cols
-            rseq = k // cols                # row sequence number within BG
-        elif layout == "row_linear":
-            col = j % cols
-            rrun = j // cols                # consecutive rows
-            bg = rrun % nbg
-            rseq = rrun // nbg
-        else:
-            raise ValueError(f"unknown layout {layout!r}")
-        bank_in_bg = rseq % g.banks_per_group
-        row = rseq // g.banks_per_group
-        bank = pc * g.banks_per_pc + bg * g.banks_per_group + bank_in_bg
-        txns.append(Txn(arrival_ns, bank=bank, row=row, col=col,
-                        is_write=is_write))
-    return txns
-
-
-def sequential_read_txns_rome(nbytes: int, n_vbas: int = 16,
-                              arrival_ns: float = 0.0,
-                              is_write: bool = False,
-                              row_bytes: int = 4096) -> list[Txn]:
-    """Channel-local sequential stream as 4 KB row transactions striped
-    across VBAs."""
-    n_rows = (nbytes + row_bytes - 1) // row_bytes
-    return [Txn(arrival_ns, bank=r % n_vbas, row=r // n_vbas,
-                is_write=is_write) for r in range(n_rows)]
-
-
-def interleaved_stream_txns_hbm4(n_streams: int, nbytes_each: int,
-                                 geometry: ChannelGeometry | None = None,
-                                 seed: int = 0) -> list[Txn]:
-    """N concurrent sequential streams interleaved round-robin at 32 B
-    granularity (as concurrent GEMM operands / expert streams arrive at the
-    MC). Each stream is row_linear with its own bank/row phase. This is the
-    ACT-inflation workload: with many streams the per-stream queue window
-    shrinks below a row's 32 columns, so rows are served in several visits
-    and intervening same-bank activity forces re-activations — the effect
-    RoMe eliminates structurally (one RD_row = whole row, §VI-C / Fig 14).
-    """
-    g = geometry or ChannelGeometry()
-    rng = np.random.default_rng(seed)
-    streams = []
-    for s in range(n_streams):
-        txns = sequential_read_txns_hbm4(nbytes_each, g, layout="row_linear")
-        # random bank-group/bank/row phase per stream
-        bank_off = int(rng.integers(0, g.banks_per_channel))
-        row_off = int(rng.integers(0, 1 << 12))
-        for t in txns:
-            t.bank = (t.bank + bank_off) % g.banks_per_channel
-            t.row = t.row + row_off
-            t.stream = s
-        streams.append(txns)
-    out: list[Txn] = []
-    for i in range(max(len(s) for s in streams)):
-        for s in streams:
-            if i < len(s):
-                out.append(s[i])
-    return out
+from .sched import (ChannelSimCore, FRFCFSOpenPagePolicy,
+                    HBM4ChannelSim, HBM4ClosedPagePolicy,
+                    HBM4ClosedPageChannelSim, RoMeChannelSim, RoMeRowPolicy,
+                    SchedulerPolicy, SimResult, Txn, _PendingQueue,
+                    hbm4_unit_location, interleaved_stream_txns_hbm4,
+                    make_channel_sim, sequential_read_txns_hbm4,
+                    sequential_read_txns_rome)
+
+__all__ = [
+    "ChannelSimCore", "SchedulerPolicy", "FRFCFSOpenPagePolicy",
+    "HBM4ClosedPagePolicy", "RoMeRowPolicy",
+    "HBM4ChannelSim", "HBM4ClosedPageChannelSim", "RoMeChannelSim",
+    "make_channel_sim", "SimResult", "Txn",
+    "hbm4_unit_location", "interleaved_stream_txns_hbm4",
+    "sequential_read_txns_hbm4", "sequential_read_txns_rome",
+]

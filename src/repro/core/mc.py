@@ -2,12 +2,17 @@
 
 Structural facts about the two MC architectures, used by the complexity
 benchmark and asserted in tests. The cycle-accurate behaviour lives in
-:mod:`repro.core.engine`; this module is the architectural census.
+:mod:`repro.core.sched`; since the refactor a policy reports its own
+hardware census via ``SchedulerPolicy.state_footprint()``, and
+:func:`complexity_of_policy` turns that into an :class:`MCComplexity` —
+so the Table IV numbers are read out of the code that *is* the scheduler
+(benchmarks/tab_mc_complexity.py cross-checks both sources).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from .sched import SchedulerPolicy
 from .timing import HBM4_BANK_STATES, ROME_BANK_STATES, HBM4Timing, RoMeTiming
 
 
@@ -50,15 +55,23 @@ def rome_mc_complexity() -> MCComplexity:
     )
 
 
+def complexity_of_policy(policy: SchedulerPolicy,
+                         request_queue_depth: int) -> MCComplexity:
+    """Build the Table IV row directly from a scheduler policy's
+    introspected state footprint."""
+    fp = policy.state_footprint()
+    return MCComplexity(
+        name=fp["name"],
+        n_timing_params=fp["timing_params"],
+        n_bank_fsms=fp["fsm_instances"],
+        n_bank_states=fp["states_per_fsm"],
+        page_policy=fp["page_policy"],
+        scheduling=tuple(fp["scheduling"]),
+        request_queue_depth=request_queue_depth,
+    )
+
+
 def max_concurrent_refreshing(timing: RoMeTiming | None = None) -> int:
-    """Refresh-FSM provisioning (§V-A: 'up to three undergo refresh
-    simultaneously'). Steady-state rotation alone needs
-    ceil((tRFCpb+tRREFpb)/(2*tREFIpb)) = 2 in-flight; the third FSM covers
-    pooled-refresh flushes — when demand-postponed REFpbs drain, the MC
-    releases them at tRREFpb spacing but caps in-flight refreshes at 3 so
-    an 8-deep pool empties in ~3*(tRFCpb+tRREFpb) < tREFI/4 without
-    provisioning a per-VBA FSM."""
-    t = timing or RoMeTiming()
-    import math
-    steady = math.ceil((t.tRFCpb + t.tRREFpb) / (2 * t.tREFIpb))
-    return steady + 1
+    """Refresh-FSM provisioning (§V-A); see
+    :meth:`RoMeTiming.max_concurrent_refreshing` for the derivation."""
+    return (timing or RoMeTiming()).max_concurrent_refreshing()

@@ -1,0 +1,55 @@
+"""Pluggable scheduler core for the cycle-level channel simulators.
+
+One engine, N policies, N channels — the package layout mirrors the
+paper's argument that RoMe's win is *structural*:
+
+``core``
+    :class:`ChannelSimCore` — the shared event loop (clock, pending
+    queue, demand-aware bounded-postponement refresh governor,
+    idle-advance, finish accounting) plus the transaction/result types.
+``policies``
+    :class:`SchedulerPolicy` implementations: FR-FCFS open-page (the
+    HBM4 baseline), a closed-page HBM4 variant, and RoMe's
+    oldest-first-with-VBA-interleave. A policy's hardware census is
+    introspectable via ``state_footprint()`` (Table IV).
+``channels``
+    Thin policy+timing bindings (``HBM4ChannelSim``, ``RoMeChannelSim``,
+    ``HBM4ClosedPageChannelSim``) and the ``make_channel_sim`` factory.
+``traces``
+    Synthetic single-channel µbenchmark traces.
+
+Policy contract (full signatures in :mod:`.policies`)::
+
+    class SchedulerPolicy:
+        count_keys: tuple[str, ...]    # stat keys the policy maintains
+        ref_period: float              # refresh cadence for the governor
+        n_ref_units: int               # refresh rotation length
+        bytes_per_txn: int             # MC access granularity
+
+        def begin(counts): ...         # reset per-run FSM state
+        def issue_refresh(unit, due): ...
+        def issue(window, now) -> (now, issued, [(txn, finish_ns), ...])
+        def state_footprint() -> dict  # Table IV census
+
+The legacy import surface lives on in :mod:`repro.core.engine`, which is
+now a compatibility facade over this package.
+"""
+from .channels import (HBM4ChannelSim, HBM4ClosedPageChannelSim,
+                       RoMeChannelSim, make_channel_sim)
+from .core import ChannelSimCore, SimResult, Txn, _PendingQueue
+from .policies import (FRFCFSOpenPagePolicy, HBM4ClosedPagePolicy,
+                       RoMeRowPolicy, SchedulerPolicy)
+from .traces import (hbm4_unit_location, interleaved_stream_txns_hbm4,
+                     rome_unit_location, sequential_read_txns_hbm4,
+                     sequential_read_txns_rome)
+
+__all__ = [
+    "ChannelSimCore", "SimResult", "Txn",
+    "SchedulerPolicy", "FRFCFSOpenPagePolicy", "HBM4ClosedPagePolicy",
+    "RoMeRowPolicy",
+    "HBM4ChannelSim", "HBM4ClosedPageChannelSim", "RoMeChannelSim",
+    "make_channel_sim",
+    "hbm4_unit_location", "rome_unit_location",
+    "interleaved_stream_txns_hbm4",
+    "sequential_read_txns_hbm4", "sequential_read_txns_rome",
+]

@@ -1,0 +1,90 @@
+"""Thin policy+timing bindings: one concrete sim class per controller.
+
+Each class is just ``ChannelSimCore`` + a policy + the public attributes
+callers key off (``t``, ``g``, geometry-derived counts). All scheduling
+behaviour lives in :mod:`repro.core.sched.policies`.
+"""
+from __future__ import annotations
+
+from ..timing import ChannelGeometry, HBM4Timing, RoMeTiming
+from .core import ChannelSimCore
+from .policies import (FRFCFSOpenPagePolicy, HBM4ClosedPagePolicy,
+                       RoMeRowPolicy, SchedulerPolicy)
+
+
+class HBM4ChannelSim(ChannelSimCore):
+    """Conventional HBM4 channel (2 pseudo channels simulated jointly).
+
+    ``page_policy`` selects the scheduler: ``"open"`` (FR-FCFS open-page,
+    the paper's baseline) or ``"closed"`` (auto-precharge after every
+    access — the shallow-queue-friendly comparison point).
+    """
+
+    def __init__(self, timing: HBM4Timing | None = None,
+                 geometry: ChannelGeometry | None = None,
+                 queue_depth: int = 64,
+                 refresh: bool = True,
+                 max_ref_postpone: int = 8,
+                 page_policy: str = "open"):
+        t = timing or HBM4Timing()
+        g = geometry or ChannelGeometry()
+        if page_policy == "open":
+            policy: SchedulerPolicy = FRFCFSOpenPagePolicy(t, g)
+        elif page_policy == "closed":
+            policy = HBM4ClosedPagePolicy(t, g)
+        else:
+            raise ValueError(f"unknown page_policy {page_policy!r}")
+        super().__init__(policy, queue_depth, refresh, max_ref_postpone)
+        self.t = t
+        self.g = g
+        self.page_policy = page_policy
+        self.banks_per_pc = g.banks_per_pc
+        self.n_banks = g.banks_per_channel
+        self.burst_ns = g.burst_ns  # 32 B over one PC's pins
+
+
+class HBM4ClosedPageChannelSim(HBM4ChannelSim):
+    """Closed-page HBM4 channel (``HBM4ChannelSim(page_policy="closed")``)."""
+
+    def __init__(self, timing: HBM4Timing | None = None,
+                 geometry: ChannelGeometry | None = None,
+                 queue_depth: int = 64,
+                 refresh: bool = True,
+                 max_ref_postpone: int = 8):
+        super().__init__(timing, geometry, queue_depth, refresh,
+                         max_ref_postpone, page_policy="closed")
+
+
+class RoMeChannelSim(ChannelSimCore):
+    """RoMe MC + command generator for one channel (§V-A).
+
+    Queue of depth `queue_depth` (default 2 — the paper's saturation
+    point); scheduling is :class:`RoMeRowPolicy` (oldest-first with VBA
+    interleaving, Table III gaps, VBA-paired refresh).
+    """
+
+    def __init__(self, timing: RoMeTiming | None = None,
+                 geometry: ChannelGeometry | None = None,
+                 n_vbas: int = 16,
+                 queue_depth: int = 2,
+                 refresh: bool = True,
+                 max_ref_postpone: int = 8):
+        t = timing or RoMeTiming()
+        g = geometry or ChannelGeometry()
+        policy = RoMeRowPolicy(t, g, n_vbas=n_vbas)
+        super().__init__(policy, queue_depth, refresh, max_ref_postpone)
+        self.t = t
+        self.g = g
+        self.n_vbas = n_vbas
+        self.row_bytes = policy.row_bytes  # 4 KB
+
+
+def make_channel_sim(kind: str, **kwargs) -> ChannelSimCore:
+    """Factory: ``"hbm4"`` | ``"hbm4_closed"`` | ``"rome"``."""
+    if kind == "hbm4":
+        return HBM4ChannelSim(**kwargs)
+    if kind == "hbm4_closed":
+        return HBM4ClosedPageChannelSim(**kwargs)
+    if kind == "rome":
+        return RoMeChannelSim(**kwargs)
+    raise ValueError(f"unknown channel sim kind {kind!r}")

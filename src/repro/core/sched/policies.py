@@ -1,0 +1,421 @@
+"""Scheduler policies: the pluggable half of the channel simulator.
+
+Each policy packages one controller architecture's *decision logic and
+state* — bank/VBA FSMs, per-resource clocks, command selection — behind
+the interface :class:`ChannelSimCore` drives:
+
+``count_keys``
+    Command-count stat keys the policy maintains (the core adds
+    ``ref_backlog_max``).
+``ref_period`` / ``n_ref_units``
+    Refresh cadence and rotation length for the core's governor.
+``begin(counts)``
+    (Re)initialize all per-run state; stash the shared counts dict.
+``issue_refresh(unit, due)``
+    Perform one rotating refresh for `unit`, anchored at `due`.
+``issue(window, now) -> (now, issued, completions)``
+    One scheduling step over the arrived window. `completions` is a list
+    of ``(txn, finish_ns)``; `issued` False tells the core to advance the
+    clock to the next event.
+``bytes_per_txn``
+    Data moved per transaction (MC access granularity).
+``state_footprint()``
+    The Table IV census of what the policy must physically track — FSM
+    instances, states per FSM, managed timing parameters, page policy —
+    so MC-complexity claims are introspected from the code that *is* the
+    scheduler rather than asserted in prose.
+"""
+from __future__ import annotations
+
+from ..command_generator import CommandGenerator
+from ..timing import (ChannelGeometry, HBM4_BANK_STATES, HBM4Timing,
+                      ROME_BANK_STATES, RoMeTiming)
+from .core import Txn
+
+
+class SchedulerPolicy:
+    """Interface; see the module docstring for the contract."""
+
+    count_keys: tuple = ()
+    ref_period: float = 0.0
+    n_ref_units: int = 1
+    bytes_per_txn: int = 0
+
+    def begin(self, counts: dict) -> None:
+        raise NotImplementedError
+
+    def issue_refresh(self, unit: int, due: float) -> None:
+        raise NotImplementedError
+
+    def issue(self, window: list[Txn], now: float):
+        raise NotImplementedError
+
+    def state_footprint(self) -> dict:
+        raise NotImplementedError
+
+
+# ===========================================================================
+# Conventional HBM4: FR-FCFS
+# ===========================================================================
+
+class _BankState:
+    __slots__ = ("open_row", "t_act", "t_last_rd", "t_last_wr_data",
+                 "t_rp_done", "t_ref_done")
+
+    def __init__(self) -> None:
+        self.open_row: int | None = None
+        self.t_act = -1e18
+        self.t_last_rd = -1e18
+        self.t_last_wr_data = -1e18
+        self.t_rp_done = 0.0
+        self.t_ref_done = 0.0
+
+
+class FRFCFSOpenPagePolicy(SchedulerPolicy):
+    """FR-FCFS over a bounded CAM queue, open-page, 7-state bank FSMs.
+
+    One HBM4 channel = 2 pseudo channels simulated jointly. Each PC owns
+    half the DQ pins and its own banks; the two PCs share C/A but we
+    assume C/A is never the bottleneck for the baseline (it has 18 pins).
+    Bank ids 0..127: pc = bank // 64, bank group = (bank % 64) // 4.
+    """
+
+    count_keys = ("ACT", "RD", "WR", "PRE", "REFpb", "ca_commands")
+    page_policy = "open"
+
+    #: Open-page keeps a row open while queued hits still target it; the
+    #: closed-page subclass flips this (always precharge after access).
+    keep_open_for_hits = True
+
+    def __init__(self, timing: HBM4Timing | None = None,
+                 geometry: ChannelGeometry | None = None):
+        self.t = timing or HBM4Timing()
+        self.g = geometry or ChannelGeometry()
+        self.banks_per_pc = self.g.banks_per_pc
+        self.n_banks = self.g.banks_per_channel
+        self.burst_ns = self.g.burst_ns  # 32 B over one PC's pins
+        self.ref_period = self.t.tREFIpb
+        self.n_ref_units = self.n_banks
+        self.bytes_per_txn = self.g.col_bytes
+
+    # -- helpers -----------------------------------------------------------
+
+    def _bg(self, bank: int) -> int:
+        return (bank % self.banks_per_pc) // self.g.banks_per_group
+
+    def _pc(self, bank: int) -> int:
+        return bank // self.banks_per_pc
+
+    # -- per-run state -----------------------------------------------------
+
+    def begin(self, counts: dict) -> None:
+        self.counts = counts
+        self.banks = [_BankState() for _ in range(self.n_banks)]
+        # Per-PC shared resources.
+        self.pc_bus_free = [0.0, 0.0]              # DQ bus next-free
+        self.pc_last_burst = [-1e18, -1e18]        # last RD/WR cmd time (tCCDS)
+        self.pc_last_burst_bg = [dict(), dict()]   # bg -> last cmd time (tCCDL)
+        self.pc_last_burst_sid = [dict(), dict()]  # sid -> last cmd time (tCCDR)
+        self.pc_last_was_write = [False, False]
+        self.pc_last_rd_cmd = [-1e18, -1e18]
+        self.pc_last_wr_data_end = [-1e18, -1e18]
+        self.pc_act_times = [[], []]               # for tFAW (per PC)
+        self.pc_last_act = [-1e18, -1e18]          # tRRDS
+        self.pc_last_act_bg = [dict(), dict()]     # tRRDL
+
+    # -- readiness clocks --------------------------------------------------
+
+    def act_ready(self, bank_id: int, b: _BankState, at: float) -> float:
+        t = self.t
+        pc = self._pc(bank_id)
+        bg = self._bg(bank_id)
+        r = max(at, b.t_rp_done, b.t_ref_done,
+                self.pc_last_act[pc] + t.tRRDS,
+                self.pc_last_act_bg[pc].get(bg, -1e18) + t.tRRDL)
+        acts = self.pc_act_times[pc]
+        if len(acts) >= 4:
+            r = max(r, acts[-4] + t.tFAW)
+        return r
+
+    def col_ready(self, bank_id: int, b: _BankState, is_write: bool,
+                  sid: int, at: float) -> float:
+        t = self.t
+        pc = self._pc(bank_id)
+        bg = self._bg(bank_id)
+        trcd = t.tRCDWR if is_write else t.tRCDRD
+        r = max(at, b.t_act + trcd, b.t_ref_done,
+                self.pc_last_burst[pc] + t.tCCDS,
+                self.pc_last_burst_bg[pc].get(bg, -1e18) + t.tCCDL)
+        # tCCDR: RD/WR to RD/WR spacing across SIDs (ranks) sharing the PC.
+        for other_sid, t_cmd in self.pc_last_burst_sid[pc].items():
+            if other_sid != sid:
+                r = max(r, t_cmd + t.tCCDR)
+        if is_write and not self.pc_last_was_write[pc]:
+            r = max(r, self.pc_last_rd_cmd[pc] + t.tRTW)
+        if not is_write and self.pc_last_was_write[pc]:
+            r = max(r, self.pc_last_wr_data_end[pc] + t.tWTRS)
+        return r
+
+    def pre_ready(self, b: _BankState, at: float) -> float:
+        t = self.t
+        return max(at, b.t_act + t.tRAS, b.t_last_rd + t.tRTP,
+                   b.t_last_wr_data + t.tWR)
+
+    # -- refresh -----------------------------------------------------------
+
+    def issue_refresh(self, unit: int, due: float) -> None:
+        t = self.t
+        b = self.banks[unit]
+        start = max(due, b.t_rp_done, b.t_ref_done)
+        if b.open_row is not None:
+            pr = self.pre_ready(b, start)
+            b.t_rp_done = pr + t.tRP
+            b.open_row = None
+            self.counts["PRE"] += 1
+            start = b.t_rp_done
+        b.t_ref_done = start + t.tRFCpb
+        self.counts["REFpb"] += 1
+
+    # -- one scheduling step -----------------------------------------------
+
+    def issue(self, window: list[Txn], now: float):
+        t = self.t
+        counts = self.counts
+        banks = self.banks
+        issued = False
+        completions: list = []
+
+        # Row-bus work (runs concurrently with the column bus): progress
+        # the oldest row-miss whose bank's open row is no longer needed by
+        # any queued hit. This is what deep queues buy the conventional
+        # MC — lookahead to overlap ACT/PRE of upcoming rows with the
+        # bursts of the current ones.
+        prepared: set[int] = set()
+        for tx in window:
+            b = banks[tx.bank]
+            if b.open_row == tx.row or tx.bank in prepared:
+                continue
+            if b.open_row is not None:
+                # Keep a row open while queued hits still target it
+                # (open-page only).
+                if self.keep_open_for_hits and \
+                        any(h.bank == tx.bank and h.row == b.open_row
+                            for h in window):
+                    prepared.add(tx.bank)
+                    continue
+                pr = self.pre_ready(b, max(tx.arrival_ns, b.t_ref_done))
+                b.t_rp_done = pr + t.tRP
+                b.open_row = None
+                counts["PRE"] += 1
+                counts["ca_commands"] += 1
+                now = max(now, pr)
+            else:
+                ar = self.act_ready(tx.bank, b,
+                                    max(tx.arrival_ns, b.t_ref_done))
+                pc = self._pc(tx.bank)
+                bg = self._bg(tx.bank)
+                b.t_act = ar
+                b.open_row = tx.row
+                self.pc_last_act[pc] = ar
+                self.pc_last_act_bg[pc][bg] = ar
+                self.pc_act_times[pc].append(ar)
+                if len(self.pc_act_times[pc]) > 8:
+                    self.pc_act_times[pc] = self.pc_act_times[pc][-8:]
+                counts["ACT"] += 1
+                counts["ca_commands"] += 1
+                now = max(now, ar)
+            prepared.add(tx.bank)
+            issued = True
+
+        # Column-bus work: earliest-ready row hit (FR), oldest on ties.
+        # Issue times are governed by per-resource clocks (bank readiness,
+        # per-PC burst spacing, DQ bus) — the column C/A path sustains one
+        # command per PC per tCCDS, so a pick may legally land before
+        # `now` (commands ride independent buses).
+        best = None
+        best_t = None
+        for tx in window:
+            b = banks[tx.bank]
+            if b.open_row == tx.row and b.t_act <= 1e17:
+                r = self.col_ready(tx.bank, b, tx.is_write, tx.sid,
+                                   tx.arrival_ns)
+                if best_t is None or r < best_t - 1e-12:
+                    best, best_t = tx, r
+        if best is not None:
+            tx, r = best, best_t
+            b = banks[tx.bank]
+            pc = self._pc(tx.bank)
+            bg = self._bg(tx.bank)
+            lat = t.tCWL if tx.is_write else t.tCL
+            data_start = max(r + lat, self.pc_bus_free[pc])
+            # If the bus is the constraint, push the command time too.
+            cmd_t = data_start - lat
+            data_end = data_start + self.burst_ns
+            self.pc_bus_free[pc] = data_end
+            self.pc_last_burst[pc] = cmd_t
+            self.pc_last_burst_bg[pc][bg] = cmd_t
+            self.pc_last_burst_sid[pc][tx.sid] = cmd_t
+            self.pc_last_was_write[pc] = tx.is_write
+            counts["ca_commands"] += 1
+            if tx.is_write:
+                b.t_last_wr_data = data_end
+                self.pc_last_wr_data_end[pc] = data_end
+                counts["WR"] += 1
+            else:
+                b.t_last_rd = cmd_t
+                self.pc_last_rd_cmd[pc] = cmd_t
+                counts["RD"] += 1
+            self._after_column(b, cmd_t)
+            completions.append((tx, data_end))
+            now = max(now, cmd_t)
+            issued = True
+
+        return now, issued, completions
+
+    def _after_column(self, b: _BankState, cmd_t: float) -> None:
+        """Open-page: the row stays open after a column access."""
+
+    # -- introspection -----------------------------------------------------
+
+    def state_footprint(self) -> dict:
+        scheduling = ("bank group interleaving", "PC interleaving")
+        if self.keep_open_for_hits:
+            scheduling = ("row-buffer locality",) + scheduling
+        return {
+            "name": "frfcfs_open" if self.keep_open_for_hits else
+                    "frfcfs_closed",
+            "timing_params": self.t.n_managed(),
+            "fsm_instances": self.banks_per_pc,   # one per bank per PC
+            "states_per_fsm": len(HBM4_BANK_STATES),
+            "page_policy": self.page_policy,
+            "scheduling": scheduling,
+        }
+
+
+class HBM4ClosedPagePolicy(FRFCFSOpenPagePolicy):
+    """Closed-page HBM4 variant: auto-precharge after every column access.
+
+    A comparison point between open-page FR-FCFS and RoMe: the scheduler
+    sheds the row-buffer-locality bookkeeping (every access pays
+    ACT + RD/WR + PRE), so it degrades far less with shallow queues but
+    caps stream bandwidth at the tRC-limited random-row rate. The
+    difference from the open-page policy is exactly two hooks — the
+    keep-open-for-hits check and the post-access precharge — everything
+    else (bank FSMs, per-PC clocks, refresh) is shared.
+    """
+
+    page_policy = "closed (auto-precharge after access)"
+    keep_open_for_hits = False
+
+    def _after_column(self, b: _BankState, cmd_t: float) -> None:
+        pr = self.pre_ready(b, cmd_t)
+        b.t_rp_done = pr + self.t.tRP
+        b.open_row = None
+        self.counts["PRE"] += 1
+        self.counts["ca_commands"] += 1
+
+
+# ===========================================================================
+# RoMe
+# ===========================================================================
+
+class RoMeRowPolicy(SchedulerPolicy):
+    """RoMe MC: oldest-first with VBA interleaving (§V-A).
+
+    Three commands (RD_row, WR_row, REF), 4-state VBA FSM. All intra-row
+    sequencing is delegated to the command generator (statically timed),
+    so the policy only enforces the ten Table III row-to-row gaps; per-VBA
+    busy-until and refresh-until complete the FSM
+    (Idle / Reading / Writing / Refreshing).
+    """
+
+    count_keys = ("ACT", "RD", "WR", "PRE", "REFpb", "row_commands",
+                  "ca_commands")
+    page_policy = "none (always precharge after row access)"
+
+    def __init__(self, timing: RoMeTiming | None = None,
+                 geometry: ChannelGeometry | None = None,
+                 n_vbas: int = 16):
+        self.t = timing or RoMeTiming()
+        self.g = geometry or ChannelGeometry()
+        self.n_vbas = n_vbas
+        self.row_bytes = self.g.row_bytes * 2 * self.g.pseudo_channels  # 4 KB
+        self._cg = CommandGenerator()
+        self._sched_rd = self._cg.expand(is_write=False)
+        self._sched_wr = self._cg.expand(is_write=True)
+        self._bursts = 2 * self._cg.bursts_per_bank()
+        # VBA-paired refresh every 2*tREFIpb, rotating (§V-B).
+        self.ref_period = 2 * self.t.tREFIpb
+        self.n_ref_units = n_vbas
+        self.bytes_per_txn = self.row_bytes
+
+    def begin(self, counts: dict) -> None:
+        self.counts = counts
+        self.vba_busy_until = [0.0] * self.n_vbas  # Reading/Writing/Refreshing
+        self.last_cmd_t = -1e18
+        self.last_cmd_write = False
+        self.last_cmd_vba = -1
+        self.last_cmd_sid = -1
+
+    def start_time(self, tx: Txn, at: float) -> float:
+        t = self.t
+        r = max(at, tx.arrival_ns, self.vba_busy_until[tx.bank])
+        if self.last_cmd_t > -1e17:
+            gap = t.gap_ns(self.last_cmd_write, tx.is_write,
+                           same_vba=(tx.bank == self.last_cmd_vba),
+                           same_sid=(tx.sid == self.last_cmd_sid))
+            r = max(r, self.last_cmd_t + gap)
+        return r
+
+    def issue_refresh(self, unit: int, due: float) -> None:
+        # VBA-paired refresh, anchored at due time (may overlap across
+        # VBAs — the paper's "up to three refreshing simultaneously").
+        t = self.t
+        start = max(due, self.vba_busy_until[unit])
+        self.vba_busy_until[unit] = start + t.tRFCpb + t.tRREFpb
+        self.counts["REFpb"] += 2
+        self.counts["row_commands"] += 1
+        self.counts["ca_commands"] += 1
+
+    def issue(self, window: list[Txn], now: float):
+        t = self.t
+        counts = self.counts
+        # Oldest-first with VBA interleaving: prefer a request whose VBA
+        # differs from the last-issued one if it is ready no later.
+        cands = [(self.start_time(tx, now), i, tx)
+                 for i, tx in enumerate(window)]
+        cands.sort(key=lambda c: (c[0], c[1]))
+        best_t, _, best = cands[0]
+        for ct, _, tx in cands:
+            if tx.bank != self.last_cmd_vba and ct <= best_t + 1e-9:
+                best_t, best = ct, tx
+                break
+
+        sched = self._sched_wr if best.is_write else self._sched_rd
+        svc = t.tWR_row if best.is_write else t.tRD_row
+        self.vba_busy_until[best.bank] = best_t + svc
+        self.last_cmd_t = best_t
+        self.last_cmd_write = best.is_write
+        self.last_cmd_vba = best.bank
+        self.last_cmd_sid = best.sid
+        counts["ACT"] += 2
+        counts["PRE"] += 2
+        counts["WR" if best.is_write else "RD"] += self._bursts
+        counts["row_commands"] += 1
+        counts["ca_commands"] += 1
+        completions = [(best, best_t + sched.last_data_ns)]
+        now = max(now, best_t)
+        return now, True, completions
+
+    # -- introspection -----------------------------------------------------
+
+    def state_footprint(self) -> dict:
+        return {
+            "name": "rome_oldest_first",
+            "timing_params": self.t.n_managed(),
+            # 2 VBAs operating + up to 3 refreshing simultaneously.
+            "fsm_instances": 2 + self.t.max_concurrent_refreshing(),
+            "states_per_fsm": len(ROME_BANK_STATES),
+            "page_policy": self.page_policy,
+            "scheduling": ("VBA interleaving",),
+        }

@@ -1,0 +1,121 @@
+"""Synthetic single-channel transaction traces for the µbenchmarks.
+
+Channel-local streams at MC access granularity: bandwidth-maximizing and
+page-interleaved sequential layouts for HBM4, VBA-striped row streams for
+RoMe, and the interleaved multi-stream (ACT-inflation) workload. For
+multi-channel extent-level traffic use :class:`repro.core.system_sim.SystemSim`,
+which decomposes (addr, nbytes) extents through the address map into these
+same per-channel patterns.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..timing import ChannelGeometry
+from .core import Txn
+
+
+def sequential_read_txns_hbm4(nbytes: int, geometry: ChannelGeometry | None = None,
+                              arrival_ns: float = 0.0,
+                              is_write: bool = False,
+                              layout: str = "bg_striped") -> list[Txn]:
+    """Channel-local sequential stream decomposed into 32 B column txns.
+
+    ``layout`` selects the address map within the channel:
+
+    * ``"bg_striped"`` — consecutive 32 B units alternate pseudo channels,
+      then rotate bank groups (so bursts mesh at tCCDS, not tCCDL), then fill
+      columns of a row; banks within a bank group ping-pong across row
+      boundaries to hide tRC. This is the bandwidth-maximizing sweep winner
+      (§VI-A) and needs only modest queue lookahead.
+    * ``"row_linear"`` — consecutive units fill one bank's row before moving
+      to the next bank group's row (page-interleaved map, classic open-page
+      streaming). A single row drains at tCCDL (half rate); saturation
+      *requires* the scheduler to interleave bursts from ≥2 open rows in
+      different bank groups, i.e. a queue that spans multiple rows — this is
+      the regime behind the paper's "HBM4 requires ≥45 entries" claim.
+    """
+    g = geometry or ChannelGeometry()
+    txns: list[Txn] = []
+    n_units = nbytes // g.col_bytes
+    for u in range(n_units):
+        bank, row, col = hbm4_unit_location(u, g, layout)
+        txns.append(Txn(arrival_ns, bank=bank, row=row, col=col,
+                        is_write=is_write))
+    return txns
+
+
+def hbm4_unit_location(u: int, g: ChannelGeometry,
+                       layout: str = "bg_striped") -> tuple[int, int, int]:
+    """(bank, row, col) of channel-local 32 B unit `u` under `layout`."""
+    nbg = g.bank_groups
+    cols = g.cols_per_row
+    pc = u % g.pseudo_channels
+    j = u // g.pseudo_channels          # unit index within the PC
+    if layout == "bg_striped":
+        bg = j % nbg
+        k = j // nbg                    # burst index within this BG's stream
+        col = k % cols
+        rseq = k // cols                # row sequence number within BG
+    elif layout == "row_linear":
+        col = j % cols
+        rrun = j // cols                # consecutive rows
+        bg = rrun % nbg
+        rseq = rrun // nbg
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    bank_in_bg = rseq % g.banks_per_group
+    row = rseq // g.banks_per_group
+    bank = pc * g.banks_per_pc + bg * g.banks_per_group + bank_in_bg
+    return bank, row, col
+
+
+def rome_unit_location(u: int, n_vbas: int) -> tuple[int, int, int]:
+    """(vba, row, col) of channel-local row-unit `u` (VBA-striped)."""
+    return u % n_vbas, u // n_vbas, 0
+
+
+def sequential_read_txns_rome(nbytes: int, n_vbas: int = 16,
+                              arrival_ns: float = 0.0,
+                              is_write: bool = False,
+                              row_bytes: int = 4096) -> list[Txn]:
+    """Channel-local sequential stream as 4 KB row transactions striped
+    across VBAs."""
+    n_rows = (nbytes + row_bytes - 1) // row_bytes
+    txns = []
+    for r in range(n_rows):
+        bank, row, _ = rome_unit_location(r, n_vbas)
+        txns.append(Txn(arrival_ns, bank=bank, row=row, is_write=is_write))
+    return txns
+
+
+def interleaved_stream_txns_hbm4(n_streams: int, nbytes_each: int,
+                                 geometry: ChannelGeometry | None = None,
+                                 seed: int = 0) -> list[Txn]:
+    """N concurrent sequential streams interleaved round-robin at 32 B
+    granularity (as concurrent GEMM operands / expert streams arrive at the
+    MC). Each stream is row_linear with its own bank/row phase. This is the
+    ACT-inflation workload: with many streams the per-stream queue window
+    shrinks below a row's 32 columns, so rows are served in several visits
+    and intervening same-bank activity forces re-activations — the effect
+    RoMe eliminates structurally (one RD_row = whole row, §VI-C / Fig 14).
+    """
+    g = geometry or ChannelGeometry()
+    rng = np.random.default_rng(seed)
+    streams = []
+    for s in range(n_streams):
+        txns = sequential_read_txns_hbm4(nbytes_each, g, layout="row_linear")
+        # random bank-group/bank/row phase per stream
+        bank_off = int(rng.integers(0, g.banks_per_channel))
+        row_off = int(rng.integers(0, 1 << 12))
+        for t in txns:
+            t.bank = (t.bank + bank_off) % g.banks_per_channel
+            t.row = t.row + row_off
+            t.stream = s
+        streams.append(txns)
+    out: list[Txn] = []
+    for i in range(max(len(s) for s in streams)):
+        for s in streams:
+            if i < len(s):
+                out.append(s[i])
+    return out

@@ -1,0 +1,205 @@
+"""Multi-channel system simulator: (addr, nbytes) extents end to end.
+
+:class:`SystemSim` closes the gap between the single-channel cycle-level
+engine and the extent-level analytic model: it takes the same
+``(addr, nbytes)`` extents the perf model consumes, decomposes them
+through :class:`~repro.core.address_map.AddressMap` into per-channel
+transaction streams (channel selection by stripe rotation; the
+channel-local layout is the bandwidth-maximizing map the calibration
+uses — bg_striped columns for HBM4, VBA-striped rows for RoMe), runs
+every channel through :class:`~repro.core.sched.ChannelSimCore`, and
+reports per-channel finish times, aggregate bandwidth, and the measured
+load-balance ratio. That gives ``analytic.transfer_time_ns`` a
+ground-truth cross-validation path at the extent level
+(tests/test_core_memory.py) instead of only hand-built single-channel
+traces.
+
+Channels are independent after address decomposition (no shared resource
+is modeled between channels), so they are simulated one at a time and
+composed by taking the max finish — exactly the "most-loaded channel
+gates completion" structure the analytic model assumes, but measured.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .address_map import AddressMap, make_address_map
+from .sched import SimResult, Txn, make_channel_sim
+from .sched.traces import hbm4_unit_location, rome_unit_location
+from .timing import MemSystemConfig
+
+
+@dataclass
+class SystemResult:
+    """Outcome of one multi-channel extent-level run."""
+
+    total_ns: float                 # makespan = max finish over channels
+    bytes_moved: int                # sum of per-channel bytes (MC granularity)
+    channel_bytes: np.ndarray       # bytes per channel (MC granularity)
+    channel_finish_ns: np.ndarray   # per-channel makespan (0 for idle)
+    channel_results: dict           # channel -> SimResult (loaded channels)
+
+    @property
+    def bandwidth_gbps(self) -> float:
+        if self.total_ns <= 0:
+            return 0.0
+        return self.bytes_moved / self.total_ns   # B/ns == GB/s
+
+    @property
+    def load_balance_ratio(self) -> float:
+        """Measured LBR = mean / max channel bytes (cf. Fig 13)."""
+        mx = self.channel_bytes.max(initial=0)
+        if mx == 0:
+            return 1.0
+        return float(self.channel_bytes.mean() / mx)
+
+    @property
+    def cmd_counts(self) -> dict:
+        out: dict = {}
+        for r in self.channel_results.values():
+            for k, v in r.cmd_counts.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+
+class SystemSim:
+    """N independent channel sims behind one address map.
+
+    Parameters mirror the single-channel sims; ``n_channels`` (or an
+    explicit ``amap``) sets the system width — pass a small count to keep
+    cycle-level runs tractable, the per-channel behaviour is identical.
+    ``max_ref_postpone`` defaults to 32 (the *well-tuned* pooled-refresh
+    MC that the analytic calibration models).
+    """
+
+    def __init__(self, cfg: MemSystemConfig,
+                 amap: AddressMap | None = None,
+                 n_channels: int | None = None,
+                 queue_depth: int | None = None,
+                 refresh: bool = True,
+                 max_ref_postpone: int = 32,
+                 page_policy: str = "open"):
+        self.cfg = cfg
+        self.is_rome = cfg.ag_mc_bytes >= cfg.row_bytes
+        if amap is None:
+            amap = make_address_map(cfg, n_cubes=1)
+            if n_channels is not None:
+                amap = AddressMap(n_channels=n_channels,
+                                  stripe_bytes=amap.stripe_bytes,
+                                  banks_per_channel=amap.banks_per_channel,
+                                  row_bytes=amap.row_bytes)
+        elif n_channels is not None and n_channels != amap.n_channels:
+            raise ValueError("pass either amap or n_channels, not both")
+        self.amap = amap
+        self.queue_depth = (cfg.request_queue_depth if queue_depth is None
+                            else queue_depth)
+        self.refresh = refresh
+        self.max_ref_postpone = max_ref_postpone
+        self.page_policy = page_policy
+
+    # -- decomposition -----------------------------------------------------
+
+    def _units_of(self, extents: list[tuple[int, int]]) -> np.ndarray:
+        """Global stripe-unit indices touched by the extents (an extent
+        touching any byte of a unit transfers the whole unit — the MC
+        access granularity / row-rounding overfetch)."""
+        chunks = []
+        g = self.amap.stripe_bytes
+        for start, nbytes in extents:
+            if nbytes <= 0:
+                continue
+            first = start // g
+            last = (start + nbytes - 1) // g
+            chunks.append(np.arange(first, last + 1, dtype=np.int64))
+        if not chunks:
+            return np.zeros(0, dtype=np.int64)
+        return np.concatenate(chunks)
+
+    def decompose(self, extents: list[tuple[int, int]],
+                  is_write: bool = False,
+                  arrival_ns: float = 0.0) -> dict[int, list[Txn]]:
+        """Per-channel transaction streams for the extents.
+
+        Channel selection follows the address map's stripe rotation; the
+        channel-local (bank, row, col) placement of a unit is a pure
+        function of its channel-local unit index, so overlapping extents
+        hit the same locations and contiguous extents reproduce the
+        calibration stream on every loaded channel.
+        """
+        units = self._units_of(extents)
+        nch = self.amap.n_channels
+        geo = self.cfg.geometry.channel
+        n_vbas = self.cfg.vbas_per_channel
+        per_channel: dict[int, list[Txn]] = {}
+        for unit in units.tolist():
+            c = unit % nch
+            u = unit // nch                    # channel-local unit index
+            if self.is_rome:
+                bank, row, col = rome_unit_location(u, n_vbas)
+            else:
+                # bg_striped: the §VI-A bandwidth-maximizing map — the
+                # same one the calibration streams use.
+                bank, row, col = hbm4_unit_location(u, geo)
+            per_channel.setdefault(c, []).append(
+                Txn(arrival_ns, bank=bank, row=row, col=col,
+                    is_write=is_write))
+        return per_channel
+
+    def _make_sim(self):
+        # The sims must see the same ChannelGeometry the decomposition
+        # used, or bank ids and timing would silently desynchronize.
+        geo = self.cfg.geometry.channel
+        if self.is_rome:
+            return make_channel_sim(
+                "rome", geometry=geo, n_vbas=self.cfg.vbas_per_channel,
+                queue_depth=self.queue_depth, refresh=self.refresh,
+                max_ref_postpone=self.max_ref_postpone)
+        kind = "hbm4" if self.page_policy == "open" else "hbm4_closed"
+        return make_channel_sim(
+            kind, geometry=geo, queue_depth=self.queue_depth,
+            refresh=self.refresh, max_ref_postpone=self.max_ref_postpone)
+
+    # -- run ---------------------------------------------------------------
+
+    def run_extents(self, extents: list[tuple[int, int]],
+                    is_write: bool = False,
+                    arrival_ns: float = 0.0) -> SystemResult:
+        """Simulate the extents on all loaded channels; idle channels cost
+        nothing. Returns the system-level :class:`SystemResult`."""
+        per_channel = self.decompose(extents, is_write, arrival_ns)
+        nch = self.amap.n_channels
+        ch_bytes = np.zeros(nch, dtype=np.int64)
+        ch_finish = np.zeros(nch)
+        results: dict[int, SimResult] = {}
+        for c, txns in sorted(per_channel.items()):
+            sim = self._make_sim()
+            r = sim.run(txns)
+            results[c] = r
+            ch_bytes[c] = r.bytes_moved
+            ch_finish[c] = r.total_ns
+        return SystemResult(
+            total_ns=float(ch_finish.max(initial=0.0)),
+            bytes_moved=int(ch_bytes.sum()),
+            channel_bytes=ch_bytes,
+            channel_finish_ns=ch_finish,
+            channel_results=results,
+        )
+
+
+def bulk_stream_extents(nbytes: int, n_extents: int = 1,
+                        base_addr: int = 0,
+                        gap_bytes: int = 0) -> list[tuple[int, int]]:
+    """Helper: `n_extents` contiguous extents totalling `nbytes`,
+    optionally separated by `gap_bytes` holes (to exercise load imbalance)."""
+    per = nbytes // n_extents
+    out = []
+    addr = base_addr
+    for _ in range(n_extents):
+        out.append((addr, per))
+        addr += per + gap_bytes
+    return out
+
+
+__all__ = ["SystemSim", "SystemResult", "bulk_stream_extents"]

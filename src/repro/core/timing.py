@@ -146,6 +146,19 @@ class RoMeTiming:
         """Number of timing parameters the RoMe MC manages (Table IV: 10)."""
         return 10
 
+    def max_concurrent_refreshing(self) -> int:
+        """Refresh-FSM provisioning (§V-A: 'up to three undergo refresh
+        simultaneously'). Steady-state rotation alone needs
+        ceil((tRFCpb+tRREFpb)/(2*tREFIpb)) = 2 in-flight; the third FSM
+        covers pooled-refresh flushes — when demand-postponed REFpbs
+        drain, the MC releases them at tRREFpb spacing but caps in-flight
+        refreshes at 3 so an 8-deep pool empties in
+        ~3*(tRFCpb+tRREFpb) < tREFI/4 without provisioning a per-VBA
+        FSM."""
+        import math
+        steady = math.ceil((self.tRFCpb + self.tRREFpb) / (2 * self.tREFIpb))
+        return steady + 1
+
     def gap_ns(self, prev_is_write: bool, next_is_write: bool,
                same_vba: bool, same_sid: bool) -> float:
         """Minimum start-to-start spacing between two row commands."""

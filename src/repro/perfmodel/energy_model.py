@@ -16,7 +16,7 @@ import functools
 import numpy as np
 
 from ..configs.paper_workloads import PaperWorkload
-from ..core import engine as eng
+from ..core import sched as eng
 from ..core.analytic import calibrate
 from ..core.energy import EnergyBreakdown, EnergyParams, hbm4_energy, rome_energy
 from ..trace.layergraph import decode_ops
@@ -42,6 +42,11 @@ def act_inflation_curve(queue_depth: int = 64,
 
 
 def act_inflation(n_streams: int) -> float:
+    """Measured ACT/KB multiplier (1.0 = structural minimum) at a given
+    operand-stream concurrency. This is the same multiplier
+    :func:`repro.core.analytic.transfer_time_ns` accepts as
+    ``act_inflation`` — there it bounds the transfer by the row-command
+    (ACT) issue path; here it scales per-op ACT energy (Fig 14)."""
     curve = act_inflation_curve()
     xs = np.array(sorted(curve))
     ys = np.array([curve[x] for x in xs])

@@ -1,0 +1,134 @@
+"""Analytic-vs-engine cross-validation at the extent level.
+
+`repro.core.analytic.transfer_time_ns` is the closed-form service-time
+model the TPOT reproduction rides on; `repro.core.system_sim.SystemSim`
+is the cycle-level ground truth for the same (addr, nbytes) extents. On
+bulk-stream regimes — where the analytic model claims validity — the two
+must agree within 10 % for both memory systems, reads and writes.
+"""
+import numpy as np
+import pytest
+
+from repro.core import analytic
+from repro.core.address_map import AddressMap, channel_bytes, make_address_map
+from repro.core.system_sim import SystemSim, bulk_stream_extents
+from repro.core.timing import hbm4_config, rome_config
+
+# (n_channels, extents) bulk-stream regimes: one contiguous stream and one
+# multi-extent stream over more channels.
+REGIMES = [
+    (2, bulk_stream_extents(1 << 18)),
+    (4, bulk_stream_extents(1 << 19, n_extents=2)),
+]
+
+
+def _xval(cfg, n_channels, extents, is_write):
+    sim = SystemSim(cfg, n_channels=n_channels)
+    r = sim.run_extents(extents, is_write=is_write)
+    ana = analytic.transfer_time_ns(extents, cfg, sim.amap,
+                                    is_write=is_write)
+    rel = abs(r.total_ns - ana) / r.total_ns
+    return r, ana, rel
+
+
+@pytest.mark.parametrize("regime", range(len(REGIMES)))
+@pytest.mark.parametrize("cfg_name", ["hbm4", "rome"])
+def test_systemsim_matches_analytic_reads(cfg_name, regime):
+    cfg = hbm4_config() if cfg_name == "hbm4" else rome_config()
+    n_channels, extents = REGIMES[regime]
+    r, ana, rel = _xval(cfg, n_channels, extents, is_write=False)
+    assert rel < 0.10, (cfg_name, regime, r.total_ns, ana)
+
+
+@pytest.mark.parametrize("cfg_name", ["hbm4", "rome"])
+def test_systemsim_matches_analytic_writes(cfg_name):
+    cfg = hbm4_config() if cfg_name == "hbm4" else rome_config()
+    n_channels, extents = REGIMES[0]
+    r, ana, rel = _xval(cfg, n_channels, extents, is_write=True)
+    assert rel < 0.10, (cfg_name, r.total_ns, ana)
+
+
+def test_systemsim_byte_accounting_and_channel_split():
+    """Decomposition must hand every stripe unit to exactly one channel
+    and agree with the vectorized channel_bytes accounting."""
+    cfg = rome_config()
+    sim = SystemSim(cfg, n_channels=4)
+    extents = [(0, 1 << 16), (1 << 20, 3 * 4096)]
+    r = sim.run_extents(extents)
+    per_ch = channel_bytes(sim.amap, extents)
+    # channel_bytes trims partial stripes; the sim moves whole rows.
+    stripes = np.ceil(per_ch / sim.amap.stripe_bytes)
+    assert np.array_equal(r.channel_bytes,
+                          (stripes * sim.amap.stripe_bytes).astype(np.int64))
+    assert r.bytes_moved == int(r.channel_bytes.sum())
+
+
+def test_systemsim_imbalance_gates_completion():
+    """An extent set that loads one channel more must finish later than a
+    balanced set of the same total bytes — the LBR effect the analytic
+    model encodes as max(channel_bytes)."""
+    cfg = rome_config()
+    sim = SystemSim(cfg, n_channels=2)
+    balanced = sim.run_extents(bulk_stream_extents(1 << 18))
+    # Same bytes, but every extent starts on the stripe of channel 0.
+    g = cfg.ag_mc_bytes
+    skewed_extents = [(2 * i * 2 * g, g) for i in range((1 << 18) // g)]
+    skewed = sim.run_extents(skewed_extents)
+    assert skewed.load_balance_ratio < 0.6 < balanced.load_balance_ratio
+    assert skewed.total_ns > 1.5 * balanced.total_ns
+
+
+def test_systemsim_honors_custom_geometry():
+    """Regression: decomposition and the per-channel sims must share the
+    cfg's ChannelGeometry — a non-default bank-group count used to
+    produce bank ids outside the default-geometry sims' bank tables."""
+    import dataclasses
+    from repro.core.timing import ChannelGeometry, CubeGeometry
+    geo = CubeGeometry(channels=32, channel=ChannelGeometry(bank_groups=16,
+                                                            banks_per_group=4))
+    cfg = dataclasses.replace(hbm4_config(), geometry=geo)
+    sim = SystemSim(cfg, n_channels=2)
+    r = sim.run_extents(bulk_stream_extents(1 << 14))
+    assert r.total_ns > 0
+    assert r.bytes_moved == 1 << 14
+
+
+def test_systemsim_idle_channels_are_free():
+    cfg = rome_config()
+    sim = SystemSim(cfg, n_channels=8)
+    r = sim.run_extents([(0, 4096)])          # one row -> one channel
+    assert (r.channel_bytes > 0).sum() == 1
+    assert r.total_ns > 0 and len(r.channel_results) == 1
+
+
+# ---------------------------------------------------------------------------
+# act_inflation (satellite: the parameter must actually do something)
+# ---------------------------------------------------------------------------
+
+def test_act_inflation_noop_at_unity_and_on_rome():
+    amap_h = make_address_map(hbm4_config(), n_cubes=1)
+    amap_r = make_address_map(rome_config(), n_cubes=1)
+    ext = bulk_stream_extents(1 << 20)
+    base = analytic.transfer_time_ns(ext, hbm4_config(), amap_h)
+    assert analytic.transfer_time_ns(ext, hbm4_config(), amap_h,
+                                     act_inflation=1.0) == base
+    # RoMe's ACT count is structural: inflation must never apply.
+    base_r = analytic.transfer_time_ns(ext, rome_config(), amap_r)
+    assert analytic.transfer_time_ns(ext, rome_config(), amap_r,
+                                     act_inflation=20.0) == base_r
+
+
+def test_act_inflation_binds_hbm4_at_high_stream_counts():
+    """High measured inflation (cf. energy_model.act_inflation at 32-64
+    streams: 4-17x ACT/KB) must surface as an ACT-bound transfer time."""
+    cfg = hbm4_config()
+    amap = make_address_map(cfg, n_cubes=1)
+    ext = bulk_stream_extents(1 << 20)
+    base = analytic.transfer_time_ns(ext, cfg, amap)
+    mild = analytic.transfer_time_ns(ext, cfg, amap, act_inflation=2.0)
+    heavy = analytic.transfer_time_ns(ext, cfg, amap, act_inflation=24.0)
+    assert mild == base                      # column bus still the roof
+    assert heavy > 1.5 * base                # ACT path now gates
+    # Monotone in inflation once binding.
+    heavier = analytic.transfer_time_ns(ext, cfg, amap, act_inflation=32.0)
+    assert heavier > heavy
