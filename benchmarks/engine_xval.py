@@ -1,17 +1,53 @@
 """Cross-validation: vectorized analytic service-time model vs the
-cycle-level engine (DESIGN.md §2 requirement), at two levels:
+cycle-level engine (DESIGN.md §2 requirement), at three levels:
 
-1. single-channel bulk streams (the calibration regime itself), and
+1. single-channel bulk streams (the calibration regime itself),
 2. multi-channel (addr, nbytes) extents through :class:`SystemSim` — the
    extent-level path the TPOT model consumes, checked against
-   ``analytic.transfer_time_ns`` for reads and writes.
+   ``analytic.transfer_time_ns`` for reads and writes,
+3. timed :class:`~repro.workloads.ExtentStream` workloads — the decode
+   TPOT memory time (``perfmodel.tpot.stream_mem_ns``) against the
+   measured multi-channel makespan of the *actual* paper-LLM decode
+   trace (byte-scaled so the cycle-level run is tractable), and the
+   mixed read/write multi-tenant regime with the ACT-inflation roofline.
 """
 from __future__ import annotations
 
+from repro.configs.paper_workloads import PAPER_WORKLOADS
 from repro.core import analytic
 from repro.core import sched as eng
 from repro.core.system_sim import SystemSim, bulk_stream_extents
 from repro.core.timing import hbm4_config, rome_config
+from repro.perfmodel.tpot import stream_mem_ns, xval_decode_stream
+from repro.workloads import interleave, strided_stream
+
+# The scaled-slice regime itself (layers, scale, channel count) is defined
+# once in perfmodel.tpot.xval_decode_stream, shared with the tier-1 test
+# and the example.
+XVAL_WORKLOADS = ("deepseek-v3", "llama-3-405b")
+
+
+def _tenant_mix(n_tenants=4, n_ops=4, op_bytes=1 << 16, n_writers=1,
+                stagger_ns=200.0, fine_rec_bytes=0):
+    """Multi-tenant mixed read/write stream. ``fine_rec_bytes=0`` issues
+    op-granularity records (the regime the closed form claims);
+    non-zero chops every tenant into `fine_rec_bytes` records with
+    interleaved arrivals (the row-thrash regime)."""
+    streams = []
+    for t in range(n_tenants):
+        kind = "write" if t < n_writers else "read"
+        base = t * (64 << 20)
+        if fine_rec_bytes:
+            streams.append(strided_stream(
+                n_ops * op_bytes // fine_rec_bytes, fine_rec_bytes,
+                fine_rec_bytes, kind=kind, base_addr=base,
+                inter_arrival_ns=1.0, stream_id=t))
+        else:
+            streams.append(strided_stream(
+                n_ops, op_bytes, op_bytes, kind=kind, base_addr=base,
+                arrival_ns=t * stagger_ns,
+                inter_arrival_ns=n_tenants * stagger_ns, stream_id=t))
+    return interleave(streams)
 
 
 def run() -> dict:
@@ -59,6 +95,84 @@ def run() -> dict:
                             "rel_err": round(rel, 4)}
             assert rel < 0.10, (key, rel)
     out["system_sim"] = sysrows
+
+    # Stream-level, trace-driven: SystemSim makespan on the from_layer_ops
+    # decode stream vs the TPOT model's memory time, per paper workload
+    # and memory system (the acceptance band is 15 %).
+    tpot_rows = {}
+    for wname in XVAL_WORKLOADS:
+        w = PAPER_WORKLOADS[wname]
+        for mem in ("hbm4", "rome"):
+            stream, acc = xval_decode_stream(w, mem)
+            res = SystemSim(acc.mem_cfg, n_channels=acc.n_channels).run(stream)
+            model_ns = stream_mem_ns(stream, acc)
+            rel = abs(res.total_ns - model_ns) / model_ns
+            key = f"{wname}_{mem}"
+            tpot_rows[key] = {"makespan_ns": round(res.total_ns, 1),
+                              "tpot_mem_ns": round(model_ns, 1),
+                              "stream_records": len(stream),
+                              "stream_kb": stream.total_bytes >> 10,
+                              "rel_err": round(rel, 4)}
+            assert rel < 0.15, (key, res.total_ns, model_ns, rel)
+    out["tpot_stream"] = tpot_rows
+
+    # Mixed read/write multi-tenant streams at op granularity — the regime
+    # the closed form claims. bg_striped bulk decomposition keeps the
+    # measured ACT rate at the calibrated baseline (inflation ~1), and the
+    # summed read+write closed form must match the makespan.
+    mixed = {}
+    for name, cfg in (("hbm4", hbm4_config()), ("rome", rome_config())):
+        stream = _tenant_mix()
+        sim = SystemSim(cfg, n_channels=2)
+        res = sim.run(stream)
+        eff = analytic.calibrate(cfg)
+        kb = res.bytes_moved / 1024
+        infl = ((res.cmd_counts.get("ACT", 0) / kb) / eff.act_per_kb
+                if name == "hbm4" else 1.0)
+        ana = analytic.stream_time_ns(stream, cfg, sim.amap,
+                                      act_inflation=max(infl, 1.0))
+        rel = abs(res.total_ns - ana) / res.total_ns
+        mixed[name] = {"system_ns": round(res.total_ns, 1),
+                       "analytic_ns": round(ana, 1),
+                       "measured_act_inflation": round(infl, 3),
+                       "rel_err": round(rel, 4)}
+        assert rel < 0.15, (name, res.total_ns, ana, rel)
+        if name == "hbm4":
+            assert infl < 1.5, ("op-granularity mixes must stay ACT-lean",
+                                infl)
+    out["mixed_stream"] = mixed
+
+    # ACT-inflation roofline, fine-grained interleave (row-thrash regime):
+    # feeding the *measured* inflation into the closed form must move the
+    # prediction strictly toward the measured makespan. The residual gap is
+    # queue-window serialization the roofline does not model — reported,
+    # not hidden.
+    cfg = hbm4_config()
+    stream = _tenant_mix(n_tenants=8, n_ops=2, op_bytes=1 << 15,
+                         n_writers=2, fine_rec_bytes=1024)
+    sim = SystemSim(cfg, n_channels=2)
+    res = sim.run(stream)
+    eff = analytic.calibrate(cfg)
+    kb = res.bytes_moved / 1024
+    infl = (res.cmd_counts.get("ACT", 0) / kb) / eff.act_per_kb
+    ana_infl = analytic.stream_time_ns(stream, cfg, sim.amap,
+                                       act_inflation=infl)
+    ana_flat = analytic.stream_time_ns(stream, cfg, sim.amap)
+    err_infl = abs(res.total_ns - ana_infl) / res.total_ns
+    err_flat = abs(res.total_ns - ana_flat) / res.total_ns
+    out["act_inflation_fine"] = {
+        "system_ns": round(res.total_ns, 1),
+        "measured_act_inflation": round(infl, 2),
+        "analytic_inflated_ns": round(ana_infl, 1),
+        "analytic_flat_ns": round(ana_flat, 1),
+        "rel_err_inflated": round(err_infl, 4),
+        "rel_err_flat": round(err_flat, 4),
+        "note": "heavy row-thrash exceeds the roofline's validity "
+                "(queue-window serialization unmodeled); inflation must "
+                "still strictly improve the prediction",
+    }
+    assert infl > 4.0, ("fine interleave must inflate the ACT rate", infl)
+    assert err_infl < err_flat, (err_infl, err_flat)
     return out
 
 

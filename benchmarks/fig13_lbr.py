@@ -31,9 +31,22 @@ def run() -> dict:
         assert m[256]["attn"] >= m[1]["attn"] - 1e-6
         assert m[256]["ffn"] >= m[1]["ffn"] - 1e-6
         assert m[256]["attn"] > 0.95 and m[256]["ffn"] > 0.9
-    return {k: {b: {kk: round(vv, 3) for kk, vv in v.items()}
-                for b, v in sweep.items()}
-            for k, sweep in out.items()}
+
+    # Write path (now that KV-append/activation writes carry real
+    # row-aligned extents): including writes must not degrade the
+    # batch-256 LBR — the bump allocator packs them as tightly as reads.
+    rw = {name: lbr_sweep(w, (256,), include_writes=True)
+          for name, w in PAPER_WORKLOADS.items()}
+    for name, m in rw.items():
+        assert m[256]["attn"] > 0.95 and m[256]["ffn"] > 0.9, (name, m)
+
+    res = {k: {b: {kk: round(vv, 3) for kk, vv in v.items()}
+               for b, v in sweep.items()}
+           for k, sweep in out.items()}
+    res["with_writes_b256"] = {k: {kk: round(vv, 3)
+                                   for kk, vv in m[256].items()}
+                               for k, m in rw.items()}
+    return res
 
 
 if __name__ == "__main__":

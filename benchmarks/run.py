@@ -1,14 +1,18 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run            # everything
-    PYTHONPATH=src python -m benchmarks.run fig12      # substring filter
+    PYTHONPATH=src python -m benchmarks.run                 # everything
+    PYTHONPATH=src python -m benchmarks.run fig12           # substring filter
+    PYTHONPATH=src python -m benchmarks.run --json out.json # machine-readable
 
 Each module exposes run() -> dict and asserts its reproduction bands
 internally; this driver reports PASS/FAIL per benchmark and dumps the
-numbers.
+numbers. ``--json PATH`` additionally writes the per-benchmark results
+dict (with status and wall time) to a file, so bench trajectories
+(BENCH_*.json) can be recorded instead of scraping stdout.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import time
@@ -36,12 +40,21 @@ ALL = [
 
 
 def main(argv=None) -> int:
-    argv = argv if argv is not None else sys.argv[1:]
-    pat = argv[0] if argv else ""
+    parser = argparse.ArgumentParser(prog="benchmarks.run",
+                                     description=__doc__.splitlines()[0])
+    parser.add_argument("pattern", nargs="?", default="",
+                        help="substring filter on benchmark names")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="write results (status, wall time, numbers) "
+                             "to PATH as JSON")
+    args = parser.parse_args(sys.argv[1:] if argv is None else argv)
+
     failures = 0
     results = {}
+    report = {}
+    t_start = time.time()
     for name, mod in ALL:
-        if pat and pat not in name:
+        if args.pattern and args.pattern not in name:
             continue
         t0 = time.time()
         try:
@@ -55,9 +68,19 @@ def main(argv=None) -> int:
             results[name] = {"error": traceback.format_exc()[-800:]}
             status = "ERROR"
             failures += 1
-        print(f"[{status}] {name} ({time.time()-t0:.1f}s)", flush=True)
+        wall = time.time() - t0
+        report[name] = {"status": status, "wall_s": round(wall, 2),
+                        "results": results[name]}
+        print(f"[{status}] {name} ({wall:.1f}s)", flush=True)
     print()
     print(json.dumps(results, indent=1, default=str))
+    if args.json:
+        payload = {"benchmarks": report,
+                   "total_wall_s": round(time.time() - t_start, 2),
+                   "failures": failures}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"\nwrote {args.json}")
     return 1 if failures else 0
 
 

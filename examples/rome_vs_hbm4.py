@@ -7,8 +7,11 @@ to end):
    scheduler core, per-controller policies — repro.core.sched),
 2. cross-checks the extent-level analytic model against the multi-channel
    SystemSim ground truth,
-3. builds per-device layer-op traces for the three paper LLMs,
-4. reports TPOT (Fig 12), LBR (Fig 13), and energy (Fig 14) side by side.
+3. builds the *timed* decode ExtentStream (repro.workloads) for a paper
+   LLM and validates the TPOT memory time against the cycle-accurate
+   multi-channel makespan of that same stream,
+4. builds per-device layer-op traces for the three paper LLMs,
+5. reports TPOT (Fig 12), LBR (Fig 13), and energy (Fig 14) side by side.
 """
 import sys
 
@@ -21,7 +24,7 @@ from repro.core.timing import hbm4_config, rome_config
 from repro.perfmodel.accelerator import paper_accelerator
 from repro.perfmodel.energy_model import decode_energy
 from repro.perfmodel.lbr import lbr_by_kind
-from repro.perfmodel.tpot import tpot_ns
+from repro.perfmodel.tpot import stream_mem_ns, tpot_ns, xval_decode_stream
 
 
 def main():
@@ -41,6 +44,20 @@ def main():
               f"{res.total_ns:.0f} ns ({res.bandwidth_gbps:.1f} GB/s, "
               f"LBR {res.load_balance_ratio:.3f}) vs analytic "
               f"{ana:.0f} ns ({abs(res.total_ns - ana) / res.total_ns:.1%} off)")
+
+    print("\n=== trace-driven stream (decode TPOT vs measured makespan) ===")
+    w = PAPER_WORKLOADS["deepseek-v3"]
+    for mem in ("HBM4", "RoMe"):
+        # Timed, typed ExtentStream of the scaled decode slice (the same
+        # regime benchmarks/engine_xval.py asserts its 15 % band on).
+        stream, acc = xval_decode_stream(w, mem.lower())
+        res = SystemSim(acc.mem_cfg,
+                        n_channels=acc.n_channels).run(stream, workers=2)
+        model = stream_mem_ns(stream, acc)
+        print(f"{mem}: {len(stream)} records, {stream.total_bytes >> 10} KB "
+              f"(reads+writes) — makespan {res.total_ns:.0f} ns vs TPOT "
+              f"memory time {model:.0f} ns "
+              f"({abs(res.total_ns - model) / model:.1%} off)")
 
     acc_h, acc_r = paper_accelerator("hbm4"), paper_accelerator("rome")
     for name, w in PAPER_WORKLOADS.items():

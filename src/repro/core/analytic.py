@@ -85,11 +85,16 @@ def calibrate(cfg: MemSystemConfig) -> ChannelEfficiency:
 # Closed-form service times
 # ---------------------------------------------------------------------------
 
-def transfer_time_ns(extents: list[tuple[int, int]], cfg: MemSystemConfig,
+def transfer_time_ns(extents, cfg: MemSystemConfig,
                      amap: AddressMap, is_write: bool = False,
                      eff: ChannelEfficiency | None = None,
                      act_inflation: float = 1.0) -> float:
     """Service time for a set of (addr, nbytes) extents on the full system.
+
+    ``extents`` is either a plain ``[(addr, nbytes)]`` list (one kind,
+    selected by ``is_write``) or an :class:`repro.workloads.ExtentStream`,
+    in which case reads and writes are timed separately at their own
+    calibrated efficiencies and summed (see :func:`stream_time_ns`).
 
     Completion is gated by the most-loaded channel (LBR effect, Fig 13);
     each channel streams at `eff` fraction of peak. `act_inflation`
@@ -103,8 +108,17 @@ def transfer_time_ns(extents: list[tuple[int, int]], cfg: MemSystemConfig,
     drives the Fig 14 energy accounting.
 
     Cross-validated at the extent level against
-    :class:`repro.core.system_sim.SystemSim` in tests/test_core_memory.py.
+    :class:`repro.core.system_sim.SystemSim` in tests/test_core_memory.py
+    (bulk one-kind) and benchmarks/engine_xval.py (mixed streams).
     """
+    if hasattr(extents, "records"):          # ExtentStream (duck-typed)
+        if is_write:
+            raise ValueError(
+                "is_write does not apply to an ExtentStream — the "
+                "records carry their own kind; build write records "
+                "instead of passing is_write=True")
+        return stream_time_ns(extents, cfg, amap, eff=eff,
+                              act_inflation=act_inflation)
     eff = eff or calibrate(cfg)
     e = eff.write_eff if is_write else eff.read_eff
     per_ch = channel_bytes(amap, extents)
@@ -132,6 +146,32 @@ def transfer_time_ns(extents: list[tuple[int, int]], cfg: MemSystemConfig,
     return col_ns
 
 
+def stream_time_ns(stream, cfg: MemSystemConfig, amap: AddressMap,
+                   eff: ChannelEfficiency | None = None,
+                   act_inflation: float = 1.0) -> float:
+    """Closed-form service time of a mixed read/write
+    :class:`repro.workloads.ExtentStream`.
+
+    Reads and writes are timed separately at their calibrated
+    efficiencies and summed — the column bus serializes the two kinds,
+    and the calibration already folds steady-state turnaround costs into
+    ``write_eff``. Arrival times are ignored: this is the *service* time,
+    valid when the stream keeps the system busy (the regime the TPOT
+    model claims). The ACT-inflation roofline applies to the read path
+    (conventional MC only), exactly as in :func:`transfer_time_ns`.
+    """
+    eff = eff or calibrate(cfg)
+    reads = stream.extents("read")
+    writes = stream.extents("write")
+    t = 0.0
+    if reads:
+        t += transfer_time_ns(reads, cfg, amap, is_write=False, eff=eff,
+                              act_inflation=act_inflation)
+    if writes:
+        t += transfer_time_ns(writes, cfg, amap, is_write=True, eff=eff)
+    return t
+
+
 def stream_bandwidth_gbps(cfg: MemSystemConfig, n_cubes: int = 8,
                           eff: ChannelEfficiency | None = None,
                           is_write: bool = False) -> float:
@@ -153,6 +193,6 @@ def act_count(cfg: MemSystemConfig, nbytes: int,
 
 __all__ = [
     "ChannelEfficiency", "calibrate", "calibrate_hbm4", "calibrate_rome",
-    "transfer_time_ns", "stream_bandwidth_gbps", "act_count",
-    "hbm4_config", "rome_config",
+    "transfer_time_ns", "stream_time_ns", "stream_bandwidth_gbps",
+    "act_count", "hbm4_config", "rome_config",
 ]

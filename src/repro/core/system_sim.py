@@ -1,30 +1,41 @@
-"""Multi-channel system simulator: (addr, nbytes) extents end to end.
+"""Multi-channel system simulator: timed extent streams end to end.
 
 :class:`SystemSim` closes the gap between the single-channel cycle-level
-engine and the extent-level analytic model: it takes the same
-``(addr, nbytes)`` extents the perf model consumes, decomposes them
-through :class:`~repro.core.address_map.AddressMap` into per-channel
-transaction streams (channel selection by stripe rotation; the
-channel-local layout is the bandwidth-maximizing map the calibration
-uses — bg_striped columns for HBM4, VBA-striped rows for RoMe), runs
-every channel through :class:`~repro.core.sched.ChannelSimCore`, and
-reports per-channel finish times, aggregate bandwidth, and the measured
-load-balance ratio. That gives ``analytic.transfer_time_ns`` a
-ground-truth cross-validation path at the extent level
-(tests/test_core_memory.py) instead of only hand-built single-channel
-traces.
+engine and the extent-level analytic model. Its primary entry point is
+:meth:`SystemSim.run`, which takes an
+:class:`repro.workloads.ExtentStream` — the unified workload currency —
+and decomposes every record through
+:class:`~repro.core.address_map.AddressMap` into per-channel transaction
+streams, honouring each record's kind (read/write), arrival time, and
+stream tag (channel selection by stripe rotation; the channel-local
+layout is the bandwidth-maximizing map the calibration uses — bg_striped
+columns for HBM4, VBA-striped rows for RoMe). Every loaded channel runs
+through :class:`~repro.core.sched.ChannelSimCore`; the result reports
+per-channel finish times, aggregate bandwidth, and the measured
+load-balance ratio. That gives both ``analytic.transfer_time_ns`` and
+the TPOT model (``perfmodel.tpot.stream_mem_ns``) a ground-truth
+cross-validation path at the extent level (tests/test_core_memory.py,
+benchmarks/engine_xval.py). :meth:`run_extents` survives as a thin
+wrapper that lifts a homogeneous (addr, nbytes) list into a one-kind
+stream.
 
 Channels are independent after address decomposition (no shared resource
-is modeled between channels), so they are simulated one at a time and
-composed by taking the max finish — exactly the "most-loaded channel
-gates completion" structure the analytic model assumes, but measured.
+is modeled between channels), so they compose by taking the max finish —
+exactly the "most-loaded channel gates completion" structure the
+analytic model assumes, but measured. That independence also makes the
+simulation embarrassingly parallel: ``run(stream, workers=N)`` farms
+channels out to a process pool, which is what makes full-cube (32–36
+channel) cycle-level runs practical.
 """
 from __future__ import annotations
 
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
 
 import numpy as np
 
+from ..workloads.stream import ExtentRecord, ExtentStream
 from .address_map import AddressMap, make_address_map
 from .sched import SimResult, Txn, make_channel_sim
 from .sched.traces import hbm4_unit_location, rome_unit_location
@@ -64,14 +75,21 @@ class SystemResult:
         return out
 
 
+def _run_channel(kind: str, kwargs: dict, txns: list[Txn]) -> SimResult:
+    """Simulate one channel — module-level so a process pool can pickle
+    the call. Reconstructs the channel sim from its factory spec."""
+    return make_channel_sim(kind, **kwargs).run(txns)
+
+
 class SystemSim:
     """N independent channel sims behind one address map.
 
     Parameters mirror the single-channel sims; ``n_channels`` (or an
     explicit ``amap``) sets the system width — pass a small count to keep
-    cycle-level runs tractable, the per-channel behaviour is identical.
-    ``max_ref_postpone`` defaults to 32 (the *well-tuned* pooled-refresh
-    MC that the analytic calibration models).
+    serial cycle-level runs tractable, or ``workers=N`` to
+    :meth:`run` for full-width systems; the per-channel behaviour is
+    identical either way. ``max_ref_postpone`` defaults to 32 (the
+    *well-tuned* pooled-refresh MC that the analytic calibration models).
     """
 
     def __init__(self, cfg: MemSystemConfig,
@@ -101,82 +119,94 @@ class SystemSim:
 
     # -- decomposition -----------------------------------------------------
 
-    def _units_of(self, extents: list[tuple[int, int]]) -> np.ndarray:
-        """Global stripe-unit indices touched by the extents (an extent
+    def _units_of(self, addr: int, nbytes: int) -> range:
+        """Global stripe-unit indices touched by one extent (an extent
         touching any byte of a unit transfers the whole unit — the MC
         access granularity / row-rounding overfetch)."""
-        chunks = []
         g = self.amap.stripe_bytes
-        for start, nbytes in extents:
-            if nbytes <= 0:
-                continue
-            first = start // g
-            last = (start + nbytes - 1) // g
-            chunks.append(np.arange(first, last + 1, dtype=np.int64))
-        if not chunks:
-            return np.zeros(0, dtype=np.int64)
-        return np.concatenate(chunks)
+        return range(addr // g, (addr + nbytes - 1) // g + 1)
 
-    def decompose(self, extents: list[tuple[int, int]],
-                  is_write: bool = False,
-                  arrival_ns: float = 0.0) -> dict[int, list[Txn]]:
-        """Per-channel transaction streams for the extents.
+    def decompose(self, stream: ExtentStream) -> dict[int, list[Txn]]:
+        """Per-channel transaction streams for a timed extent stream.
 
-        Channel selection follows the address map's stripe rotation; the
-        channel-local (bank, row, col) placement of a unit is a pure
-        function of its channel-local unit index, so overlapping extents
-        hit the same locations and contiguous extents reproduce the
-        calibration stream on every loaded channel.
+        Each record's units inherit its arrival time, read/write kind,
+        and stream tag. Channel selection follows the address map's
+        stripe rotation; the channel-local (bank, row, col) placement of
+        a unit is a pure function of its channel-local unit index, so
+        overlapping extents hit the same locations and contiguous
+        extents reproduce the calibration stream on every loaded
+        channel. Records are walked in stream (issue) order, so a stream
+        sorted by arrival yields arrival-ordered per-channel queues.
         """
-        units = self._units_of(extents)
         nch = self.amap.n_channels
         geo = self.cfg.geometry.channel
         n_vbas = self.cfg.vbas_per_channel
         per_channel: dict[int, list[Txn]] = {}
-        for unit in units.tolist():
-            c = unit % nch
-            u = unit // nch                    # channel-local unit index
-            if self.is_rome:
-                bank, row, col = rome_unit_location(u, n_vbas)
-            else:
-                # bg_striped: the §VI-A bandwidth-maximizing map — the
-                # same one the calibration streams use.
-                bank, row, col = hbm4_unit_location(u, geo)
-            per_channel.setdefault(c, []).append(
-                Txn(arrival_ns, bank=bank, row=row, col=col,
-                    is_write=is_write))
+        for rec in stream:
+            for unit in self._units_of(rec.addr, rec.nbytes):
+                c = unit % nch
+                u = unit // nch                # channel-local unit index
+                if self.is_rome:
+                    bank, row, col = rome_unit_location(u, n_vbas)
+                else:
+                    # bg_striped: the §VI-A bandwidth-maximizing map — the
+                    # same one the calibration streams use.
+                    bank, row, col = hbm4_unit_location(u, geo)
+                per_channel.setdefault(c, []).append(
+                    Txn(rec.arrival_ns, bank=bank, row=row, col=col,
+                        is_write=rec.is_write, stream=rec.stream_id))
         return per_channel
 
-    def _make_sim(self):
-        # The sims must see the same ChannelGeometry the decomposition
-        # used, or bank ids and timing would silently desynchronize.
+    def _sim_spec(self) -> tuple[str, dict]:
+        """(kind, kwargs) for ``make_channel_sim`` — picklable, so worker
+        processes can rebuild the exact channel sim.
+
+        The sims must see the same ChannelGeometry the decomposition
+        used, or bank ids and timing would silently desynchronize."""
         geo = self.cfg.geometry.channel
+        common = dict(geometry=geo, queue_depth=self.queue_depth,
+                      refresh=self.refresh,
+                      max_ref_postpone=self.max_ref_postpone)
         if self.is_rome:
-            return make_channel_sim(
-                "rome", geometry=geo, n_vbas=self.cfg.vbas_per_channel,
-                queue_depth=self.queue_depth, refresh=self.refresh,
-                max_ref_postpone=self.max_ref_postpone)
+            return "rome", common | {"n_vbas": self.cfg.vbas_per_channel}
         kind = "hbm4" if self.page_policy == "open" else "hbm4_closed"
-        return make_channel_sim(
-            kind, geometry=geo, queue_depth=self.queue_depth,
-            refresh=self.refresh, max_ref_postpone=self.max_ref_postpone)
+        return kind, common
+
+    def _make_sim(self):
+        kind, kwargs = self._sim_spec()
+        return make_channel_sim(kind, **kwargs)
 
     # -- run ---------------------------------------------------------------
 
-    def run_extents(self, extents: list[tuple[int, int]],
-                    is_write: bool = False,
-                    arrival_ns: float = 0.0) -> SystemResult:
-        """Simulate the extents on all loaded channels; idle channels cost
-        nothing. Returns the system-level :class:`SystemResult`."""
-        per_channel = self.decompose(extents, is_write, arrival_ns)
+    def run(self, stream: ExtentStream, workers: int = 1) -> SystemResult:
+        """Simulate a timed extent stream on all loaded channels; idle
+        channels cost nothing. ``workers > 1`` simulates channels in a
+        process pool (channels share no modeled resource, so serial and
+        parallel runs are identical — asserted in tests/test_core_memory).
+        Returns the system-level :class:`SystemResult`."""
+        per_channel = self.decompose(stream)
+        items = sorted(per_channel.items())
+        results: dict[int, SimResult] = {}
+        if workers > 1 and len(items) > 1:
+            kind, kwargs = self._sim_spec()
+            # Spawn, not fork: the caller's process often has JAX's thread
+            # pool alive (fork would risk deadlock), and the worker import
+            # chain is numpy-only so fresh interpreters stay cheap.
+            with ProcessPoolExecutor(
+                    max_workers=min(workers, len(items)),
+                    mp_context=multiprocessing.get_context("spawn")) as pool:
+                futures = [(c, pool.submit(_run_channel, kind, kwargs, txns))
+                           for c, txns in items]
+                for c, fut in futures:
+                    results[c] = fut.result()
+        else:
+            for c, txns in items:
+                results[c] = self._make_sim().run(txns)
+
         nch = self.amap.n_channels
         ch_bytes = np.zeros(nch, dtype=np.int64)
         ch_finish = np.zeros(nch)
-        results: dict[int, SimResult] = {}
-        for c, txns in sorted(per_channel.items()):
-            sim = self._make_sim()
-            r = sim.run(txns)
-            results[c] = r
+        for c, r in results.items():
             ch_bytes[c] = r.bytes_moved
             ch_finish[c] = r.total_ns
         return SystemResult(
@@ -187,19 +217,34 @@ class SystemSim:
             channel_results=results,
         )
 
+    def run_extents(self, extents: list[tuple[int, int]],
+                    is_write: bool = False,
+                    arrival_ns: float = 0.0,
+                    workers: int = 1) -> SystemResult:
+        """Legacy entry point: one homogeneous batch of (addr, nbytes)
+        extents, all one kind, all arriving at once. Thin wrapper that
+        lifts the list into a one-kind :class:`ExtentStream` — verified
+        bit-for-bit against the pre-stream decomposition
+        (tests/test_core_memory.py)."""
+        kind = "write" if is_write else "read"
+        stream = ExtentStream(
+            ExtentRecord(addr, nbytes, kind, arrival_ns)
+            for addr, nbytes in extents if nbytes > 0)
+        return self.run(stream, workers=workers)
+
 
 def bulk_stream_extents(nbytes: int, n_extents: int = 1,
                         base_addr: int = 0,
                         gap_bytes: int = 0) -> list[tuple[int, int]]:
-    """Helper: `n_extents` contiguous extents totalling `nbytes`,
-    optionally separated by `gap_bytes` holes (to exercise load imbalance)."""
-    per = nbytes // n_extents
-    out = []
-    addr = base_addr
-    for _ in range(n_extents):
-        out.append((addr, per))
-        addr += per + gap_bytes
-    return out
+    """Helper: `n_extents` contiguous extents totalling exactly `nbytes`
+    (the last extent absorbs the division remainder), optionally separated
+    by `gap_bytes` holes (to exercise load imbalance). The legacy
+    extent-list view of :func:`repro.workloads.bulk_stream`."""
+    # Lazy import: repro.core.__init__ pulls this module in while
+    # workloads.builders is still importing through repro.core.analytic.
+    from ..workloads.builders import bulk_stream
+    return bulk_stream(nbytes, n_extents, base_addr=base_addr,
+                       gap_bytes=gap_bytes).extents()
 
 
 __all__ = ["SystemSim", "SystemResult", "bulk_stream_extents"]

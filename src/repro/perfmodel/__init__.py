@@ -1,7 +1,9 @@
 from .accelerator import (N_ACCELERATORS, AcceleratorSpec, paper_accelerator,
-                          tpu_v5e)
-from .tpot import StepTime, max_batch, prefill_ns, step_time, tpot_ns
+                          scaled_accelerator, tpu_v5e)
+from .tpot import (StepTime, decode_stream, max_batch, prefill_ns,
+                   step_time, stream_mem_ns, tpot_ns, xval_decode_stream)
 
 __all__ = ["N_ACCELERATORS", "AcceleratorSpec", "paper_accelerator",
-           "tpu_v5e", "StepTime", "max_batch", "prefill_ns", "step_time",
-           "tpot_ns"]
+           "scaled_accelerator", "tpu_v5e", "StepTime", "max_batch",
+           "prefill_ns", "step_time", "tpot_ns", "decode_stream",
+           "stream_mem_ns", "xval_decode_stream"]

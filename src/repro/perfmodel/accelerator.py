@@ -5,8 +5,10 @@ Paper system: 8 accelerators, each 560 TFLOPS BF16 + 8 HBM4 cubes
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
+from ..core.address_map import AddressMap, make_address_map
 from ..core.timing import MemSystemConfig, hbm4_config, rome_config
 
 
@@ -17,14 +19,30 @@ class AcceleratorSpec:
     n_hbm_cubes: int
     mem_cfg: MemSystemConfig
     kernel_overhead_ns: float = 2_000.0   # per-op launch/sync overhead
+    # Non-None pins the memory system to an exact channel count instead of
+    # whole cubes — used by the scaled cross-validation systems whose
+    # cycle-level SystemSim must match the perf model channel for channel.
+    n_channels_override: int | None = None
 
     @property
     def peak_bw_gbps(self) -> float:
+        if self.n_channels_override is not None:
+            return self.n_channels_override * self.mem_cfg.channel_bw_gbps
         return self.mem_cfg.cube_bw_gbps * self.n_hbm_cubes
 
     @property
     def n_channels(self) -> int:
+        if self.n_channels_override is not None:
+            return self.n_channels_override
         return self.mem_cfg.channels_per_cube * self.n_hbm_cubes
+
+    def address_map(self) -> AddressMap:
+        """The stripe map of this accelerator's memory system — the one
+        the TPOT model, LBR accounting, and SystemSim must all share."""
+        amap = make_address_map(self.mem_cfg, self.n_hbm_cubes)
+        if self.n_channels_override is not None:
+            amap = dataclasses.replace(amap, n_channels=self.n_channels_override)
+        return amap
 
     @property
     def op_per_byte(self) -> float:
@@ -51,6 +69,26 @@ def tpu_v5e(mem: str = "hbm4") -> AcceleratorSpec:
     return AcceleratorSpec(name=f"tpu-v5e-{mem}", bf16_tflops=197.0,
                            n_hbm_cubes=1, mem_cfg=cfg,
                            kernel_overhead_ns=1_000.0)
+
+
+def scaled_accelerator(mem: str = "hbm4", n_channels: int = 2,
+                       op_per_byte: float = 280.0,
+                       kernel_overhead_ns: float = 0.0) -> AcceleratorSpec:
+    """A deliberately small system for cycle-level cross-validation: the
+    same per-channel memory as the paper accelerator but only
+    ``n_channels`` channels, with compute scaled to keep the §VI-A
+    arithmetic intensity (so memory-/compute-boundedness of each layer op
+    is preserved). SystemSim can simulate this system exactly, which is
+    what lets ``perfmodel.tpot`` be validated against a measured
+    multi-channel makespan (benchmarks/engine_xval.py)."""
+    cfg = rome_config() if mem == "rome" else hbm4_config()
+    peak_gbps = n_channels * cfg.channel_bw_gbps
+    return AcceleratorSpec(
+        name=f"xval-{mem}-{n_channels}ch",
+        bf16_tflops=peak_gbps * op_per_byte / 1e3,   # GB/s * Op/B -> TFLOPS
+        n_hbm_cubes=1, mem_cfg=cfg,
+        kernel_overhead_ns=kernel_overhead_ns,
+        n_channels_override=n_channels)
 
 
 N_ACCELERATORS = 8   # the paper's serving system size

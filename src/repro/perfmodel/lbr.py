@@ -4,7 +4,10 @@ LBR quantifies how uniformly a step's memory extents spread over the
 memory channels at RoMe's 4 KB striping granularity, normalized to the
 HBM4 baseline (whose 32 B stripes make LBR ~= 1 for any realistic extent).
 Computed per layer kind (attention vs FFN) from the same layer-op traces
-that drive the TPOT model, so Fig 12 and Fig 13 share one source of truth.
+that drive the TPOT model and the unified extent streams, so Fig 12,
+Fig 13, and the SystemSim workloads share one source of truth. Writes
+carry real row-aligned addresses (KV append / activation stores), so the
+write path can be included in the census (``include_writes``).
 """
 from __future__ import annotations
 
@@ -15,8 +18,13 @@ from ..trace.layergraph import decode_ops
 
 
 def lbr_by_kind(w: PaperWorkload, batch: int, seq_len: int = 8192,
-                n_devices: int = 8, n_cubes: int = 8) -> dict:
-    """{'attn': LBR, 'ffn': LBR} for RoMe, normalized to HBM4."""
+                n_devices: int = 8, n_cubes: int = 8,
+                include_writes: bool = False) -> dict:
+    """{'attn': LBR, 'ffn': LBR} for RoMe, normalized to HBM4.
+
+    ``include_writes`` folds each op's row-aligned write extents into its
+    extent set (byte-weighted alongside the reads).
+    """
     ops = decode_ops(w, batch, seq_len, n_devices)
     amap_r = make_address_map(rome_config(), n_cubes)
     amap_h = make_address_map(hbm4_config(), n_cubes)
@@ -30,14 +38,20 @@ def lbr_by_kind(w: PaperWorkload, batch: int, seq_len: int = 8192,
         def weighted(amap):
             num = den = 0.0
             for op in k_ops:
-                lbr = load_balance_ratio(amap, op.extents)
-                num += lbr * op.read_bytes
-                den += op.read_bytes
+                extents = list(op.extents)
+                nbytes = op.read_bytes
+                if include_writes and op.write_extents:
+                    extents += list(op.write_extents)
+                    nbytes += op.write_bytes
+                lbr = load_balance_ratio(amap, extents)
+                num += lbr * nbytes
+                den += nbytes
             return num / den if den else 1.0
         out[kind] = weighted(amap_r) / max(weighted(amap_h), 1e-9)
     return out
 
 
 def lbr_sweep(w: PaperWorkload, batches=(1, 4, 16, 64, 256),
-              seq_len: int = 8192) -> dict:
-    return {b: lbr_by_kind(w, b, seq_len) for b in batches}
+              seq_len: int = 8192, include_writes: bool = False) -> dict:
+    return {b: lbr_by_kind(w, b, seq_len, include_writes=include_writes)
+            for b in batches}

@@ -4,16 +4,24 @@ Per layer-op roofline: t_op = max(memory_time, compute_time) +
 kernel overhead. memory_time divides the op's bytes by the *effective*
 bandwidth: peak x calibrated channel efficiency x the op's load-balance
 ratio (RoMe's 4 KB striping granularity; HBM4's 32 B granularity keeps
-LBR ~= 1). The calibrated efficiencies come from the cycle-level engine
-(repro.core.analytic), so this model and the engine agree on overlapping
-regimes by construction.
+LBR ~= 1). Reads and writes both go through the LBR path (writes carry
+real row-aligned extents from the layer-op allocator). The calibrated
+efficiencies come from the cycle-level engine (repro.core.analytic), so
+this model and the engine agree on overlapping regimes by construction.
+
+The model also speaks the unified workload currency: ``decode_stream``
+builds the timed :class:`repro.workloads.ExtentStream` for a decode step
+and ``stream_mem_ns`` computes the step's memory time from any such
+stream — the same object :class:`repro.core.system_sim.SystemSim`
+simulates, which is what the TPOT-vs-makespan cross-validation in
+``benchmarks/engine_xval.py`` rides on.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 from ..configs.paper_workloads import PaperWorkload
-from ..core.address_map import AddressMap, load_balance_ratio, make_address_map
+from ..core.address_map import AddressMap, load_balance_ratio
 from ..core.analytic import calibrate
 from ..trace.layergraph import LayerOp, decode_ops, prefill_ops
 from .accelerator import AcceleratorSpec, N_ACCELERATORS
@@ -28,20 +36,36 @@ class StepTime:
     lbr_per_kind: dict
 
 
+def _mem_ns(read_extents: list, read_bytes: int,
+            write_extents: list, write_bytes: int,
+            peak: float, amap: AddressMap,
+            read_eff: float, write_eff: float) -> tuple[float, float]:
+    """(mem_ns, read_lbr): shared read+write memory-time formula.
+
+    Both kinds divide their bytes by LBR-degraded effective bandwidth;
+    writes without addresses (legacy prefill scaling) fall back to LBR=1.
+    """
+    lbr = load_balance_ratio(amap, read_extents) if read_extents else 1.0
+    read_ns = (read_bytes / lbr) / (peak * read_eff) if read_bytes else 0.0
+    lbr_w = load_balance_ratio(amap, write_extents) if write_extents else 1.0
+    write_ns = ((write_bytes / lbr_w) / (peak * write_eff)
+                if write_bytes else 0.0)
+    return read_ns + write_ns, lbr
+
+
 def op_times_ns(op: LayerOp, acc: AcceleratorSpec, amap: AddressMap,
                 read_eff: float, write_eff: float) -> tuple[float, float, float]:
     """(mem_ns, comp_ns, lbr) for one op."""
-    lbr = load_balance_ratio(amap, op.extents) if op.extents else 1.0
-    peak = acc.peak_bw_gbps           # GB/s == B/ns
-    read_ns = (op.read_bytes / lbr) / (peak * read_eff) if op.read_bytes else 0.0
-    write_ns = op.write_bytes / (peak * write_eff) if op.write_bytes else 0.0
+    mem_ns, lbr = _mem_ns(op.extents, op.read_bytes,
+                          op.write_extents, op.write_bytes,
+                          acc.peak_bw_gbps, amap, read_eff, write_eff)
     comp_ns = op.flops / (acc.bf16_tflops * 1e3)   # TFLOPs -> ns
-    return read_ns + write_ns, comp_ns, lbr
+    return mem_ns, comp_ns, lbr
 
 
 def step_time(ops: list[LayerOp], acc: AcceleratorSpec) -> StepTime:
     eff = calibrate(acc.mem_cfg)
-    amap = make_address_map(acc.mem_cfg, acc.n_hbm_cubes)
+    amap = acc.address_map()
     total = mem_total = comp_total = 0.0
     per_kind: dict = {}
     lbr_acc: dict = {}
@@ -59,6 +83,68 @@ def step_time(ops: list[LayerOp], acc: AcceleratorSpec) -> StepTime:
     lbr_per_kind = {k: (b / ideal if ideal else 1.0)
                     for k, (b, ideal) in lbr_acc.items()}
     return StepTime(total, mem_total, comp_total, per_kind, lbr_per_kind)
+
+
+# ---------------------------------------------------------------------------
+# Stream-level API (unified workload currency)
+# ---------------------------------------------------------------------------
+
+def stream_mem_ns(stream, acc: AcceleratorSpec,
+                  amap: AddressMap | None = None) -> float:
+    """Step memory time of an :class:`repro.workloads.ExtentStream`.
+
+    Records are grouped by ``stream_id`` (= issuing layer op); each
+    group's reads and writes go through the same LBR-degraded effective
+    bandwidth as :func:`op_times_ns`, and groups are summed — ops within
+    one decode step are serialized by the layer dependency chain. For a
+    stream built by :func:`repro.workloads.from_layer_ops` this equals
+    ``step_time(ops, acc).mem_ns`` by construction (tests/test_workloads).
+    """
+    eff = calibrate(acc.mem_cfg)
+    amap = amap or acc.address_map()
+    peak = acc.peak_bw_gbps
+    groups: dict[int, list] = {}
+    for r in stream:
+        groups.setdefault(r.stream_id, []).append(r)
+    total = 0.0
+    for recs in groups.values():
+        reads = [(r.addr, r.nbytes) for r in recs if not r.is_write]
+        writes = [(r.addr, r.nbytes) for r in recs if r.is_write]
+        m, _ = _mem_ns(reads, sum(n for _, n in reads),
+                       writes, sum(n for _, n in writes),
+                       peak, amap, eff.read_eff, eff.write_eff)
+        total += m
+    return total
+
+
+def decode_stream(w: PaperWorkload, acc: AcceleratorSpec, batch: int,
+                  seq_len: int = 8192, n_devices: int = N_ACCELERATORS):
+    """The timed decode-step :class:`~repro.workloads.ExtentStream` for one
+    device — the exact workload object ``SystemSim.run`` simulates."""
+    from ..workloads import from_layer_ops    # lazy: workloads imports tpot
+    ops = decode_ops(w, batch, seq_len, n_devices)
+    return from_layer_ops(ops, acc)
+
+
+def xval_decode_stream(w: PaperWorkload, mem: str, n_channels: int = 2,
+                       scale: float = 2 ** -11, n_ops: int = 8,
+                       batch: int = 16, seq_len: int = 2048):
+    """(stream, acc) for the TPOT-vs-makespan cross-validation regime.
+
+    One canonical definition of the scaled decode slice — the first
+    ``n_ops`` layer ops, byte-scaled so cycle-level simulation stays in
+    seconds, on an ``n_channels``-wide system with §VI-A arithmetic
+    intensity — shared by benchmarks/engine_xval.py, the tier-1 test,
+    and examples/rome_vs_hbm4.py so they always validate the same
+    regime. Simulate with ``SystemSim(acc.mem_cfg,
+    n_channels=acc.n_channels).run(stream)`` and compare against
+    :func:`stream_mem_ns`.
+    """
+    from ..workloads import from_layer_ops, scale_layer_ops
+    from .accelerator import scaled_accelerator
+    ops = scale_layer_ops(decode_ops(w, batch, seq_len)[:n_ops], scale)
+    acc = scaled_accelerator(mem, n_channels=n_channels)
+    return from_layer_ops(ops, acc), acc
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..workloads.stream import ExtentRecord, ExtentStream
+
 ROW_BYTES = 4096
 
 
@@ -62,6 +64,13 @@ class RowPagedKVCache:
     _free: list = field(init=False)
 
     def __post_init__(self) -> None:
+        # The RoMe contract the whole memory-system view rides on: pages
+        # are exact row multiples (size via tokens_per_row).
+        if self.page_bytes % ROW_BYTES:
+            raise ValueError(
+                f"page of {self.page_bytes} B is not a whole number of "
+                f"{ROW_BYTES} B DRAM rows; size page_tokens with "
+                f"tokens_per_row()")
         shape = (self.n_pages, self.page_tokens, self.n_kv_heads,
                  self.head_dim)
         dt = jnp.dtype(self.dtype)
@@ -116,6 +125,64 @@ class RowPagedKVCache:
 
     def utilization(self) -> float:
         return 1.0 - len(self._free) / self.n_pages
+
+    # -- memory-system view (unified workload records) -----------------------
+    #
+    # The two pools are contiguous device allocations laid out back to
+    # back: page p's K rows live at base_addr + p * page_bytes and its V
+    # rows at base_addr + pool_span + p * page_bytes. page_bytes is an
+    # exact row multiple, so every record below is row-aligned by
+    # construction — the RoMe contract.
+
+    @property
+    def pool_span_bytes(self) -> int:
+        """Byte span of one pool (K or V)."""
+        return self.n_pages * self.page_bytes
+
+    def page_addr(self, page_id: int, base_addr: int = 0,
+                  pool: str = "k") -> int:
+        if pool not in ("k", "v"):
+            raise ValueError(f"pool must be 'k' or 'v', got {pool!r}")
+        off = 0 if pool == "k" else self.pool_span_bytes
+        return base_addr + off + int(page_id) * self.page_bytes
+
+    def read_stream(self, seq_id: int, base_addr: int = 0,
+                    arrival_ns: float = 0.0) -> ExtentStream:
+        """One decode step's KV gather for a sequence, as the unified
+        :class:`~repro.workloads.ExtentStream`: one whole-page read per
+        mapped page *per pool* — the flash-decode kernel streams full
+        rows of both K and V — tagged with the sequence id."""
+        n = int(self.seq_lens[seq_id])
+        n_pages = -(-n // self.page_tokens)
+        return ExtentStream(
+            ExtentRecord(self.page_addr(p, base_addr, pool),
+                         self.page_bytes, "read", arrival_ns, seq_id)
+            for pool in ("k", "v")
+            for p in self.page_table[seq_id, :n_pages])
+
+    def write_stream(self, seq_id: int, page_id: int, slot: int,
+                     base_addr: int = 0,
+                     arrival_ns: float = 0.0) -> ExtentStream:
+        """Pure record emission: the K and V write records for a token at
+        ``(page_id, slot)`` — no bookkeeping, safe to call repeatedly
+        (e.g. to replay one step against several memory configs)."""
+        per_tok = (self.n_kv_heads * self.head_dim
+                   * jnp.dtype(self.dtype).itemsize)
+        return ExtentStream(
+            ExtentRecord(self.page_addr(page_id, base_addr, pool)
+                         + slot * per_tok, per_tok, "write",
+                         arrival_ns, seq_id)
+            for pool in ("k", "v"))
+
+    def append_stream(self, seq_id: int, base_addr: int = 0,
+                      arrival_ns: float = 0.0) -> ExtentStream:
+        """Account one decoded token (side effect — see
+        :meth:`append_token`; the token is accounted exactly once) and
+        return its write records. To re-emit records for an
+        already-accounted token use :meth:`write_stream`."""
+        page_id, slot = self.append_token(seq_id)
+        return self.write_stream(seq_id, page_id, slot, base_addr,
+                                 arrival_ns)
 
     # -- device-side ops -------------------------------------------------------
 

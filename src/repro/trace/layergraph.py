@@ -29,6 +29,7 @@ class LayerOp:
     flops: float                   # per device
     extents: list = field(default_factory=list)   # [(addr, nbytes)] reads
     write_bytes: int = 0           # streamed writes (KV append, activations)
+    write_extents: list = field(default_factory=list)  # [(addr, nbytes)]
 
     @property
     def read_bytes(self) -> int:
@@ -108,16 +109,23 @@ def decode_ops(w: PaperWorkload, batch: int, seq_len: int,
 
     act_bytes = b_local * d * w.bytes_per_param
 
+    def walloc(*sizes: int) -> list:
+        """Row-aligned write extents (KV append / activation stores) from
+        the same allocator as the reads, so the two never overlap."""
+        return [alloc.alloc(s) for s in sizes if s > 0]
+
     for layer in range(w.n_layers):
         # attention
         extents = [alloc.alloc(attn_w)]
         for s in range(min(b_local, 64)):   # cap extent count; scale below
             extents.append(alloc.alloc(kv_read // max(1, min(b_local, 64))))
+        wx = walloc(b_local * kv_per_tok, act_bytes, act_bytes)
         ops.append(LayerOp(
             name=f"L{layer}.attn", kind="attn",
             flops=attn_flops,
             extents=extents,
-            write_bytes=b_local * kv_per_tok + 2 * act_bytes,
+            write_bytes=sum(n for _, n in wx),
+            write_extents=wx,
         ))
         # ffn
         if w.is_moe and layer >= w.n_dense_layers:
@@ -127,28 +135,35 @@ def decode_ops(w: PaperWorkload, batch: int, seq_len: int,
                 ex.append(alloc.alloc(expert_bytes))
             if shared_bytes:
                 ex.append(alloc.alloc(shared_bytes))
+            wx = walloc(act_bytes, act_bytes)
             ops.append(LayerOp(
                 name=f"L{layer}.moe", kind="ffn",
                 flops=ffn_flops, extents=ex,
-                write_bytes=2 * act_bytes))
+                write_bytes=sum(n for _, n in wx), write_extents=wx))
         elif w.is_moe:                                # leading dense layers
             nb = 3 * d * w.dense_d_ff // n_devices * w.bytes_per_param
+            wx = walloc(act_bytes, act_bytes)
             ops.append(LayerOp(
                 name=f"L{layer}.ffn", kind="ffn",
                 flops=2.0 * batch * 3 * d * w.dense_d_ff / n_devices,
-                extents=[alloc.alloc(nb)], write_bytes=2 * act_bytes))
+                extents=[alloc.alloc(nb)],
+                write_bytes=sum(n for _, n in wx), write_extents=wx))
         else:
+            wx = walloc(act_bytes, act_bytes)
             ops.append(LayerOp(
                 name=f"L{layer}.ffn", kind="ffn",
                 flops=ffn_flops,
-                extents=[alloc.alloc(ffn_w)], write_bytes=2 * act_bytes))
+                extents=[alloc.alloc(ffn_w)],
+                write_bytes=sum(n for _, n in wx), write_extents=wx))
 
     # LM head (TP over all devices)
     head_b = d * w.vocab // n_devices * w.bytes_per_param
+    wx = walloc(batch * w.vocab // n_devices * 4)
     ops.append(LayerOp(name="lm_head", kind="head",
                        flops=2.0 * batch * d * w.vocab / n_devices,
                        extents=[alloc.alloc(head_b)],
-                       write_bytes=batch * w.vocab // n_devices * 4))
+                       write_bytes=sum(n for _, n in wx),
+                       write_extents=wx))
     return ops
 
 
@@ -162,6 +177,9 @@ def prefill_ops(w: PaperWorkload, batch: int, seq_len: int,
     scaled = []
     for op in ops:
         f = op.flops * seq_len
+        # Writes scale with the token count; the per-token addresses of the
+        # decode trace no longer apply, so prefill ops carry byte counts
+        # only (the perf model falls back to its address-less write path).
         wb = op.write_bytes * seq_len
         scaled.append(LayerOp(op.name, op.kind, f, op.extents, wb))
     return scaled

@@ -1,0 +1,51 @@
+"""Unified workload description: timed, typed extent streams.
+
+Record schema
+-------------
+:class:`ExtentRecord` is the atom — one contiguous software-level
+transfer::
+
+    ExtentRecord(addr, nbytes, kind, arrival_ns, stream_id)
+
+* ``addr``/``nbytes`` — byte range in the row-aligned virtual address
+  space the layer-op allocator and paged KV cache hand out; the memory
+  system decomposes it into MC-granularity transactions (any touched
+  stripe unit moves whole — the over-fetch rule).
+* ``kind`` — ``"read"`` or ``"write"``; nothing else.
+* ``arrival_ns`` — when the transfer becomes visible to the MC.
+* ``stream_id`` — issuing software stream (layer op index, tenant,
+  sequence); consumers group by it, schedulers may use it for stats.
+
+:class:`ExtentStream` is an ordered, immutable sequence of records:
+sliceable (``s[a:b]``, :meth:`~ExtentStream.limit_bytes`), mergeable
+(``+``, :meth:`~ExtentStream.interleave` for arrival-ordered multi-tenant
+mixes), and derivable (:meth:`~ExtentStream.shifted`,
+:meth:`~ExtentStream.retagged`, :meth:`~ExtentStream.of_kind`).
+
+Builder contract
+----------------
+Builders return streams whose records are in non-decreasing
+``arrival_ns`` (issue order within ties), with row-aligned write
+addresses that never overlap read extents of the same trace:
+
+* :func:`from_layer_ops` — the trace-driven path: per-op arrivals from
+  the TPOT compute/memory roofline, KV-append/activation writes at real
+  allocator addresses.
+* :func:`bulk_stream` / :func:`strided_stream` / :func:`sparse_stream` —
+  synthetic calibration and stress regimes.
+* :meth:`repro.serve.kv_cache.RowPagedKVCache.read_stream` /
+  ``append_stream`` — the serving-side producer of the same records.
+
+Consumers: :meth:`repro.core.system_sim.SystemSim.run` (cycle-accurate
+ground truth), :func:`repro.core.analytic.stream_time_ns` (closed form),
+:func:`repro.perfmodel.tpot.stream_mem_ns` (step memory time).
+"""
+from .builders import (bulk_stream, from_layer_ops, interleave,
+                       scale_layer_ops, sparse_stream, strided_stream)
+from .stream import KINDS, ExtentRecord, ExtentStream
+
+__all__ = [
+    "ExtentRecord", "ExtentStream", "KINDS",
+    "from_layer_ops", "scale_layer_ops",
+    "bulk_stream", "strided_stream", "sparse_stream", "interleave",
+]

@@ -1,0 +1,140 @@
+"""Builders: layer-op traces and synthetic generators -> ExtentStream.
+
+``from_layer_ops`` is the trace-driven path: it walks a
+:class:`repro.trace.layergraph.LayerOp` list and emits every read extent
+and every row-aligned write extent as timed records, with per-op arrival
+times from the same compute/memory roofline the TPOT model uses (op i+1
+becomes visible to the memory system when op i's modeled
+``max(mem, comp) + overhead`` elapses). The synthetic generators cover
+the calibration regimes: ``bulk_stream`` (contiguous), ``strided_stream``
+(gapped, load-imbalance), and ``sparse_stream`` (random row gather, the
+§VII over-fetch workload). Multi-tenant mixes come from
+:meth:`ExtentStream.interleave` over retagged streams.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.analytic import calibrate
+from ..perfmodel.accelerator import AcceleratorSpec
+from ..perfmodel.tpot import op_times_ns
+from ..trace.layergraph import ROW, LayerOp, RowAllocator
+from .stream import ExtentRecord, ExtentStream
+
+
+def from_layer_ops(ops: list[LayerOp], acc: AcceleratorSpec,
+                   start_ns: float = 0.0) -> ExtentStream:
+    """Timed stream for a layer-op trace on accelerator ``acc``.
+
+    Every op's reads and writes arrive together at the op's start time;
+    ``stream_id`` is the op index, so downstream consumers can group
+    records back into ops (``perfmodel.tpot.stream_mem_ns``) or tell
+    tenants apart after :meth:`ExtentStream.interleave`.
+    """
+    eff = calibrate(acc.mem_cfg)
+    amap = acc.address_map()
+    records: list[ExtentRecord] = []
+    t = start_ns
+    for i, op in enumerate(ops):
+        # Zero-byte extents are legal in LayerOp (degenerate toy shapes);
+        # they carry no traffic, so skip them like every other consumer.
+        for a, n in op.extents:
+            if n > 0:
+                records.append(ExtentRecord(a, n, "read", t, i))
+        for a, n in op.write_extents:
+            if n > 0:
+                records.append(ExtentRecord(a, n, "write", t, i))
+        m, c, _ = op_times_ns(op, acc, amap, eff.read_eff, eff.write_eff)
+        t += max(m, c) + acc.kernel_overhead_ns
+    return ExtentStream(records)
+
+
+def scale_layer_ops(ops: list[LayerOp], scale: float) -> list[LayerOp]:
+    """Byte- and FLOP-scaled copy of a layer-op trace.
+
+    Non-empty extents are re-allocated through a fresh
+    :class:`RowAllocator` at ``nbytes * scale`` (floored at one 4 KB
+    row); zero-byte extents carry no traffic and are dropped, like every
+    other consumer skips them. Extent count (of the non-empty extents),
+    op structure, row alignment, and read/write disjointness are
+    preserved — this is what makes cycle-level simulation of the paper's
+    multi-terabyte decode traces tractable (benchmarks/engine_xval.py).
+    """
+    if scale <= 0:
+        raise ValueError(f"scale must be positive, got {scale}")
+    alloc = RowAllocator()
+    out = []
+    for op in ops:
+        ex = [alloc.alloc(max(ROW, int(n * scale)))
+              for _, n in op.extents if n > 0]
+        wx = [alloc.alloc(max(ROW, int(n * scale)))
+              for _, n in op.write_extents if n > 0]
+        out.append(LayerOp(op.name, op.kind, op.flops * scale, ex,
+                           sum(n for _, n in wx), wx))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Synthetic generators
+# ---------------------------------------------------------------------------
+
+def bulk_stream(nbytes: int, n_extents: int = 1, kind: str = "read",
+                base_addr: int = 0, gap_bytes: int = 0,
+                arrival_ns: float = 0.0, stream_id: int = 0) -> ExtentStream:
+    """``n_extents`` contiguous extents totalling exactly ``nbytes``
+    (the last extent absorbs the division remainder), optionally
+    separated by ``gap_bytes`` holes (gapped == load imbalance)."""
+    per, rem = divmod(nbytes, n_extents)
+    if per <= 0:
+        raise ValueError(
+            f"nbytes={nbytes} too small for {n_extents} extents")
+    records = []
+    addr = base_addr
+    for i in range(n_extents):
+        n = per + (rem if i == n_extents - 1 else 0)
+        records.append(ExtentRecord(addr, n, kind, arrival_ns, stream_id))
+        addr += per + gap_bytes
+    return ExtentStream(records)
+
+
+def strided_stream(n_extents: int, extent_bytes: int, stride_bytes: int,
+                   kind: str = "read", base_addr: int = 0,
+                   arrival_ns: float = 0.0, inter_arrival_ns: float = 0.0,
+                   stream_id: int = 0) -> ExtentStream:
+    """Fixed-stride access (extent every ``stride_bytes``): the classic
+    partial-stripe pattern that skews channel load at coarse granularity.
+    ``inter_arrival_ns`` spaces arrivals for open-loop issue."""
+    if stride_bytes < extent_bytes:
+        raise ValueError("stride_bytes must be >= extent_bytes")
+    return ExtentStream(
+        ExtentRecord(base_addr + i * stride_bytes, extent_bytes, kind,
+                     arrival_ns + i * inter_arrival_ns, stream_id)
+        for i in range(n_extents))
+
+
+def sparse_stream(n_extents: int, extent_bytes: int, space_bytes: int,
+                  kind: str = "read", seed: int = 0,
+                  arrival_ns: float = 0.0, stream_id: int = 0) -> ExtentStream:
+    """Random gather of small extents over a ``space_bytes`` region — the
+    DSA-style sparse top-k workload where RoMe's whole-row moves
+    over-fetch (§VII, benchmarks/sparse_overfetch.py). Extents are
+    sampled without replacement on an ``extent_bytes`` grid and emitted
+    in address order (the MC sees a sorted gather list)."""
+    slots = space_bytes // extent_bytes
+    if n_extents > slots:
+        raise ValueError("n_extents exceeds the number of extent slots")
+    rng = np.random.default_rng(seed)
+    picks = np.sort(rng.choice(slots, size=n_extents, replace=False))
+    return ExtentStream(
+        ExtentRecord(int(p) * extent_bytes, extent_bytes, kind, arrival_ns,
+                     stream_id)
+        for p in picks)
+
+
+interleave = ExtentStream.interleave
+
+
+__all__ = [
+    "from_layer_ops", "scale_layer_ops",
+    "bulk_stream", "strided_stream", "sparse_stream", "interleave",
+]

@@ -4,15 +4,22 @@
 model the TPOT reproduction rides on; `repro.core.system_sim.SystemSim`
 is the cycle-level ground truth for the same (addr, nbytes) extents. On
 bulk-stream regimes — where the analytic model claims validity — the two
-must agree within 10 % for both memory systems, reads and writes.
+must agree within 10 % for both memory systems, reads and writes. The
+stream-level sections pin the `run_extents` wrapper bit-for-bit to the
+primary `run(stream)` path, serial runs to `workers>1` runs, and the
+TPOT memory time to the measured makespan of a trace-driven decode
+stream.
 """
 import numpy as np
 import pytest
 
+from repro.configs.paper_workloads import PAPER_WORKLOADS
 from repro.core import analytic
 from repro.core.address_map import AddressMap, channel_bytes, make_address_map
 from repro.core.system_sim import SystemSim, bulk_stream_extents
 from repro.core.timing import hbm4_config, rome_config
+from repro.perfmodel.tpot import stream_mem_ns, xval_decode_stream
+from repro.workloads import ExtentRecord, ExtentStream, bulk_stream
 
 # (n_channels, extents) bulk-stream regimes: one contiguous stream and one
 # multi-extent stream over more channels.
@@ -99,6 +106,75 @@ def test_systemsim_idle_channels_are_free():
     r = sim.run_extents([(0, 4096)])          # one row -> one channel
     assert (r.channel_bytes > 0).sum() == 1
     assert r.total_ns > 0 and len(r.channel_results) == 1
+
+
+# ---------------------------------------------------------------------------
+# Stream API: run_extents wrapper identity, serial vs parallel workers
+# ---------------------------------------------------------------------------
+
+def _results_identical(a, b) -> bool:
+    if (a.total_ns != b.total_ns
+            or a.bytes_moved != b.bytes_moved
+            or not np.array_equal(a.channel_bytes, b.channel_bytes)
+            or not np.array_equal(a.channel_finish_ns, b.channel_finish_ns)
+            or set(a.channel_results) != set(b.channel_results)):
+        return False
+    return all(np.array_equal(a.channel_results[c].finish_ns,
+                              b.channel_results[c].finish_ns)
+               and a.channel_results[c].cmd_counts
+               == b.channel_results[c].cmd_counts
+               for c in a.channel_results)
+
+
+@pytest.mark.parametrize("cfg_name", ["hbm4", "rome"])
+def test_run_extents_is_thin_wrapper_over_stream(cfg_name):
+    """run_extents must be the one-kind-stream special case of run(),
+    bit for bit, on the bulk regimes above."""
+    cfg = hbm4_config() if cfg_name == "hbm4" else rome_config()
+    sim = SystemSim(cfg, n_channels=2)
+    extents = bulk_stream_extents(1 << 16, n_extents=2)
+    for is_write in (False, True):
+        kind = "write" if is_write else "read"
+        via_wrapper = sim.run_extents(extents, is_write=is_write,
+                                      arrival_ns=3.0)
+        via_stream = sim.run(ExtentStream(
+            ExtentRecord(a, n, kind, 3.0) for a, n in extents))
+        assert _results_identical(via_wrapper, via_stream)
+
+
+@pytest.mark.parametrize("cfg_name", ["hbm4", "rome"])
+def test_parallel_workers_identical_to_serial(cfg_name):
+    """Channels share no modeled resource: a process-pool run must
+    reproduce the serial SystemResult exactly."""
+    cfg = hbm4_config() if cfg_name == "hbm4" else rome_config()
+    sim = SystemSim(cfg, n_channels=4)
+    stream = bulk_stream(1 << 16, n_extents=4) + bulk_stream(
+        1 << 14, kind="write", base_addr=1 << 22)
+    serial = sim.run(stream, workers=1)
+    parallel = sim.run(stream, workers=4)
+    assert _results_identical(serial, parallel)
+    assert len(serial.channel_results) == 4
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven: TPOT memory time vs measured multi-channel makespan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mem,scale", [("hbm4", 2 ** -13),
+                                       ("rome", 2 ** -11)])
+def test_tpot_stream_matches_makespan(mem, scale):
+    """SystemSim makespan of the from_layer_ops decode stream agrees with
+    perfmodel.tpot's memory time within 15 % (byte-scaled slice of the
+    DeepSeek decode trace on a 2-channel system — the shared
+    xval_decode_stream regime, with HBM4 scaled further down to keep the
+    tier-1 run fast; the full 2-workload sweep lives in
+    benchmarks/engine_xval.py)."""
+    w = PAPER_WORKLOADS["deepseek-v3"]
+    stream, acc = xval_decode_stream(w, mem, scale=scale)
+    assert stream.write_bytes > 0          # mixed-kind, not read-only
+    res = SystemSim(acc.mem_cfg, n_channels=acc.n_channels).run(stream)
+    model_ns = stream_mem_ns(stream, acc)
+    assert abs(res.total_ns - model_ns) / model_ns < 0.15
 
 
 # ---------------------------------------------------------------------------

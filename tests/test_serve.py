@@ -68,6 +68,36 @@ def test_gather_matches_writes():
     np.testing.assert_allclose(np.asarray(v)[:, 0, 0], [0.0, -1.0, -2.0])
 
 
+def test_kv_cache_emits_unified_records():
+    """The paged KV cache speaks the same ExtentRecord currency as the
+    layer-op traces: whole-page row-aligned reads and in-page writes,
+    covering BOTH the K and the V pool."""
+    c = _cache()
+    c.alloc_seq(2, c.page_tokens + 1)    # spans two pages
+    reads = c.read_stream(2, base_addr=1 << 20, arrival_ns=5.0)
+    assert len(reads) == 4               # 2 pages x {K, V}
+    assert reads.read_bytes == 4 * c.page_bytes
+    addrs = {r.addr for r in reads}
+    assert len(addrs) == 4               # K and V pages never alias
+    for r in reads:
+        assert r.kind == "read" and r.arrival_ns == 5.0 and r.stream_id == 2
+        assert (r.addr - (1 << 20)) % ROW_BYTES == 0
+        assert r.nbytes % ROW_BYTES == 0
+    before = int(c.seq_lens[2])
+    writes = c.append_stream(2)
+    assert int(c.seq_lens[2]) == before + 1   # token accounted exactly once
+    per_tok = c.page_bytes // c.page_tokens
+    assert len(writes) == 2              # K write + V write
+    assert all(w.kind == "write" and w.stream_id == 2
+               and w.nbytes == per_tok for w in writes)
+    # Each write lands inside the token's page of its own pool.
+    page_id, slot = divmod(int(c.seq_lens[2]) - 1, c.page_tokens)
+    pool_page = int(c.page_table[2, page_id])
+    assert [w.addr for w in writes] == [
+        c.page_addr(pool_page, pool="k") + slot * per_tok,
+        c.page_addr(pool_page, pool="v") + slot * per_tok]
+
+
 @settings(deadline=None, max_examples=25)
 @given(seed=st.integers(min_value=0, max_value=999))
 def test_kv_pool_never_double_allocates(seed):

@@ -1,0 +1,200 @@
+"""The unified workload API: ExtentRecord/ExtentStream semantics, the
+trace-driven builder contract (row-aligned writes, roofline arrivals),
+decomposition conservation properties, and the TPOT stream consistency.
+"""
+import numpy as np
+import pytest
+from _proptest import given, settings, strategies as st
+
+from repro.configs.paper_workloads import PAPER_WORKLOADS
+from repro.core.system_sim import SystemSim
+from repro.core.timing import hbm4_config, rome_config
+from repro.perfmodel.accelerator import paper_accelerator, scaled_accelerator
+from repro.perfmodel.tpot import step_time, stream_mem_ns
+from repro.trace.layergraph import ROW, decode_ops
+from repro.workloads import (ExtentRecord, ExtentStream, bulk_stream,
+                             from_layer_ops, interleave, scale_layer_ops,
+                             sparse_stream, strided_stream)
+
+
+# ---------------------------------------------------------------------------
+# Record / stream semantics
+# ---------------------------------------------------------------------------
+
+def test_record_validation():
+    with pytest.raises(ValueError):
+        ExtentRecord(0, 4096, "readwrite")
+    with pytest.raises(ValueError):
+        ExtentRecord(0, 0, "read")
+    with pytest.raises(ValueError):
+        ExtentRecord(-4, 64, "read")
+
+
+def test_stream_slicing_and_aggregates():
+    s = bulk_stream(1 << 16, n_extents=4) + bulk_stream(
+        1 << 14, n_extents=2, kind="write", base_addr=1 << 20)
+    assert len(s) == 6
+    assert s.total_bytes == (1 << 16) + (1 << 14)
+    assert s.read_bytes == 1 << 16 and s.write_bytes == 1 << 14
+    head = s[:4]
+    assert isinstance(head, ExtentStream) and head.write_bytes == 0
+    assert s.of_kind("write").extents() == s.extents("write")
+    assert s.limit_bytes(1 << 15).total_bytes == 1 << 15   # 2 of 4 reads
+
+
+def test_stream_shift_retag_rebase():
+    s = bulk_stream(8192, n_extents=2, base_addr=4096, arrival_ns=10.0)
+    assert s.shifted(5.0)[0].arrival_ns == 15.0
+    assert s.retagged(7).stream_ids == (7,)
+    rb = s.rebased(0)
+    assert rb[0].addr == 0 and rb.total_bytes == s.total_bytes
+
+
+def test_interleave_is_arrival_ordered_and_stable():
+    a = strided_stream(4, 4096, 8192, inter_arrival_ns=10.0).retagged(0)
+    b = strided_stream(4, 4096, 8192, base_addr=1 << 20,
+                       inter_arrival_ns=10.0).retagged(1)
+    mix = interleave([a, b])
+    arrivals = [r.arrival_ns for r in mix]
+    assert arrivals == sorted(arrivals)
+    # Equal arrivals keep input-stream order (a before b).
+    assert [r.stream_id for r in mix[:2]] == [0, 1]
+    # Per-tenant issue order survives the merge.
+    for sid, src in ((0, a), (1, b)):
+        sub = [r.addr for r in mix if r.stream_id == sid]
+        assert sub == [r.addr for r in src]
+
+
+def test_coalesced_merges_rows():
+    # Two tokens in one 4 KB row, one in another: 2 merged row reads.
+    s = ExtentStream([ExtentRecord(100, 512), ExtentRecord(700, 512),
+                      ExtentRecord(9000, 512)])
+    c = s.coalesced(granularity=4096)
+    assert [(r.addr, r.nbytes) for r in c] == [(0, 4096), (8192, 4096)]
+    # Kinds never merge with each other.
+    m = ExtentStream([ExtentRecord(0, 512, "read"),
+                      ExtentRecord(512, 512, "write")])
+    assert len(m.coalesced(granularity=4096)) == 2
+
+
+def test_sparse_stream_is_disjoint_and_sorted():
+    s = sparse_stream(256, 512, 1 << 20, seed=3)
+    addrs = [r.addr for r in s]
+    assert addrs == sorted(addrs) and len(set(addrs)) == len(addrs)
+    assert all(r.nbytes == 512 for r in s)
+
+
+# ---------------------------------------------------------------------------
+# Builder contract: from_layer_ops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wname", ["deepseek-v3", "llama-3-405b"])
+def test_from_layer_ops_write_extents_row_aligned_disjoint(wname):
+    w = PAPER_WORKLOADS[wname]
+    ops = decode_ops(w, batch=16, seq_len=2048)[:8]
+    acc = paper_accelerator("rome")
+    stream = from_layer_ops(ops, acc)
+    writes = stream.of_kind("write")
+    assert len(writes) > 0
+    assert all(r.addr % ROW == 0 for r in writes)
+    # Writes never overlap any read extent of the trace.
+    reads = sorted(stream.extents("read"))
+    starts = [a for a, _ in reads]
+    for r in writes:
+        i = np.searchsorted(starts, r.addr, side="right") - 1
+        if i >= 0:
+            a, n = reads[i]
+            assert r.addr >= a + n, (r, reads[i])
+        if i + 1 < len(reads):
+            assert r.end <= reads[i + 1][0], (r, reads[i + 1])
+
+
+def test_from_layer_ops_arrivals_follow_roofline():
+    w = PAPER_WORKLOADS["llama-3-405b"]
+    ops = decode_ops(w, batch=16, seq_len=2048)[:4]
+    acc = paper_accelerator("hbm4")
+    stream = from_layer_ops(ops, acc)
+    # One arrival per op, strictly increasing, records grouped by op.
+    per_op = {sid: stream.of_stream(sid) for sid in stream.stream_ids}
+    assert set(per_op) == set(range(len(ops)))
+    arrivals = []
+    for sid, sub in per_op.items():
+        ts = {r.arrival_ns for r in sub}
+        assert len(ts) == 1          # reads+writes of an op arrive together
+        arrivals.append(ts.pop())
+        assert sub.read_bytes == ops[sid].read_bytes
+        assert sub.write_bytes == ops[sid].write_bytes
+    assert arrivals == sorted(arrivals) and arrivals[0] == 0.0
+    assert arrivals[-1] > 0.0
+
+
+def test_stream_mem_ns_matches_step_time():
+    """tpot's stream path and op path are the same model by construction."""
+    w = PAPER_WORKLOADS["deepseek-v3"]
+    ops = decode_ops(w, batch=16, seq_len=2048)[:8]
+    for mem in ("hbm4", "rome"):
+        acc = paper_accelerator(mem)
+        st_ = step_time(ops, acc)
+        sm = stream_mem_ns(from_layer_ops(ops, acc), acc)
+        assert sm == pytest.approx(st_.mem_ns, rel=1e-9)
+
+
+def test_scale_layer_ops_preserves_structure():
+    w = PAPER_WORKLOADS["deepseek-v3"]
+    ops = decode_ops(w, batch=16, seq_len=2048)[:8]
+    sops = scale_layer_ops(ops, 2 ** -11)
+    assert len(sops) == len(ops)
+    for o, s in zip(ops, sops):
+        assert len(s.extents) == len(o.extents)
+        assert len(s.write_extents) == len(o.write_extents)
+        assert all(a % ROW == 0 and n >= ROW for a, n in
+                   s.extents + s.write_extents)
+        assert s.flops == pytest.approx(o.flops * 2 ** -11)
+
+
+# ---------------------------------------------------------------------------
+# Decomposition conservation (property): interleaved multi-tenant streams
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n_tenants=st.integers(min_value=1, max_value=4),
+       n_recs=st.integers(min_value=1, max_value=6),
+       rec_units=st.integers(min_value=1, max_value=5),
+       n_writers=st.integers(min_value=0, max_value=2),
+       cfg_rome=st.booleans())
+def test_decompose_conserves_bytes_and_arrival_order(
+        n_tenants, n_recs, rec_units, n_writers, cfg_rome):
+    cfg = rome_config() if cfg_rome else hbm4_config()
+    g = cfg.ag_mc_bytes
+    tenants = []
+    for t in range(n_tenants):
+        kind = "write" if t < min(n_writers, n_tenants) else "read"
+        tenants.append(ExtentStream(
+            ExtentRecord((t * 97 + k * n_tenants) * g, rec_units * g, kind,
+                         k * 5.0 + t, t)
+            for k in range(n_recs)))
+    mix = interleave(tenants)
+    sim = SystemSim(cfg, n_channels=3)
+    per_channel = sim.decompose(mix)
+    # Byte conservation: every touched stripe unit lands on exactly one
+    # channel, at MC granularity.
+    n_txns = sum(len(v) for v in per_channel.values())
+    assert n_txns * g == mix.total_bytes        # extents are unit-aligned
+    # Kind conservation, per record byte count.
+    n_writes = sum(1 for v in per_channel.values() for tx in v if tx.is_write)
+    assert n_writes * g == mix.write_bytes
+    # Per-channel queues inherit the stream's arrival order.
+    for txns in per_channel.values():
+        arr = [tx.arrival_ns for tx in txns]
+        assert arr == sorted(arr)
+    # Stream tags survive decomposition.
+    tags = {tx.stream for v in per_channel.values() for tx in v}
+    assert tags == set(mix.stream_ids)
+
+
+def test_decompose_overfetch_rule():
+    """A 1-byte record still moves a whole stripe unit."""
+    cfg = rome_config()
+    sim = SystemSim(cfg, n_channels=2)
+    per_channel = sim.decompose(ExtentStream([ExtentRecord(10, 1)]))
+    assert sum(len(v) for v in per_channel.values()) == 1
