@@ -9,6 +9,13 @@ internally; this driver reports PASS/FAIL per benchmark and dumps the
 numbers. ``--json PATH`` additionally writes the per-benchmark results
 dict (with status and wall time) to a file, so bench trajectories
 (BENCH_*.json) can be recorded instead of scraping stdout.
+
+The JSON payload carries an explicit top-level ``"status"`` field
+("pass" only when every selected benchmark passed AND the driver loop
+ran to completion) — written via try/finally so even a crash mid-run
+leaves a parseable record. scripts/bench_compare.py refuses any payload
+whose status is not "pass", so a band failure can never hide behind an
+``always()`` artifact-upload step in CI.
 """
 from __future__ import annotations
 
@@ -20,8 +27,8 @@ import traceback
 
 from . import (engine_dequeue, engine_xval, fig09_command_schedule,
                fig10_ca_pins, fig12_tpot, fig13_lbr, fig14_energy,
-               queue_depth, refresh_stall, sparse_overfetch,
-               tab_mc_complexity, vba_design_space)
+               full_cube, policy_sweep, queue_depth, refresh_stall,
+               sparse_overfetch, tab_mc_complexity, vba_design_space)
 
 ALL = [
     ("fig09_command_schedule", fig09_command_schedule),
@@ -36,6 +43,8 @@ ALL = [
     ("fig14_energy", fig14_energy),
     ("refresh_stall", refresh_stall),
     ("sparse_overfetch", sparse_overfetch),
+    ("policy_sweep", policy_sweep),
+    ("full_cube", full_cube),
 ]
 
 
@@ -52,35 +61,46 @@ def main(argv=None) -> int:
     failures = 0
     results = {}
     report = {}
+    completed = False
     t_start = time.time()
-    for name, mod in ALL:
-        if args.pattern and args.pattern not in name:
-            continue
-        t0 = time.time()
-        try:
-            results[name] = mod.run()
-            status = "PASS"
-        except AssertionError as e:
-            results[name] = {"error": str(e)}
-            status = "FAIL"
-            failures += 1
-        except Exception:
-            results[name] = {"error": traceback.format_exc()[-800:]}
-            status = "ERROR"
-            failures += 1
-        wall = time.time() - t0
-        report[name] = {"status": status, "wall_s": round(wall, 2),
-                        "results": results[name]}
-        print(f"[{status}] {name} ({wall:.1f}s)", flush=True)
+    try:
+        for name, mod in ALL:
+            if args.pattern and args.pattern not in name:
+                continue
+            t0 = time.time()
+            try:
+                results[name] = mod.run()
+                status = "PASS"
+            except AssertionError as e:
+                results[name] = {"error": str(e)}
+                status = "FAIL"
+                failures += 1
+            except Exception:
+                results[name] = {"error": traceback.format_exc()[-800:]}
+                status = "ERROR"
+                failures += 1
+            wall = time.time() - t0
+            report[name] = {"status": status, "wall_s": round(wall, 2),
+                            "results": results[name]}
+            print(f"[{status}] {name} ({wall:.1f}s)", flush=True)
+        completed = True
+    finally:
+        # The JSON record must exist (and say "fail") even when the
+        # driver itself dies mid-run — a partial record with a "pass"
+        # default, or no record at all, would let always()-style CI
+        # artifact steps mask the failure.
+        if args.json:
+            ok = completed and failures == 0
+            payload = {"status": "pass" if ok else "fail",
+                       "benchmarks": report,
+                       "total_wall_s": round(time.time() - t_start, 2),
+                       "failures": failures,
+                       "completed": completed}
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1, default=str)
+            print(f"\nwrote {args.json}")
     print()
     print(json.dumps(results, indent=1, default=str))
-    if args.json:
-        payload = {"benchmarks": report,
-                   "total_wall_s": round(time.time() - t_start, 2),
-                   "failures": failures}
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1, default=str)
-        print(f"\nwrote {args.json}")
     return 1 if failures else 0
 
 

@@ -5,16 +5,24 @@ conventional).
 Two independent sources must agree: the architectural census in
 ``repro.core.mc`` (prose facts) and the *introspected* state footprint of
 the scheduler policies that actually run in the engine
-(``SchedulerPolicy.state_footprint()``).
+(``SchedulerPolicy.state_footprint()``). Since the design-space sweep
+the census also extends over *every* registered policy
+(``mc.registry_census``): conventional-MC variants must declare the
+extra hardware they add (``aux_state``), and no RoMe variant may grow
+the 10-param / 5-FSM / 4-state row.
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.core import (FRFCFSOpenPagePolicy, RoMeRowPolicy,
                         complexity_of_policy, conventional_mc_complexity,
-                        max_concurrent_refreshing, rome_mc_complexity)
+                        max_concurrent_refreshing, registry_census,
+                        rome_mc_complexity)
 from repro.core.area import (command_generator_overhead_frac,
                              conventional_mc_area, mc_area_ratio,
                              rome_mc_area)
+from repro.core.sched import registered_policies
 
 
 def run() -> dict:
@@ -35,8 +43,26 @@ def run() -> dict:
                 pol.n_bank_states, pol.page_policy, pol.scheduling)
     # 2 active + up to 3 refreshing concurrently = 5 FSMs (§V-A)
     assert 2 + max_concurrent_refreshing() == r.n_bank_fsms
+    # Extended census over the whole registered design space: every
+    # conventional variant keeps the 15/64/7 row (plus declared
+    # aux_state for its extra machinery); every RoMe variant keeps
+    # 10/5/4 with *no* extra hardware — the §V-A claim that queue depth
+    # and refresh priority are knobs, not state.
+    extended = registry_census()
+    for name, spec in registered_policies().items():
+        c = extended[name]
+        row = (c.n_timing_params, c.n_bank_fsms, c.n_bank_states)
+        if spec.family == "hbm4":
+            assert row == (15, 64, 7), (name, row)
+        else:
+            assert row == (10, 5, 4), (name, row)
+            assert c.aux_state == (), (name, c.aux_state)
+    assert extended["hbm4_writedrain"].aux_state
+    assert extended["hbm4_sidgroup"].aux_state
     ratio = mc_area_ratio()
     return {
+        "extended_census": {n: dataclasses.asdict(c)
+                            for n, c in extended.items()},
         "hbm4": {"timing_params": h.n_timing_params,
                  "bank_fsms": h.n_bank_fsms,
                  "bank_states": h.n_bank_states,

@@ -1,0 +1,253 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: diff fresh ``benchmarks.run --json``
+payloads against committed baselines with per-metric tolerance bands.
+
+Usage::
+
+    python scripts/bench_compare.py bench_engine_xval.json [more.json ...] \
+        [--baseline-dir benchmarks/baselines] [--default-rel-tol 0.05] \
+        [--summary $GITHUB_STEP_SUMMARY] [--write-baseline]
+
+For every benchmark present in a fresh payload that has a committed
+baseline (``<baseline-dir>/<benchmark>.json``), every numeric metric in
+the baseline is compared against the fresh value: a metric is a
+regression when ``|fresh - base| > tol * max(|base|, 1e-12)`` with
+``tol`` resolved from the baseline's ``tolerances`` glob map (first
+match wins) or its ``rel_tol`` default. Wall-time / worker-count leaves
+are never gated (machine-dependent); everything else the simulators
+emit is deterministic, so the default band is tight.
+
+The gate also *refuses* any payload whose top-level ``"status"`` is not
+``"pass"`` — benchmarks.run writes that field via try/finally, so a
+band failure (or a crash after a partial JSON dump) can never hide
+behind an ``always()`` artifact-upload step in CI.
+
+A markdown delta table is printed and, with ``--summary PATH``,
+appended to that file (point it at ``$GITHUB_STEP_SUMMARY``).
+Exit status: 0 clean, 1 regression / bad status, 2 usage error.
+
+``--write-baseline`` (re)generates the baseline files from the fresh
+payloads instead of comparing — run it locally after an intentional
+behaviour change and commit the result.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import sys
+
+SKIP_LEAVES = {"wall_s", "total_wall_s", "workers"}
+DEFAULT_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks", "baselines")
+
+
+def flatten_metrics(obj, prefix: str = "") -> dict[str, float]:
+    """Dotted-path -> value map of the numeric leaves of a results dict,
+    skipping machine-dependent leaves (wall time, worker counts)."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        items = obj.items()
+    elif isinstance(obj, (list, tuple)):
+        items = ((str(i), v) for i, v in enumerate(obj))
+    else:
+        items = ()
+    for k, v in items:
+        key = str(k)
+        if key in SKIP_LEAVES:
+            continue
+        path = f"{prefix}.{key}" if prefix else key
+        if isinstance(v, bool):
+            continue
+        if isinstance(v, (int, float)):
+            out[path] = float(v)
+        elif isinstance(v, (dict, list, tuple)):
+            out.update(flatten_metrics(v, path))
+    return out
+
+
+def tolerance_for(path: str, baseline: dict, default_rel_tol: float) -> float:
+    for pattern, tol in baseline.get("tolerances", {}).items():
+        if fnmatch.fnmatch(path, pattern):
+            return float(tol)
+    return float(baseline.get("rel_tol", default_rel_tol))
+
+
+def compare_benchmark(name: str, fresh_entry: dict, baseline: dict,
+                      default_rel_tol: float) -> list[dict]:
+    """Rows for one benchmark: every baseline metric vs the fresh run."""
+    rows = []
+    fresh = flatten_metrics(fresh_entry.get("results", {}))
+    for path, base in sorted(baseline.get("metrics", {}).items()):
+        tol = tolerance_for(path, baseline, default_rel_tol)
+        row = {"benchmark": name, "metric": path, "baseline": base,
+               "tol": tol}
+        if path not in fresh:
+            row.update(fresh=None, delta_frac=None, ok=False,
+                       note="metric missing from fresh run")
+        else:
+            new = fresh[path]
+            delta = abs(new - base) / max(abs(base), 1e-12)
+            row.update(fresh=new, delta_frac=delta, ok=delta <= tol,
+                       note="")
+        rows.append(row)
+    return rows
+
+
+def load_payload(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def markdown_table(rows: list[dict], only_failures: bool = False) -> str:
+    lines = ["| benchmark | metric | baseline | fresh | Δ | tol | verdict |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if only_failures and r["ok"]:
+            continue
+        delta = ("—" if r["delta_frac"] is None
+                 else f"{r['delta_frac']:+.2%}".replace("+", ""))
+        verdict = "✅" if r["ok"] else f"❌ {r['note'] or 'out of band'}"
+        lines.append(f"| {r['benchmark']} | `{r['metric']}` | "
+                     f"{_fmt(r['baseline'])} | {_fmt(r['fresh'])} | "
+                     f"{delta} | {r['tol']:.0%} | {verdict} |")
+    return "\n".join(lines)
+
+
+def write_baselines(payloads: dict[str, dict], baseline_dir: str,
+                    default_rel_tol: float) -> list[str]:
+    os.makedirs(baseline_dir, exist_ok=True)
+    written = []
+    for _, payload in payloads.items():
+        for bench, entry in payload.get("benchmarks", {}).items():
+            if entry.get("status") != "PASS":
+                print(f"refusing to baseline {bench}: status "
+                      f"{entry.get('status')!r}", file=sys.stderr)
+                continue
+            path = os.path.join(baseline_dir, f"{bench}.json")
+            # Regeneration refreshes the metric values but must keep any
+            # hand-tuned tolerance overrides from the existing baseline.
+            rel_tol, tolerances = default_rel_tol, {}
+            if os.path.exists(path):
+                with open(path) as f:
+                    prev = json.load(f)
+                rel_tol = prev.get("rel_tol", rel_tol)
+                tolerances = prev.get("tolerances", tolerances)
+            out = {"benchmark": bench,
+                   "rel_tol": rel_tol,
+                   "tolerances": tolerances,
+                   "metrics": flatten_metrics(entry.get("results", {}))}
+            with open(path, "w") as f:
+                json.dump(out, f, indent=1, sort_keys=True)
+                f.write("\n")
+            written.append(path)
+    return written
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("fresh", nargs="+",
+                   help="bench_*.json payloads from benchmarks.run --json")
+    p.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
+    p.add_argument("--default-rel-tol", type=float, default=0.05)
+    p.add_argument("--summary", default=None,
+                   help="append the markdown delta table to this file "
+                        "(e.g. $GITHUB_STEP_SUMMARY)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="(re)generate baselines from the fresh payloads "
+                        "instead of comparing")
+    args = p.parse_args(argv)
+
+    try:
+        payloads = {path: load_payload(path) for path in args.fresh}
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"cannot load fresh payload: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        for path in write_baselines(payloads, args.baseline_dir,
+                                    args.default_rel_tol):
+            print(f"wrote {path}")
+        return 0
+
+    failures = []
+    rows: list[dict] = []
+    compared = 0
+    for path, payload in payloads.items():
+        # Explicit status gate: a payload that says anything but "pass"
+        # is a failure regardless of metric deltas (see benchmarks.run).
+        status = payload.get("status")
+        if status != "pass":
+            failures.append(f"{path}: payload status is {status!r} "
+                            f"(expected 'pass')")
+        if not payload.get("benchmarks"):
+            failures.append(f"{path}: payload contains no benchmarks "
+                            f"(empty selection / pattern typo?)")
+        for bench, entry in payload.get("benchmarks", {}).items():
+            if entry.get("status") != "PASS":
+                failures.append(f"{path}: benchmark {bench} status "
+                                f"{entry.get('status')!r}")
+            bfile = os.path.join(args.baseline_dir, f"{bench}.json")
+            if not os.path.exists(bfile):
+                print(f"note: no baseline for {bench} ({bfile}), skipping")
+                continue
+            with open(bfile) as f:
+                baseline = json.load(f)
+            bench_rows = compare_benchmark(bench, entry, baseline,
+                                           args.default_rel_tol)
+            rows.extend(bench_rows)
+            compared += 1
+    if compared == 0:
+        # A gate that compared nothing must not pass: a renamed
+        # benchmark or a ci.yml pattern typo would otherwise disable
+        # gating silently and forever.
+        failures.append("no benchmark was compared against a baseline "
+                        "(rename/typo? regenerate with --write-baseline)")
+    failures.extend(f"{r['benchmark']}.{r['metric']}: "
+                    f"baseline {_fmt(r['baseline'])}, fresh "
+                    f"{_fmt(r['fresh'])} ({r['note'] or 'out of band'})"
+                    for r in rows if not r["ok"])
+
+    n_bad = sum(not r["ok"] for r in rows)
+    header = (f"## Benchmark regression gate\n\n"
+              f"{compared} benchmark(s) compared, {len(rows)} metric(s), "
+              f"{n_bad} out of band, "
+              f"{len(failures)} failure(s) total.\n\n")
+    per_bench: dict[str, list] = {}
+    for r in rows:
+        per_bench.setdefault(r["benchmark"], []).append(r)
+    summary_lines = [
+        f"- `{b}`: {sum(r['ok'] for r in rs)}/{len(rs)} metrics in band"
+        for b, rs in sorted(per_bench.items())]
+    body = header + "\n".join(summary_lines)
+    if n_bad:
+        body += "\n\n" + markdown_table(rows, only_failures=True)
+    elif rows and len(rows) <= 60:
+        body += "\n\n" + markdown_table(rows)
+    if not rows:
+        body += "_no baselined metrics matched_"
+    print(body)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(body + "\n")
+
+    if failures:
+        print("\nREGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nregression gate clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

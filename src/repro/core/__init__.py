@@ -14,13 +14,17 @@ from .command_generator import (CommandGenerator, command_issue_latency_ns,
 from .energy import EnergyBreakdown, EnergyParams, hbm4_energy, rome_energy
 from .mc import (MCComplexity, complexity_of_policy,
                  conventional_mc_complexity, max_concurrent_refreshing,
-                 rome_mc_complexity)
+                 registry_census, rome_mc_complexity)
 from .sched import (ChannelSimCore, FRFCFSOpenPagePolicy,
-                    HBM4ChannelSim, HBM4ClosedPagePolicy,
-                    HBM4ClosedPageChannelSim, RoMeChannelSim, RoMeRowPolicy,
-                    SchedulerPolicy, SimResult, Txn,
+                    FRFCFSWriteDrainPolicy, HBM4ChannelSim,
+                    HBM4ClosedPagePolicy, HBM4ClosedPageChannelSim,
+                    HBM4SIDGroupChannelSim, HBM4SIDGroupPolicy,
+                    HBM4WriteDrainChannelSim, PolicySpec, RoMeChannelSim,
+                    RoMeRowPolicy, SchedulerPolicy, SimResult, Txn,
                     interleaved_stream_txns_hbm4, make_channel_sim,
-                    sequential_read_txns_hbm4, sequential_read_txns_rome)
+                    policy_names, policy_spec, register_policy,
+                    registered_policies, sequential_read_txns_hbm4,
+                    sequential_read_txns_rome)
 from .system_sim import SystemResult, SystemSim, bulk_stream_extents
 from .timing import (ChannelGeometry, CubeGeometry, HBM4Timing,
                      MemSystemConfig, RoMeTiming, hbm4_config, rome_config)
@@ -34,14 +38,18 @@ __all__ = [
     "freed_pins_per_channel", "min_ca_pins", "min_required_interval_ns",
     "EnergyBreakdown", "EnergyParams", "hbm4_energy", "rome_energy",
     "ChannelSimCore", "SchedulerPolicy", "FRFCFSOpenPagePolicy",
-    "HBM4ClosedPagePolicy", "RoMeRowPolicy", "make_channel_sim",
-    "HBM4ChannelSim", "HBM4ClosedPageChannelSim", "RoMeChannelSim",
+    "FRFCFSWriteDrainPolicy", "HBM4ClosedPagePolicy", "HBM4SIDGroupPolicy",
+    "RoMeRowPolicy", "make_channel_sim",
+    "HBM4ChannelSim", "HBM4ClosedPageChannelSim", "HBM4WriteDrainChannelSim",
+    "HBM4SIDGroupChannelSim", "RoMeChannelSim",
+    "PolicySpec", "register_policy", "policy_spec", "policy_names",
+    "registered_policies",
     "SimResult", "Txn",
     "sequential_read_txns_hbm4", "sequential_read_txns_rome",
     "interleaved_stream_txns_hbm4",
     "SystemSim", "SystemResult", "bulk_stream_extents",
     "MCComplexity", "complexity_of_policy", "conventional_mc_complexity",
-    "max_concurrent_refreshing", "rome_mc_complexity",
+    "max_concurrent_refreshing", "registry_census", "rome_mc_complexity",
     "ChannelGeometry", "CubeGeometry", "HBM4Timing", "MemSystemConfig",
     "RoMeTiming", "hbm4_config", "rome_config",
     "ADOPTED", "ALL_VBA_CONFIGS", "BankMode", "PCMode", "VBAConfig",

@@ -27,8 +27,10 @@ the vectorized analytic model used by the TPOT reproduction.
 from __future__ import annotations
 
 from .sched import (ChannelSimCore, FRFCFSOpenPagePolicy,
-                    HBM4ChannelSim, HBM4ClosedPagePolicy,
-                    HBM4ClosedPageChannelSim, RoMeChannelSim, RoMeRowPolicy,
+                    FRFCFSWriteDrainPolicy, HBM4ChannelSim,
+                    HBM4ClosedPagePolicy, HBM4ClosedPageChannelSim,
+                    HBM4SIDGroupChannelSim, HBM4SIDGroupPolicy,
+                    HBM4WriteDrainChannelSim, RoMeChannelSim, RoMeRowPolicy,
                     SchedulerPolicy, SimResult, Txn, _PendingQueue,
                     hbm4_unit_location, interleaved_stream_txns_hbm4,
                     make_channel_sim, sequential_read_txns_hbm4,
@@ -36,8 +38,10 @@ from .sched import (ChannelSimCore, FRFCFSOpenPagePolicy,
 
 __all__ = [
     "ChannelSimCore", "SchedulerPolicy", "FRFCFSOpenPagePolicy",
-    "HBM4ClosedPagePolicy", "RoMeRowPolicy",
-    "HBM4ChannelSim", "HBM4ClosedPageChannelSim", "RoMeChannelSim",
+    "FRFCFSWriteDrainPolicy", "HBM4ClosedPagePolicy", "HBM4SIDGroupPolicy",
+    "RoMeRowPolicy",
+    "HBM4ChannelSim", "HBM4ClosedPageChannelSim", "HBM4WriteDrainChannelSim",
+    "HBM4SIDGroupChannelSim", "RoMeChannelSim",
     "make_channel_sim", "SimResult", "Txn",
     "hbm4_unit_location", "interleaved_stream_txns_hbm4",
     "sequential_read_txns_hbm4", "sequential_read_txns_rome",

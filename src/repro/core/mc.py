@@ -25,6 +25,12 @@ class MCComplexity:
     page_policy: str
     scheduling: tuple
     request_queue_depth: int
+    #: Extra hardware a policy variant carries beyond the bank FSMs
+    #: (write-drain comparators, per-PC SID registers, ...). Empty for
+    #: the two paper rows; populated from ``state_footprint()["aux_state"]``
+    #: so the extended Table IV census stays honest about what each
+    #: design-space point adds.
+    aux_state: tuple = ()
 
 
 def conventional_mc_complexity(banks_per_pc: int = 64) -> MCComplexity:
@@ -68,7 +74,17 @@ def complexity_of_policy(policy: SchedulerPolicy,
         page_policy=fp["page_policy"],
         scheduling=tuple(fp["scheduling"]),
         request_queue_depth=request_queue_depth,
+        aux_state=tuple(fp.get("aux_state", ())),
     )
+
+
+def registry_census() -> dict[str, MCComplexity]:
+    """Table IV rows for *every* registered scheduling point, read out of
+    the policies' own ``state_footprint()`` (benchmarks/policy_sweep.py
+    and tab_mc_complexity report this as the extended census)."""
+    from .sched import registered_policies
+    return {name: complexity_of_policy(spec.make_policy(), spec.queue_depth)
+            for name, spec in registered_policies().items()}
 
 
 def max_concurrent_refreshing(timing: RoMeTiming | None = None) -> int:

@@ -9,12 +9,20 @@ paper's argument that RoMe's win is *structural*:
     idle-advance, finish accounting) plus the transaction/result types.
 ``policies``
     :class:`SchedulerPolicy` implementations: FR-FCFS open-page (the
-    HBM4 baseline), a closed-page HBM4 variant, and RoMe's
-    oldest-first-with-VBA-interleave. A policy's hardware census is
-    introspectable via ``state_footprint()`` (Table IV).
+    HBM4 baseline), a closed-page HBM4 variant, FR-FCFS with hi/lo
+    watermark write draining, FR-FCFS with tCCDR-aware cross-SID burst
+    grouping, and RoMe's oldest-first-with-VBA-interleave (with
+    queue-depth / refresh-priority variants). A policy's hardware census
+    is introspectable via ``state_footprint()`` (Table IV).
 ``channels``
     Thin policy+timing bindings (``HBM4ChannelSim``, ``RoMeChannelSim``,
-    ``HBM4ClosedPageChannelSim``) and the ``make_channel_sim`` factory.
+    ``HBM4ClosedPageChannelSim``, ``HBM4WriteDrainChannelSim``,
+    ``HBM4SIDGroupChannelSim``) and the ``make_channel_sim`` factory
+    over :data:`CHANNEL_SIM_KINDS`.
+``registry``
+    The design-space catalogue: named :class:`PolicySpec` entries binding
+    a channel-sim kind + kwargs to a memory-system family, iterated by
+    benchmarks/policy_sweep.py and the conservation property tests.
 ``traces``
     Synthetic single-channel µbenchmark traces.
 
@@ -34,21 +42,29 @@ Policy contract (full signatures in :mod:`.policies`)::
 The legacy import surface lives on in :mod:`repro.core.engine`, which is
 now a compatibility facade over this package.
 """
-from .channels import (HBM4ChannelSim, HBM4ClosedPageChannelSim,
-                       RoMeChannelSim, make_channel_sim)
+from .channels import (CHANNEL_SIM_KINDS, HBM4ChannelSim,
+                       HBM4ClosedPageChannelSim, HBM4SIDGroupChannelSim,
+                       HBM4WriteDrainChannelSim, RoMeChannelSim,
+                       make_channel_sim)
 from .core import ChannelSimCore, SimResult, Txn, _PendingQueue
-from .policies import (FRFCFSOpenPagePolicy, HBM4ClosedPagePolicy,
+from .policies import (FRFCFSOpenPagePolicy, FRFCFSWriteDrainPolicy,
+                       HBM4ClosedPagePolicy, HBM4SIDGroupPolicy,
                        RoMeRowPolicy, SchedulerPolicy)
+from .registry import (FAMILIES, PolicySpec, policy_names, policy_spec,
+                       register_policy, registered_policies)
 from .traces import (hbm4_unit_location, interleaved_stream_txns_hbm4,
                      rome_unit_location, sequential_read_txns_hbm4,
                      sequential_read_txns_rome)
 
 __all__ = [
     "ChannelSimCore", "SimResult", "Txn",
-    "SchedulerPolicy", "FRFCFSOpenPagePolicy", "HBM4ClosedPagePolicy",
-    "RoMeRowPolicy",
-    "HBM4ChannelSim", "HBM4ClosedPageChannelSim", "RoMeChannelSim",
-    "make_channel_sim",
+    "SchedulerPolicy", "FRFCFSOpenPagePolicy", "FRFCFSWriteDrainPolicy",
+    "HBM4ClosedPagePolicy", "HBM4SIDGroupPolicy", "RoMeRowPolicy",
+    "HBM4ChannelSim", "HBM4ClosedPageChannelSim",
+    "HBM4WriteDrainChannelSim", "HBM4SIDGroupChannelSim", "RoMeChannelSim",
+    "CHANNEL_SIM_KINDS", "make_channel_sim",
+    "PolicySpec", "register_policy", "policy_spec", "policy_names",
+    "registered_policies", "FAMILIES",
     "hbm4_unit_location", "rome_unit_location",
     "interleaved_stream_txns_hbm4",
     "sequential_read_txns_hbm4", "sequential_read_txns_rome",

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 from ..timing import ChannelGeometry, HBM4Timing, RoMeTiming
 from .core import ChannelSimCore
-from .policies import (FRFCFSOpenPagePolicy, HBM4ClosedPagePolicy,
+from .policies import (FRFCFSOpenPagePolicy, FRFCFSWriteDrainPolicy,
+                       HBM4ClosedPagePolicy, HBM4SIDGroupPolicy,
                        RoMeRowPolicy, SchedulerPolicy)
 
 
@@ -25,15 +26,17 @@ class HBM4ChannelSim(ChannelSimCore):
                  queue_depth: int = 64,
                  refresh: bool = True,
                  max_ref_postpone: int = 8,
-                 page_policy: str = "open"):
+                 page_policy: str = "open",
+                 policy: SchedulerPolicy | None = None):
         t = timing or HBM4Timing()
         g = geometry or ChannelGeometry()
-        if page_policy == "open":
-            policy: SchedulerPolicy = FRFCFSOpenPagePolicy(t, g)
-        elif page_policy == "closed":
-            policy = HBM4ClosedPagePolicy(t, g)
-        else:
-            raise ValueError(f"unknown page_policy {page_policy!r}")
+        if policy is None:
+            if page_policy == "open":
+                policy = FRFCFSOpenPagePolicy(t, g)
+            elif page_policy == "closed":
+                policy = HBM4ClosedPagePolicy(t, g)
+            else:
+                raise ValueError(f"unknown page_policy {page_policy!r}")
         super().__init__(policy, queue_depth, refresh, max_ref_postpone)
         self.t = t
         self.g = g
@@ -55,12 +58,53 @@ class HBM4ClosedPageChannelSim(HBM4ChannelSim):
                          max_ref_postpone, page_policy="closed")
 
 
+class HBM4WriteDrainChannelSim(HBM4ChannelSim):
+    """HBM4 channel under :class:`FRFCFSWriteDrainPolicy` (watermark
+    write batching over the open-page FR-FCFS baseline)."""
+
+    def __init__(self, timing: HBM4Timing | None = None,
+                 geometry: ChannelGeometry | None = None,
+                 queue_depth: int = 64,
+                 refresh: bool = True,
+                 max_ref_postpone: int = 8,
+                 high_watermark: int = 8,
+                 low_watermark: int = 2,
+                 drain_budget: int = 16,
+                 write_age_ns: float = 400.0):
+        t = timing or HBM4Timing()
+        g = geometry or ChannelGeometry()
+        super().__init__(t, g, queue_depth, refresh, max_ref_postpone,
+                         policy=FRFCFSWriteDrainPolicy(
+                             t, g, high_watermark=high_watermark,
+                             low_watermark=low_watermark,
+                             drain_budget=drain_budget,
+                             write_age_ns=write_age_ns))
+
+
+class HBM4SIDGroupChannelSim(HBM4ChannelSim):
+    """HBM4 channel under :class:`HBM4SIDGroupPolicy` (tCCDR-aware
+    cross-SID burst grouping over the open-page FR-FCFS baseline)."""
+
+    def __init__(self, timing: HBM4Timing | None = None,
+                 geometry: ChannelGeometry | None = None,
+                 queue_depth: int = 64,
+                 refresh: bool = True,
+                 max_ref_postpone: int = 8):
+        t = timing or HBM4Timing()
+        g = geometry or ChannelGeometry()
+        super().__init__(t, g, queue_depth, refresh, max_ref_postpone,
+                         policy=HBM4SIDGroupPolicy(t, g))
+
+
 class RoMeChannelSim(ChannelSimCore):
     """RoMe MC + command generator for one channel (§V-A).
 
     Queue of depth `queue_depth` (default 2 — the paper's saturation
     point); scheduling is :class:`RoMeRowPolicy` (oldest-first with VBA
     interleaving, Table III gaps, VBA-paired refresh).
+    ``refresh_priority="eager"`` issues every refresh at its due time
+    (``max_ref_postpone`` forced to 1) — the design-space point that
+    trades stream bandwidth for zero refresh debt.
     """
 
     def __init__(self, timing: RoMeTiming | None = None,
@@ -68,10 +112,15 @@ class RoMeChannelSim(ChannelSimCore):
                  n_vbas: int = 16,
                  queue_depth: int = 2,
                  refresh: bool = True,
-                 max_ref_postpone: int = 8):
+                 max_ref_postpone: int = 8,
+                 variant: str | None = None,
+                 refresh_priority: str = "demand"):
         t = timing or RoMeTiming()
         g = geometry or ChannelGeometry()
-        policy = RoMeRowPolicy(t, g, n_vbas=n_vbas)
+        policy = RoMeRowPolicy(t, g, n_vbas=n_vbas, variant=variant,
+                               refresh_priority=refresh_priority)
+        if refresh_priority == "eager":
+            max_ref_postpone = 1
         super().__init__(policy, queue_depth, refresh, max_ref_postpone)
         self.t = t
         self.g = g
@@ -79,12 +128,23 @@ class RoMeChannelSim(ChannelSimCore):
         self.row_bytes = policy.row_bytes  # 4 KB
 
 
+#: kind -> channel sim class, the factory table ``SystemSim`` and the
+#: policy registry key off.
+CHANNEL_SIM_KINDS = {
+    "hbm4": HBM4ChannelSim,
+    "hbm4_closed": HBM4ClosedPageChannelSim,
+    "hbm4_writedrain": HBM4WriteDrainChannelSim,
+    "hbm4_sidgroup": HBM4SIDGroupChannelSim,
+    "rome": RoMeChannelSim,
+}
+
+
 def make_channel_sim(kind: str, **kwargs) -> ChannelSimCore:
-    """Factory: ``"hbm4"`` | ``"hbm4_closed"`` | ``"rome"``."""
-    if kind == "hbm4":
-        return HBM4ChannelSim(**kwargs)
-    if kind == "hbm4_closed":
-        return HBM4ClosedPageChannelSim(**kwargs)
-    if kind == "rome":
-        return RoMeChannelSim(**kwargs)
-    raise ValueError(f"unknown channel sim kind {kind!r}")
+    """Factory over :data:`CHANNEL_SIM_KINDS` (``"hbm4"``,
+    ``"hbm4_closed"``, ``"hbm4_writedrain"``, ``"hbm4_sidgroup"``,
+    ``"rome"``)."""
+    try:
+        cls = CHANNEL_SIM_KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown channel sim kind {kind!r}") from None
+    return cls(**kwargs)

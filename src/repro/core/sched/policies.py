@@ -232,15 +232,7 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
         # per-PC burst spacing, DQ bus) — the column C/A path sustains one
         # command per PC per tCCDS, so a pick may legally land before
         # `now` (commands ride independent buses).
-        best = None
-        best_t = None
-        for tx in window:
-            b = banks[tx.bank]
-            if b.open_row == tx.row and b.t_act <= 1e17:
-                r = self.col_ready(tx.bank, b, tx.is_write, tx.sid,
-                                   tx.arrival_ns)
-                if best_t is None or r < best_t - 1e-12:
-                    best, best_t = tx, r
+        best, best_t = self._pick_column(window, now)
         if best is not None:
             tx, r = best, best_t
             b = banks[tx.bank]
@@ -265,14 +257,46 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
                 b.t_last_rd = cmd_t
                 self.pc_last_rd_cmd[pc] = cmd_t
                 counts["RD"] += 1
-            self._after_column(b, cmd_t)
+            self._after_column(tx, b, cmd_t)
             completions.append((tx, data_end))
             now = max(now, cmd_t)
             issued = True
 
         return now, issued, completions
 
-    def _after_column(self, b: _BankState, cmd_t: float) -> None:
+    # -- subclass hooks ----------------------------------------------------
+
+    def _column_groups(self, window: list[Txn],
+                       now: float) -> list[list[Txn]]:
+        """Candidate groups for the column bus, in preference order: the
+        pick comes from the first group with an issuable row hit.
+        Write-drain narrows the head group to one kind at a time but
+        keeps the other kind as a fallback — a group with no issuable
+        transaction must never stall the bus while a lower-preference
+        one could issue (liveness: row-prep keeps rows open for *queued*
+        hits regardless of kind, so a kind-filtered head group can be
+        blocked behind the very rows the fallback group holds open)."""
+        return [window]
+
+    def _pick_column(self, window: list[Txn], now: float):
+        """Earliest-ready activated row hit from the first non-empty
+        candidate group; oldest (window order) on ties. Returns
+        ``(txn, ready_ns)`` or ``(None, None)``."""
+        for group in self._column_groups(window, now):
+            best = None
+            best_t = None
+            for tx in group:
+                b = self.banks[tx.bank]
+                if b.open_row == tx.row and b.t_act <= 1e17:
+                    r = self.col_ready(tx.bank, b, tx.is_write, tx.sid,
+                                       tx.arrival_ns)
+                    if best_t is None or r < best_t - 1e-12:
+                        best, best_t = tx, r
+            if best is not None:
+                return best, best_t
+        return None, None
+
+    def _after_column(self, tx: Txn, b: _BankState, cmd_t: float) -> None:
         """Open-page: the row stays open after a column access."""
 
     # -- introspection -----------------------------------------------------
@@ -307,12 +331,192 @@ class HBM4ClosedPagePolicy(FRFCFSOpenPagePolicy):
     page_policy = "closed (auto-precharge after access)"
     keep_open_for_hits = False
 
-    def _after_column(self, b: _BankState, cmd_t: float) -> None:
+    def _after_column(self, tx: Txn, b: _BankState, cmd_t: float) -> None:
         pr = self.pre_ready(b, cmd_t)
         b.t_rp_done = pr + self.t.tRP
         b.open_row = None
         self.counts["PRE"] += 1
         self.counts["ca_commands"] += 1
+
+
+class FRFCFSWriteDrainPolicy(FRFCFSOpenPagePolicy):
+    """FR-FCFS with watermark-based write draining (posted writes).
+
+    Conventional HBM controllers treat writes as *posted* traffic: they
+    sit in a write buffer and are released in batches, so the tRTW/tWTRS
+    bus turnarounds are paid once per burst instead of once per write.
+    The state machine here:
+
+    * *Drain entry*: queued-write occupancy >= ``high_watermark`` (and,
+      under sustained mixed load, only after at least ``high_watermark``
+      reads were serviced since the last drain — symmetric batching, so
+      a 50/50 backlog alternates read and write bursts instead of
+      re-triggering drains back to back).
+    * *Drain exit* (hysteresis with a hard cap): occupancy fell to
+      ``low_watermark``, or ``drain_budget`` writes were drained this
+      batch. The cap is the read-starvation bound the tests pin: reads
+      are blocked by at most ``drain_budget`` writes per drain.
+    * *Outside drain*: reads own the column bus. A write becomes
+      individually eligible only once aged past ``write_age_ns`` (and
+      only while occupancy is below the watermark) — which is what
+      stops the plain-FR-FCFS pathology of slotting a lone write into
+      every read-stream gap and paying both turnaround penalties for a
+      single burst. Writes remain the *fallback* group throughout:
+      row-prep keeps rows open for queued hits of either kind, so a
+      kind-filtered head group must never stall a bus the fallback
+      could use (liveness).
+
+    Table IV cost over plain FR-FCFS: a 2-state drain FSM, two occupancy
+    comparators, drained/serviced batch counters, and a write-age
+    timestamp compare — reported via ``state_footprint()`` so the
+    complexity census stays honest.
+    """
+
+    count_keys = FRFCFSOpenPagePolicy.count_keys + ("drain_entries",)
+
+    def __init__(self, timing: HBM4Timing | None = None,
+                 geometry: ChannelGeometry | None = None,
+                 high_watermark: int = 8, low_watermark: int = 2,
+                 drain_budget: int = 16, write_age_ns: float = 400.0):
+        super().__init__(timing, geometry)
+        if not 0 < low_watermark <= high_watermark:
+            raise ValueError(
+                f"need 0 < low_watermark <= high_watermark, got "
+                f"{low_watermark}/{high_watermark}")
+        if drain_budget < 1:
+            raise ValueError(f"drain_budget must be >= 1, got {drain_budget}")
+        self.high_watermark = high_watermark
+        self.low_watermark = low_watermark
+        self.drain_budget = drain_budget
+        self.write_age_ns = write_age_ns
+
+    def begin(self, counts: dict) -> None:
+        super().begin(counts)
+        self.draining = False
+        self._drained = 0            # writes issued in the current batch
+        self._reads_since = self.high_watermark   # allow an initial drain
+
+    def _column_groups(self, window: list[Txn],
+                       now: float) -> list[list[Txn]]:
+        writes = [tx for tx in window if tx.is_write]
+        reads = [tx for tx in window if not tx.is_write]
+        if self.draining and (self._drained >= self.drain_budget
+                              or len(writes) <= self.low_watermark):
+            self.draining = False
+            self._reads_since = 0
+        if (not self.draining and len(writes) >= self.high_watermark
+                and (not reads
+                     or self._reads_since >= self.high_watermark)):
+            self.draining = True
+            self._drained = 0
+            self.counts["drain_entries"] += 1
+        if self.draining:
+            return [writes, reads]
+        if not reads:
+            # Pure posted traffic: only aged writes issue — young ones
+            # wait for a batch (or for the core's idle-advance to age
+            # them). No reads queued means nothing can deadlock behind
+            # the held writes.
+            return [[tx for tx in writes
+                     if now - tx.arrival_ns >= self.write_age_ns]]
+        head = reads
+        if len(writes) < self.high_watermark:
+            # Overdue trickle writes ride along with the reads; at or
+            # above the watermark they wait for the (imminent) batch
+            # drain instead of fragmenting it.
+            head = reads + [tx for tx in writes
+                            if now - tx.arrival_ns >= self.write_age_ns]
+        return [head, writes]
+
+    def _after_column(self, tx: Txn, b: _BankState, cmd_t: float) -> None:
+        if tx.is_write:
+            if self.draining:
+                self._drained += 1
+        else:
+            self._reads_since += 1
+
+    def state_footprint(self) -> dict:
+        fp = super().state_footprint()
+        fp["name"] = "frfcfs_writedrain"
+        fp["scheduling"] = fp["scheduling"] + (
+            "write draining (hi/lo watermark)",)
+        fp["aux_state"] = ("drain-mode FSM (2 states)",
+                           "write-occupancy hi/lo comparators",
+                           "drained / reads-serviced batch counters",
+                           "write-age timestamp compare")
+        return fp
+
+
+class HBM4SIDGroupPolicy(FRFCFSOpenPagePolicy):
+    """FR-FCFS with tCCDR-aware cross-SID burst grouping.
+
+    Column bursts addressed to different SIDs (stack levels) of the same
+    pseudo channel must be spaced by tCCDR > tCCDS. This policy keeps a
+    last-issued-SID register per PC and prefers a same-SID candidate
+    whenever it is ready within the ``tCCDR - tCCDS`` window a switch
+    would forfeit, coalescing bursts into same-SID runs (the
+    rank-grouping trick of conventional multi-rank controllers).
+
+    Measured honestly (benchmarks/policy_sweep.py): with the Table V
+    timings, FR-FCFS's readiness-driven pick already encodes the tCCDR
+    penalty, so explicit grouping is bandwidth-*neutral* (bounded by the
+    margin rule) — what it buys is fewer SID switch *events*
+    (``sid_switches`` stat; rank-switch IO/ODT stress) and a guaranteed
+    bound rather than a greedy accident. That neutrality is itself a
+    design-space result the sweep reports: conventional-MC scheduling
+    tricks buy margins, not multiples — RoMe's granularity change is
+    what moves the needle (Table IV / Fig 9).
+
+    Table IV cost over plain FR-FCFS: one SID register per PC plus a
+    readiness comparator — see ``state_footprint()``.
+    """
+
+    count_keys = FRFCFSOpenPagePolicy.count_keys + ("sid_switches",)
+
+    def begin(self, counts: dict) -> None:
+        super().begin(counts)
+        self.pc_cur_sid = [-1] * self.g.pseudo_channels
+
+    def _pick_column(self, window: list[Txn], now: float):
+        best, best_t = super()._pick_column(window, now)
+        if best is None:
+            return best, best_t
+        pc = self._pc(best.bank)
+        cur = self.pc_cur_sid[pc]
+        if cur < 0 or best.sid == cur:
+            return best, best_t
+        # Switching SIDs forfeits tCCDR - tCCDS of the next same-SID
+        # burst; take a same-SID candidate if one is ready inside that
+        # window.
+        margin = self.t.tCCDR - self.t.tCCDS
+        same, same_t = None, None
+        for tx in window:
+            if tx.sid != cur or self._pc(tx.bank) != pc:
+                continue
+            b = self.banks[tx.bank]
+            if b.open_row == tx.row and b.t_act <= 1e17:
+                r = self.col_ready(tx.bank, b, tx.is_write, tx.sid,
+                                   tx.arrival_ns)
+                if same_t is None or r < same_t - 1e-12:
+                    same, same_t = tx, r
+        if same is not None and same_t <= best_t + margin + 1e-12:
+            return same, same_t
+        return best, best_t
+
+    def _after_column(self, tx: Txn, b: _BankState, cmd_t: float) -> None:
+        pc = self._pc(tx.bank)
+        if 0 <= self.pc_cur_sid[pc] != tx.sid:
+            self.counts["sid_switches"] += 1
+        self.pc_cur_sid[pc] = tx.sid
+
+    def state_footprint(self) -> dict:
+        fp = super().state_footprint()
+        fp["name"] = "frfcfs_sidgroup"
+        fp["scheduling"] = fp["scheduling"] + (
+            "cross-SID burst grouping (tCCDR-aware)",)
+        fp["aux_state"] = ("last-SID register per PC",
+                           "same-SID readiness comparator")
+        return fp
 
 
 # ===========================================================================
@@ -333,11 +537,25 @@ class RoMeRowPolicy(SchedulerPolicy):
                   "ca_commands")
     page_policy = "none (always precharge after row access)"
 
+    #: Refresh priorities a variant may select. "demand" is the paper MC
+    #: (refresh postponed under queued demand, bounded by the core's
+    #: ``max_ref_postpone``); "eager" never postpones — the channel
+    #: binding maps it to ``max_ref_postpone=1``.
+    REFRESH_PRIORITIES = ("demand", "eager")
+
     def __init__(self, timing: RoMeTiming | None = None,
                  geometry: ChannelGeometry | None = None,
-                 n_vbas: int = 16):
+                 n_vbas: int = 16,
+                 variant: str | None = None,
+                 refresh_priority: str = "demand"):
+        if refresh_priority not in self.REFRESH_PRIORITIES:
+            raise ValueError(
+                f"refresh_priority must be one of {self.REFRESH_PRIORITIES}, "
+                f"got {refresh_priority!r}")
         self.t = timing or RoMeTiming()
         self.g = geometry or ChannelGeometry()
+        self.variant = variant
+        self.refresh_priority = refresh_priority
         self.n_vbas = n_vbas
         self.row_bytes = self.g.row_bytes * 2 * self.g.pseudo_channels  # 4 KB
         self._cg = CommandGenerator()
@@ -410,8 +628,11 @@ class RoMeRowPolicy(SchedulerPolicy):
     # -- introspection -----------------------------------------------------
 
     def state_footprint(self) -> dict:
-        return {
-            "name": "rome_oldest_first",
+        name = "rome_oldest_first"
+        if self.variant:
+            name += f"_{self.variant}"
+        fp = {
+            "name": name,
             "timing_params": self.t.n_managed(),
             # 2 VBAs operating + up to 3 refreshing simultaneously.
             "fsm_instances": 2 + self.t.max_concurrent_refreshing(),
@@ -419,3 +640,10 @@ class RoMeRowPolicy(SchedulerPolicy):
             "page_policy": self.page_policy,
             "scheduling": ("VBA interleaving",),
         }
+        if self.refresh_priority != "demand":
+            # The census is invariant across variants — the MC sheds no
+            # FSM state by refreshing eagerly; only the governor knob
+            # differs, and the footprint says so.
+            fp["scheduling"] = fp["scheduling"] + (
+                f"refresh priority: {self.refresh_priority}",)
+        return fp

@@ -1,0 +1,158 @@
+"""Scheduler-policy registry: the design-space catalogue.
+
+One :class:`PolicySpec` per scheduling point — a named, picklable
+binding of a channel-sim kind (:data:`~.channels.CHANNEL_SIM_KINDS`) to
+its constructor arguments, plus the memory-system *family* that decides
+how :class:`repro.core.system_sim.SystemSim` decomposes extents for it
+(``"hbm4"`` = 32 B column transactions, ``"rome"`` = 4 KB row
+transactions). The registry is what makes the policy sweep
+(benchmarks/policy_sweep.py) and the conservation property test iterate
+"every scheduling point we claim to support" instead of a hand-kept
+list, and every spec's policy feeds the Table IV census through
+``SchedulerPolicy.state_footprint()`` /
+:func:`repro.core.mc.complexity_of_policy`.
+
+Default catalogue (9 points):
+
+========================  ======  =============================================
+name                      family  scheduling point
+========================  ======  =============================================
+``hbm4_frfcfs``           hbm4    FR-FCFS open-page, qd 64 (paper baseline)
+``hbm4_closed``           hbm4    auto-precharge closed page, qd 64
+``hbm4_writedrain``       hbm4    FR-FCFS + hi/lo-watermark write draining
+``hbm4_sidgroup``         hbm4    FR-FCFS + tCCDR-aware cross-SID grouping
+``rome_qd2``              rome    RoMe oldest-first, qd 2 (paper point)
+``rome_qd3``              rome    RoMe, qd 3
+``rome_qd4``              rome    RoMe, qd 4 (area-study provisioning)
+``rome_qd8``              rome    RoMe, qd 8 (diminishing-returns probe)
+``rome_eager_refresh``    rome    RoMe qd 2, refresh never postponed
+========================  ======  =============================================
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .channels import make_channel_sim
+from .core import ChannelSimCore
+from .policies import SchedulerPolicy
+
+FAMILIES = ("hbm4", "rome")
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """One registered scheduling point of the design space."""
+
+    name: str
+    family: str                  # "hbm4" | "rome" (extent decomposition)
+    sim_kind: str                # make_channel_sim kind
+    sim_kwargs: dict = field(default_factory=dict)
+    description: str = ""
+    table_iv: str = ""           # the Table IV row/contrast this point informs
+
+    def __post_init__(self) -> None:
+        if self.family not in FAMILIES:
+            raise ValueError(
+                f"family must be one of {FAMILIES}, got {self.family!r}")
+
+    @property
+    def queue_depth(self) -> int:
+        return self.sim_kwargs.get("queue_depth",
+                                   64 if self.family == "hbm4" else 2)
+
+    def make_sim(self, **overrides) -> ChannelSimCore:
+        """Single-channel sim for this point (overrides win over the
+        registered kwargs — e.g. ``refresh=False`` for µbenchmarks)."""
+        return make_channel_sim(self.sim_kind, **(self.sim_kwargs | overrides))
+
+    def make_policy(self) -> SchedulerPolicy:
+        """A fresh policy instance (for ``state_footprint()`` census)."""
+        return self.make_sim().policy
+
+    def system_sim(self, n_channels: int | None = None, **sys_kwargs):
+        """A :class:`~repro.core.system_sim.SystemSim` running this
+        policy on the family's memory-system config."""
+        # Lazy import: system_sim imports this package.
+        from ..system_sim import SystemSim
+        from ..timing import hbm4_config, rome_config
+        cfg = hbm4_config() if self.family == "hbm4" else rome_config()
+        return SystemSim(cfg, n_channels=n_channels,
+                         channel_kind=self.sim_kind,
+                         channel_kwargs=dict(self.sim_kwargs), **sys_kwargs)
+
+
+_REGISTRY: dict[str, PolicySpec] = {}
+
+
+def register_policy(spec: PolicySpec, replace: bool = False) -> PolicySpec:
+    if not replace and spec.name in _REGISTRY:
+        raise ValueError(f"policy {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def policy_spec(name: str) -> PolicySpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; registered: {policy_names()}") from None
+
+
+def policy_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def registered_policies() -> dict[str, PolicySpec]:
+    """Snapshot of the registry (mutating it does not affect the registry)."""
+    return dict(_REGISTRY)
+
+
+def _register_defaults() -> None:
+    register_policy(PolicySpec(
+        "hbm4_frfcfs", "hbm4", "hbm4", {"queue_depth": 64},
+        description="FR-FCFS open-page over a 64-entry CAM queue "
+                    "(the paper's conventional-HBM4 baseline)",
+        table_iv="conventional row: 15 timing params, 64x 7-state FSMs"))
+    register_policy(PolicySpec(
+        "hbm4_closed", "hbm4", "hbm4_closed", {"queue_depth": 64},
+        description="auto-precharge closed page: sheds row-locality state, "
+                    "caps at the tRC random-row rate",
+        table_iv="conventional row minus row-buffer locality"))
+    register_policy(PolicySpec(
+        "hbm4_writedrain", "hbm4", "hbm4_writedrain",
+        {"queue_depth": 64, "high_watermark": 8, "low_watermark": 2,
+         "drain_budget": 16, "write_age_ns": 400.0},
+        description="FR-FCFS + hi/lo-watermark write draining (batched "
+                    "turnarounds, bounded read starvation)",
+        table_iv="conventional row + drain FSM/comparators (aux_state)"))
+    register_policy(PolicySpec(
+        "hbm4_sidgroup", "hbm4", "hbm4_sidgroup", {"queue_depth": 64},
+        description="FR-FCFS + tCCDR-aware cross-SID burst grouping "
+                    "(rank grouping)",
+        table_iv="conventional row + per-PC SID register (aux_state)"))
+    register_policy(PolicySpec(
+        "rome_qd2", "rome", "rome", {"queue_depth": 2},
+        description="RoMe oldest-first + VBA interleave, queue depth 2 "
+                    "(the paper's saturation point)",
+        table_iv="RoMe row: 10 timing params, 5x 4-state FSMs"))
+    for qd in (3, 4, 8):
+        register_policy(PolicySpec(
+            f"rome_qd{qd}", "rome", "rome",
+            {"queue_depth": qd, "variant": f"qd{qd}"},
+            description=f"RoMe oldest-first, queue depth {qd}",
+            table_iv="RoMe row (census invariant in queue depth)"))
+    register_policy(PolicySpec(
+        "rome_eager_refresh", "rome", "rome",
+        {"queue_depth": 2, "variant": "eager_ref",
+         "refresh_priority": "eager"},
+        description="RoMe qd 2 with refresh never postponed "
+                    "(zero refresh debt, pays stream stalls)",
+        table_iv="RoMe row (governor knob only; census invariant)"))
+
+
+_register_defaults()
+
+
+__all__ = ["PolicySpec", "register_policy", "policy_spec", "policy_names",
+           "registered_policies", "FAMILIES"]

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import multiprocessing
 from concurrent.futures import ProcessPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -51,6 +51,10 @@ class SystemResult:
     channel_bytes: np.ndarray       # bytes per channel (MC granularity)
     channel_finish_ns: np.ndarray   # per-channel makespan (0 for idle)
     channel_results: dict           # channel -> SimResult (loaded channels)
+    #: channel -> the exact txn list the channel sim ran, in the input
+    #: order its SimResult.finish_ns indexes — so per-txn attribution
+    #: (e.g. read latency) never depends on re-running decompose().
+    channel_txns: dict = field(default_factory=dict)
 
     @property
     def bandwidth_gbps(self) -> float:
@@ -98,9 +102,27 @@ class SystemSim:
                  queue_depth: int | None = None,
                  refresh: bool = True,
                  max_ref_postpone: int = 32,
-                 page_policy: str = "open"):
+                 page_policy: str = "open",
+                 channel_kind: str | None = None,
+                 channel_kwargs: dict | None = None,
+                 sids: int = 1,
+                 sid_capacity_bytes: int = 64 << 20):
         self.cfg = cfg
         self.is_rome = cfg.ag_mc_bytes >= cfg.row_bytes
+        if channel_kind is not None:
+            # The decomposition granularity is set by cfg; a channel kind
+            # of the other family would silently mis-shape every txn.
+            if (channel_kind == "rome") != self.is_rome:
+                raise ValueError(
+                    f"channel_kind {channel_kind!r} does not match the "
+                    f"{'rome' if self.is_rome else 'hbm4'}-granularity cfg "
+                    f"{cfg.name!r}")
+        self.channel_kind = channel_kind
+        self.channel_kwargs = dict(channel_kwargs or {})
+        if sids < 1:
+            raise ValueError(f"sids must be >= 1, got {sids}")
+        self.sids = sids
+        self.sid_capacity_bytes = sid_capacity_bytes
         if amap is None:
             amap = make_address_map(cfg, n_cubes=1)
             if n_channels is not None:
@@ -143,6 +165,12 @@ class SystemSim:
         n_vbas = self.cfg.vbas_per_channel
         per_channel: dict[int, list[Txn]] = {}
         for rec in stream:
+            # SID (stack level) from the address region: tenants/buffers
+            # in different stack levels exercise the cross-SID (tCCDR /
+            # tX2XR) timing paths. sids=1 (the default) keeps every txn
+            # on SID 0 — bit-identical to the pre-SID decomposition.
+            sid = ((rec.addr // self.sid_capacity_bytes) % self.sids
+                   if self.sids > 1 else 0)
             for unit in self._units_of(rec.addr, rec.nbytes):
                 c = unit % nch
                 u = unit // nch                # channel-local unit index
@@ -154,7 +182,8 @@ class SystemSim:
                     bank, row, col = hbm4_unit_location(u, geo)
                 per_channel.setdefault(c, []).append(
                     Txn(rec.arrival_ns, bank=bank, row=row, col=col,
-                        is_write=rec.is_write, stream=rec.stream_id))
+                        is_write=rec.is_write, sid=sid,
+                        stream=rec.stream_id))
         return per_channel
 
     def _sim_spec(self) -> tuple[str, dict]:
@@ -168,9 +197,16 @@ class SystemSim:
                       refresh=self.refresh,
                       max_ref_postpone=self.max_ref_postpone)
         if self.is_rome:
-            return "rome", common | {"n_vbas": self.cfg.vbas_per_channel}
-        kind = "hbm4" if self.page_policy == "open" else "hbm4_closed"
-        return kind, common
+            common |= {"n_vbas": self.cfg.vbas_per_channel}
+        kind = self.channel_kind
+        if kind is None:
+            if self.is_rome:
+                kind = "rome"
+            else:
+                kind = "hbm4" if self.page_policy == "open" else "hbm4_closed"
+        # Registered per-policy kwargs (queue_depth, watermarks, variant,
+        # ...) win over the SystemSim-level defaults.
+        return kind, common | self.channel_kwargs
 
     def _make_sim(self):
         kind, kwargs = self._sim_spec()
@@ -215,6 +251,7 @@ class SystemSim:
             channel_bytes=ch_bytes,
             channel_finish_ns=ch_finish,
             channel_results=results,
+            channel_txns=dict(items),
         )
 
     def run_extents(self, extents: list[tuple[int, int]],

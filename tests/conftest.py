@@ -5,3 +5,5 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Repo root too, so tests can import the benchmarks driver package.
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))

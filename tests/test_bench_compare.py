@@ -1,0 +1,273 @@
+"""scripts/bench_compare.py: tolerance bands, status gating, injected
+regressions, and baseline round-tripping."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "bench_compare", ROOT / "scripts" / "bench_compare.py")
+bc = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bc)
+
+
+def _payload(status="pass", bench_status="PASS", value=100.0):
+    return {
+        "status": status,
+        "failures": 0 if status == "pass" else 1,
+        "benchmarks": {
+            "demo_bench": {
+                "status": bench_status,
+                "wall_s": 1.23,
+                "results": {"metric_a": value,
+                            "nested": {"metric_b": 7, "label": "text",
+                                       "flag": True},
+                            "wall_s": 9.9},
+            }
+        },
+    }
+
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+def _baseline_dir(tmp_path, value=100.0, rel_tol=0.05, tolerances=None):
+    d = tmp_path / "baselines"
+    d.mkdir(exist_ok=True)
+    (d / "demo_bench.json").write_text(json.dumps({
+        "benchmark": "demo_bench",
+        "rel_tol": rel_tol,
+        "tolerances": tolerances or {},
+        "metrics": {"metric_a": value, "nested.metric_b": 7.0},
+    }))
+    return str(d)
+
+
+# ---------------------------------------------------------------------------
+# Metric flattening
+# ---------------------------------------------------------------------------
+
+def test_flatten_skips_wall_time_strings_and_bools():
+    flat = bc.flatten_metrics(_payload()["benchmarks"]["demo_bench"]
+                              ["results"])
+    assert flat == {"metric_a": 100.0, "nested.metric_b": 7.0}
+
+
+def test_flatten_walks_lists():
+    flat = bc.flatten_metrics({"records": [{"x": 1}, {"x": 2}]})
+    assert flat == {"records.0.x": 1.0, "records.1.x": 2.0}
+
+
+# ---------------------------------------------------------------------------
+# Gate verdicts
+# ---------------------------------------------------------------------------
+
+def test_gate_clean_within_tolerance(tmp_path, capsys):
+    fresh = _write(tmp_path, "fresh.json", _payload(value=102.0))
+    rc = bc.main([fresh, "--baseline-dir", _baseline_dir(tmp_path)])
+    assert rc == 0
+    assert "regression gate clean" in capsys.readouterr().out
+
+
+def test_gate_fails_on_injected_regression(tmp_path, capsys):
+    """The deliberate tolerance violation: +20% on a 5% band must fail
+    and name the metric in the delta table."""
+    fresh = _write(tmp_path, "fresh.json", _payload(value=120.0))
+    rc = bc.main([fresh, "--baseline-dir", _baseline_dir(tmp_path)])
+    assert rc == 1
+    out = capsys.readouterr()
+    assert "metric_a" in out.out
+    assert "REGRESSION GATE FAILED" in out.err
+
+
+def test_gate_respects_per_metric_tolerance_override(tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _payload(value=120.0))
+    basedir = _baseline_dir(tmp_path, tolerances={"metric_a": 0.5})
+    assert bc.main([fresh, "--baseline-dir", basedir]) == 0
+
+
+def test_gate_fails_on_payload_status_fail(tmp_path):
+    """A payload that says status!=pass fails the gate even when every
+    baselined metric is within band — the masking bugfix."""
+    fresh = _write(tmp_path, "fresh.json",
+                   _payload(status="fail", value=100.0))
+    assert bc.main([fresh, "--baseline-dir",
+                    _baseline_dir(tmp_path)]) == 1
+
+
+def test_gate_fails_on_benchmark_entry_failure(tmp_path):
+    fresh = _write(tmp_path, "fresh.json",
+                   _payload(bench_status="FAIL", value=100.0))
+    assert bc.main([fresh, "--baseline-dir",
+                    _baseline_dir(tmp_path)]) == 1
+
+
+def test_gate_fails_on_missing_metric(tmp_path):
+    payload = _payload()
+    del payload["benchmarks"]["demo_bench"]["results"]["metric_a"]
+    fresh = _write(tmp_path, "fresh.json", payload)
+    assert bc.main([fresh, "--baseline-dir",
+                    _baseline_dir(tmp_path)]) == 1
+
+
+def test_gate_fails_when_nothing_was_compared(tmp_path, capsys):
+    """A gate that compared zero metrics must fail, not pass vacuously —
+    a benchmark rename or a ci.yml pattern typo would otherwise disable
+    gating silently."""
+    fresh = _write(tmp_path, "fresh.json", _payload())
+    empty = tmp_path / "empty_baselines"
+    empty.mkdir()
+    assert bc.main([fresh, "--baseline-dir", str(empty)]) == 1
+    out = capsys.readouterr()
+    assert "no baseline" in out.out
+    assert "no benchmark was compared" in out.err
+
+
+def test_gate_fails_on_empty_benchmark_selection(tmp_path):
+    fresh = _write(tmp_path, "fresh.json",
+                   {"status": "pass", "failures": 0, "benchmarks": {}})
+    assert bc.main([fresh, "--baseline-dir",
+                    _baseline_dir(tmp_path)]) == 1
+
+
+def test_gate_skips_unbaselined_when_others_compared(tmp_path, capsys):
+    """Unbaselined benchmarks are informational as long as at least one
+    benchmark was actually gated."""
+    payload = _payload()
+    payload["benchmarks"]["unbaselined_bench"] = {
+        "status": "PASS", "wall_s": 0.1, "results": {"x": 1}}
+    fresh = _write(tmp_path, "fresh.json", payload)
+    assert bc.main([fresh, "--baseline-dir", _baseline_dir(tmp_path)]) == 0
+    assert "no baseline for unbaselined_bench" in capsys.readouterr().out
+
+
+def test_gate_rejects_unreadable_payload(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert bc.main([str(bad)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Summary + baseline round trip
+# ---------------------------------------------------------------------------
+
+def test_summary_file_gets_markdown_table(tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _payload(value=120.0))
+    summary = tmp_path / "summary.md"
+    rc = bc.main([fresh, "--baseline-dir", _baseline_dir(tmp_path),
+                  "--summary", str(summary)])
+    assert rc == 1
+    text = summary.read_text()
+    assert "Benchmark regression gate" in text
+    assert "| demo_bench |" in text and "metric_a" in text
+
+
+def test_write_baseline_round_trip(tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _payload(value=42.0))
+    basedir = tmp_path / "gen_baselines"
+    assert bc.main([fresh, "--baseline-dir", str(basedir),
+                    "--write-baseline"]) == 0
+    data = json.loads((basedir / "demo_bench.json").read_text())
+    assert data["metrics"]["metric_a"] == 42.0
+    assert "wall_s" not in data["metrics"]
+    # The regenerated baseline must gate its own source payload clean.
+    assert bc.main([fresh, "--baseline-dir", str(basedir)]) == 0
+
+
+def test_write_baseline_preserves_tuned_tolerances(tmp_path):
+    """Regenerating a baseline must keep hand-tuned per-metric tolerance
+    overrides and the stored rel_tol, refreshing only the metrics."""
+    basedir = tmp_path / "baselines"
+    basedir.mkdir()
+    (basedir / "demo_bench.json").write_text(json.dumps({
+        "benchmark": "demo_bench", "rel_tol": 0.12,
+        "tolerances": {"nested.*": 0.4},
+        "metrics": {"metric_a": 1.0}}))
+    fresh = _write(tmp_path, "fresh.json", _payload(value=55.0))
+    assert bc.main([fresh, "--baseline-dir", str(basedir),
+                    "--write-baseline"]) == 0
+    data = json.loads((basedir / "demo_bench.json").read_text())
+    assert data["metrics"]["metric_a"] == 55.0
+    assert data["rel_tol"] == 0.12
+    assert data["tolerances"] == {"nested.*": 0.4}
+
+
+def test_write_baseline_refuses_failed_benchmarks(tmp_path, capsys):
+    fresh = _write(tmp_path, "fresh.json", _payload(bench_status="FAIL"))
+    basedir = tmp_path / "gen_baselines"
+    assert bc.main([fresh, "--baseline-dir", str(basedir),
+                    "--write-baseline"]) == 0
+    assert not (basedir / "demo_bench.json").exists()
+    assert "refusing" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run: the explicit status field (masking bugfix)
+# ---------------------------------------------------------------------------
+
+class _PassingBench:
+    @staticmethod
+    def run():
+        return {"value": 1}
+
+
+class _BandFailure:
+    @staticmethod
+    def run():
+        raise AssertionError("band violated")
+
+
+class _DriverKiller:
+    @staticmethod
+    def run():
+        raise KeyboardInterrupt  # escapes the per-benchmark handler
+
+
+def _run_driver(monkeypatch, tmp_path, modules, argv_extra=()):
+    import benchmarks.run as br
+    monkeypatch.setattr(br, "ALL", modules)
+    out = tmp_path / "bench.json"
+    rc = br.main(["", "--json", str(out), *argv_extra])
+    return rc, json.loads(out.read_text())
+
+
+def test_run_json_status_pass(monkeypatch, tmp_path, capsys):
+    rc, payload = _run_driver(monkeypatch, tmp_path,
+                              [("ok", _PassingBench)])
+    assert rc == 0
+    assert payload["status"] == "pass" and payload["completed"]
+
+
+def test_run_json_status_fail_on_band_failure(monkeypatch, tmp_path,
+                                              capsys):
+    """A band failure after the JSON dump used to be maskable by
+    always() upload steps; now the payload itself says "fail" and
+    bench_compare refuses it."""
+    rc, payload = _run_driver(
+        monkeypatch, tmp_path,
+        [("ok", _PassingBench), ("bad", _BandFailure)])
+    assert rc == 1
+    assert payload["status"] == "fail" and payload["failures"] == 1
+    fresh = tmp_path / "bench.json"
+    assert bc.main([str(fresh), "--baseline-dir", str(tmp_path)]) == 1
+
+
+def test_run_json_written_even_when_driver_dies(monkeypatch, tmp_path,
+                                                capsys):
+    """Even an exception that escapes the per-benchmark handler leaves
+    a parseable payload whose status is "fail"."""
+    import benchmarks.run as br
+    monkeypatch.setattr(br, "ALL",
+                        [("ok", _PassingBench), ("boom", _DriverKiller)])
+    out = tmp_path / "bench.json"
+    with pytest.raises(KeyboardInterrupt):
+        br.main(["", "--json", str(out)])
+    payload = json.loads(out.read_text())
+    assert payload["status"] == "fail"
+    assert payload["completed"] is False
+    assert payload["benchmarks"]["ok"]["status"] == "PASS"
