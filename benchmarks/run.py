@@ -28,7 +28,8 @@ import traceback
 from . import (engine_dequeue, engine_xval, fig09_command_schedule,
                fig10_ca_pins, fig12_tpot, fig13_lbr, fig14_energy,
                full_cube, policy_sweep, queue_depth, refresh_stall,
-               sparse_overfetch, tab_mc_complexity, vba_design_space)
+               serve_trace, sparse_overfetch, tab_mc_complexity,
+               vba_design_space)
 
 ALL = [
     ("fig09_command_schedule", fig09_command_schedule),
@@ -45,6 +46,7 @@ ALL = [
     ("sparse_overfetch", sparse_overfetch),
     ("policy_sweep", policy_sweep),
     ("full_cube", full_cube),
+    ("serve_trace", serve_trace),
 ]
 
 

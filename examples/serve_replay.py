@@ -1,0 +1,54 @@
+"""Serving-trace replay demo: the HBM4-vs-RoMe p99 TPOT delta under load.
+
+    PYTHONPATH=src python examples/serve_replay.py
+
+One command, one number: a seeded Poisson request stream runs through
+the real continuous batcher + row-paged KV cache; every decode step's
+multi-tenant extent stream is simulated cycle-level on both memory
+systems at the paper's equal-CA-pin widths (HBM4 x 8 channels vs RoMe
+x 9 — the 32:36 full-cube ratio scaled down), and the measured
+makespans fold back into request timelines. Prints per-policy TTFT/TPOT
+percentiles, goodput, and the headline p99 TPOT delta at a fixed
+offered load. The full load sweep with reproduction bands lives in
+benchmarks/serve_trace.py.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.paper_workloads import REPLAY_SWEEP_MIX
+from repro.serve.replay import build_replay
+
+OFFERED_RPS = 6e5                  # fixed offered load (near saturation)
+MIX = REPLAY_SWEEP_MIX             # shared with benchmarks/serve_trace.py
+CELLS = {"hbm4_frfcfs": 8, "rome_qd2": 9}   # equal-pin channel widths
+
+
+def main() -> int:
+    p99 = {}
+    for policy, nch in CELLS.items():
+        eng, acc = build_replay(
+            policy=policy, rate_rps=OFFERED_RPS, n_requests=8,
+            kind="poisson", seed=0, mix=MIX, length_scale=1 / 16,
+            scale=2 ** -12, n_channels=nch)
+        res = eng.run()
+        s = res.summary()
+        p99[policy] = s["tpot_p99_ns"]
+        print(f"[{policy} x {nch}ch] {s['completed']} requests, "
+              f"{s['n_steps']} decode steps, occupancy {s['occupancy']:.2f}")
+        print(f"  TTFT p50/p99: {s['ttft_p50_ns']:8.1f} / "
+              f"{s['ttft_p99_ns']:8.1f} ns")
+        print(f"  TPOT p50/p99: {s['tpot_p50_ns']:8.1f} / "
+              f"{s['tpot_p99_ns']:8.1f} ns")
+        print(f"  goodput: {s['goodput_rps']:,.0f} req/s "
+              f"(offered {OFFERED_RPS:,.0f})")
+    delta = p99["hbm4_frfcfs"] / p99["rome_qd2"] - 1
+    verdict = "wins" if delta > 0 else "loses" if delta < 0 else "ties"
+    print(f"\np99 TPOT, equal CA-pin budget at {OFFERED_RPS:,.0f} req/s: "
+          f"HBM4 {p99['hbm4_frfcfs']:.1f} ns vs RoMe "
+          f"{p99['rome_qd2']:.1f} ns -> RoMe {verdict} by {delta:+.1%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -74,3 +74,47 @@ LLAMA_3_405B = PaperWorkload(
 )
 
 PAPER_WORKLOADS = {w.name: w for w in (DEEPSEEK_V3, GROK_1, LLAMA_3_405B)}
+
+
+# ---------------------------------------------------------------------------
+# Serving-trace length mixes (repro.serve.replay)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServingMix:
+    """Prompt/output token-length distribution for a serving trace.
+
+    Prompt lengths are lognormal (median ``prompt_median``, coefficient of
+    variation ``prompt_cv``); output lengths are geometric with mean
+    ``out_mean``. Both are clamped to ``[1, *_max]``. The replay subsystem
+    samples these through a seeded RNG
+    (:class:`repro.serve.replay.ArrivalProcess`) and may scale them down
+    uniformly (``length_scale``) to keep cycle-level simulation tractable
+    — the *shape* of the mix, not its absolute token count, is what
+    stresses the memory system.
+    """
+
+    prompt_median: int
+    prompt_cv: float
+    out_mean: int
+    prompt_max: int = 8192
+    out_max: int = 2048
+
+
+# Chat-style mixes per evaluation model: MoE chat traffic (DeepSeek,
+# Grok) skews to short-median / heavy-tail prompts; the dense Llama row
+# mirrors the paper's long-context 8K-seq evaluation point.
+SERVING_MIXES = {
+    "deepseek-v3": ServingMix(prompt_median=512, prompt_cv=1.0, out_mean=256),
+    "grok-1": ServingMix(prompt_median=512, prompt_cv=1.0, out_mean=256),
+    "llama-3-405b": ServingMix(prompt_median=2048, prompt_cv=0.5,
+                               out_mean=256),
+}
+
+#: The serve-replay sweep mix (benchmarks/serve_trace.py and
+#: examples/serve_replay.py must agree on it, or the example's headline
+#: stops reproducing the gated conditions): the chat mix with outputs
+#: shortened so a cycle-level full load sweep stays tractable at 1/16
+#: length scale.
+REPLAY_SWEEP_MIX = ServingMix(prompt_median=512, prompt_cv=1.0, out_mean=128,
+                              prompt_max=4096, out_max=512)

@@ -25,7 +25,11 @@ exactly the "most-loaded channel gates completion" structure the
 analytic model assumes, but measured. That independence also makes the
 simulation embarrassingly parallel: ``run(stream, workers=N)`` farms
 channels out to a process pool, which is what makes full-cube (32–36
-channel) cycle-level runs practical.
+channel) cycle-level runs practical. :meth:`SystemSim.run_steps` extends
+that to serving traces: a list of per-decode-step streams simulated
+under per-step reset semantics (each step starts on an idle system —
+see its docstring for why that is the right contract), parallel over
+(step, channel) pairs.
 """
 from __future__ import annotations
 
@@ -253,6 +257,75 @@ class SystemSim:
             channel_results=results,
             channel_txns=dict(items),
         )
+
+    def run_steps(self, streams: "list[ExtentStream]",
+                  workers: int = 1,
+                  starts_ns: "list[float] | None" = None
+                  ) -> "list[SystemResult]":
+        """Simulate a sequence of per-step streams (one serving decode
+        step each) with **per-step reset semantics**: every step starts
+        on an idle memory system — no row-buffer, queue, or refresh-debt
+        state carries over from the previous step. That is the modeling
+        contract of :mod:`repro.serve.replay`: decode steps are separated
+        by kernel-launch/compute gaps long enough (µs at real scale) that
+        open rows are precharged by refresh rotation and queues drain, so
+        warm cross-step state would not change makespans; what *is*
+        simulated is all intra-step contention between tenants.
+
+        Each stream's arrivals are rebased to its step start — the
+        matching entry of ``starts_ns`` when given (pass each recorded
+        step's ``StepTrace.start_ns`` to reproduce a replay engine's
+        durations exactly, idle lead-in included), else the stream's
+        earliest arrival. A step's makespan is then directly its
+        duration. Because steps share no simulated state, ``workers >
+        1`` farms (step, channel) sims out to one process pool — the
+        batched path for re-simulating a recorded serve trace under
+        another policy, where no step-by-step clock feedback is needed.
+        """
+        if starts_ns is not None and len(starts_ns) != len(streams):
+            raise ValueError(
+                f"starts_ns has {len(starts_ns)} entries for "
+                f"{len(streams)} streams")
+        prepared = []                     # (step, channel, txns)
+        for i, s in enumerate(streams):
+            t0 = (starts_ns[i] if starts_ns is not None
+                  else min((r.arrival_ns for r in s), default=0.0))
+            per_channel = self.decompose(s.shifted(-t0) if t0 else s)
+            prepared.append(sorted(per_channel.items()))
+        out: list[SystemResult] = []
+        all_results: list[dict[int, SimResult]] = [dict() for _ in prepared]
+        flat = [(i, c, txns) for i, items in enumerate(prepared)
+                for c, txns in items]
+        if workers > 1 and len(flat) > 1:
+            kind, kwargs = self._sim_spec()
+            with ProcessPoolExecutor(
+                    max_workers=min(workers, len(flat)),
+                    mp_context=multiprocessing.get_context("spawn")) as pool:
+                futures = [(i, c, pool.submit(_run_channel, kind, kwargs,
+                                              txns))
+                           for i, c, txns in flat]
+                for i, c, fut in futures:
+                    all_results[i][c] = fut.result()
+        else:
+            for i, c, txns in flat:
+                all_results[i][c] = self._make_sim().run(txns)
+        nch = self.amap.n_channels
+        for i, items in enumerate(prepared):
+            results = all_results[i]
+            ch_bytes = np.zeros(nch, dtype=np.int64)
+            ch_finish = np.zeros(nch)
+            for c, r in results.items():
+                ch_bytes[c] = r.bytes_moved
+                ch_finish[c] = r.total_ns
+            out.append(SystemResult(
+                total_ns=float(ch_finish.max(initial=0.0)),
+                bytes_moved=int(ch_bytes.sum()),
+                channel_bytes=ch_bytes,
+                channel_finish_ns=ch_finish,
+                channel_results=results,
+                channel_txns=dict(items),
+            ))
+        return out
 
     def run_extents(self, extents: list[tuple[int, int]],
                     is_write: bool = False,

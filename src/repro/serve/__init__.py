@@ -1,5 +1,5 @@
 from .kv_cache import RowPagedKVCache, ROW_BYTES, tokens_per_row
-from .batching import ContinuousBatcher, Request
+from .batching import ContinuousBatcher, Request, RequestTimeline
 
 __all__ = ["RowPagedKVCache", "ROW_BYTES", "tokens_per_row",
-           "ContinuousBatcher", "Request"]
+           "ContinuousBatcher", "Request", "RequestTimeline"]

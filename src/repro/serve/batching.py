@@ -15,6 +15,29 @@ import numpy as np
 
 
 @dataclass
+class RequestTimeline:
+    """Step indices of a request's lifecycle events, maintained by
+    :class:`ContinuousBatcher`. An index refers to the decode step *about
+    to run* when the event happened (0-based count of completed steps);
+    ``-1`` means the event has not happened yet. The serving replay
+    (:mod:`repro.serve.replay`) folds memory-system makespans back onto
+    these indices to produce TTFT/TPOT in nanoseconds.
+    """
+
+    submitted_step: int = -1     # entered the wait queue
+    admitted_step: int = -1      # first decode step it participates in
+    first_token_step: int = -1   # step that produced its first token
+    completed_step: int = -1     # step that produced its last token
+
+    @property
+    def decode_steps(self) -> int:
+        """Steps spent decoding (== tokens produced) once completed."""
+        if self.completed_step < 0 or self.admitted_step < 0:
+            return 0
+        return self.completed_step - self.admitted_step + 1
+
+
+@dataclass
 class Request:
     rid: int
     prompt: np.ndarray            # (prompt_len,) int32
@@ -22,6 +45,7 @@ class Request:
     out_tokens: list = field(default_factory=list)
     slot: int = -1
     done: bool = False
+    timeline: RequestTimeline = field(default_factory=RequestTimeline)
 
     @property
     def prompt_len(self) -> int:
@@ -42,6 +66,7 @@ class ContinuousBatcher:
         self.busy_slot_steps = 0
 
     def submit(self, req: Request) -> None:
+        req.timeline.submitted_step = self.steps
         self.queue.append(req)
 
     # -- one scheduling iteration ---------------------------------------------
@@ -57,6 +82,7 @@ class ContinuousBatcher:
                 break                        # pool full: preserve FIFO order
             req = self.queue.popleft()
             req.slot = slot
+            req.timeline.admitted_step = self.steps
             self.active[slot] = req
             admitted.append((slot, req))
         return admitted
@@ -64,6 +90,7 @@ class ContinuousBatcher:
     def record_tokens(self, tokens: np.ndarray) -> list[Request]:
         """Account one decode step's sampled tokens (n_slots,); retire
         finished requests. Returns the requests that completed this step."""
+        step = self.steps
         self.steps += 1
         finished = []
         for slot, req in enumerate(self.active):
@@ -72,9 +99,12 @@ class ContinuousBatcher:
                 continue
             self.busy_slot_steps += 1
             req.out_tokens.append(int(tokens[slot]))
+            if len(req.out_tokens) == 1:
+                req.timeline.first_token_step = step
             if len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
                 req.slot = -1
+                req.timeline.completed_step = step
                 self.active[slot] = None
                 self.completed.append(req)
                 finished.append(req)

@@ -92,9 +92,19 @@ class RowPagedKVCache:
         assert self.page_bytes % ROW_BYTES == 0
         return self.page_bytes // ROW_BYTES
 
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` of one sequence — the unit of
+        the admission-control arithmetic in :mod:`repro.serve.replay`
+        (a request's worst case is ``pages_for(prompt + max_new)``)."""
+        return -(-n_tokens // self.page_tokens)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
     def alloc_seq(self, seq_id: int, n_tokens: int) -> None:
         """Reserve pages for a new sequence of n_tokens (prefill)."""
-        n_pages = -(-n_tokens // self.page_tokens)
+        n_pages = self.pages_for(n_tokens)
         if n_pages > self.max_pages_per_seq:
             raise ValueError("sequence exceeds max_pages_per_seq")
         if n_pages > len(self._free):
@@ -152,8 +162,7 @@ class RowPagedKVCache:
         :class:`~repro.workloads.ExtentStream`: one whole-page read per
         mapped page *per pool* — the flash-decode kernel streams full
         rows of both K and V — tagged with the sequence id."""
-        n = int(self.seq_lens[seq_id])
-        n_pages = -(-n // self.page_tokens)
+        n_pages = self.pages_for(int(self.seq_lens[seq_id]))
         return ExtentStream(
             ExtentRecord(self.page_addr(p, base_addr, pool),
                          self.page_bytes, "read", arrival_ns, seq_id)
@@ -195,8 +204,7 @@ class RowPagedKVCache:
         """Materialize a sequence's KV as (seq, n_kv_heads, head_dim) —
         the reference path; the kernel path gathers page-wise."""
         n = int(self.seq_lens[seq_id])
-        n_pages = -(-n // self.page_tokens)
-        pages = self.page_table[seq_id, :n_pages]
+        pages = self.page_table[seq_id, :self.pages_for(n)]
         k = self.pool_k[pages].reshape(-1, self.n_kv_heads, self.head_dim)
         v = self.pool_v[pages].reshape(-1, self.n_kv_heads, self.head_dim)
         return k[:n], v[:n]

@@ -1,0 +1,56 @@
+"""End-to-end serving-trace replay: continuous batching -> SystemSim.
+
+This package closes the serving loop the ROADMAP's first open item asks
+for: generated requests flow through the real
+:class:`~repro.serve.batching.ContinuousBatcher` and
+:class:`~repro.serve.kv_cache.RowPagedKVCache`, every decode step is
+recorded as one multi-tenant :class:`~repro.workloads.ExtentStream`, and
+the streams drive the cycle-level
+:class:`~repro.core.system_sim.SystemSim` under any registered
+scheduler policy. Measured memory makespans fold back into request
+timelines, so the paper's bandwidth claim becomes a measured SLO delta:
+per-request TTFT/TPOT, their p50/p95/p99, occupancy, and goodput vs
+offered load.
+
+Serving -> memory contract (what is simulated vs analytic)
+----------------------------------------------------------
+*Simulated, cycle-level:* every decode step's memory traffic — the
+byte-scaled weights-only decode slice (``from_layer_ops`` pacing, so the
+compute/roofline serialization between layer ops is carried by record
+arrival times), whole-row KV page reads, and the decoded token's K/V
+append, for all tenants of the step, with all intra-step contention
+(bank conflicts, read/write turnarounds, refresh) on the policy under
+test. The per-slot KV gather/append group is paced like the op that
+*follows* the weight slice (``kv_offset_ns`` = the chain's roofline
+span): tenants contend with each other inside that window, and the
+construction stays in the serialized-group regime where the analytic
+TPOT model is valid. Steps run under **per-step reset** semantics
+(:meth:`SystemSim.run_steps`): launch/compute gaps between real decode
+steps drain queues and close rows, so no warm channel state is carried.
+
+*Analytic / not simulated:* prefill (admission allocates the prompt's
+KV pages instantly — TTFT measures queue wait + first decode step, not
+prompt compute), token sampling (outputs are length-only), and per-step
+kernel launch overhead (the ``overhead_ns`` knob). Byte scaling follows
+``perfmodel.tpot.xval_decode_stream``: shapes and row alignment are
+preserved while totals shrink to keep cycle-level replay tractable.
+
+Tagging contract: weight records carry negative stream ids
+(``-1 - op_index``); every KV record carries its request id. A
+request's KV appends and reads therefore appear exactly once across the
+recorded streams — the conservation property tests pin.
+"""
+from .arrivals import ArrivalProcess, RequestSpec
+from .engine import (ReplayEngine, ReplayResult, RequestReport, StepSummary,
+                     build_replay)
+from .recorder import (KV_BASE_ADDR, WEIGHT_STREAM_BASE, ServeTraceRecorder,
+                       StepTrace, make_kv_cache, weight_ops,
+                       weight_step_stream)
+
+__all__ = [
+    "ArrivalProcess", "RequestSpec",
+    "ServeTraceRecorder", "StepTrace",
+    "ReplayEngine", "ReplayResult", "RequestReport", "StepSummary",
+    "build_replay", "make_kv_cache", "weight_ops", "weight_step_stream",
+    "WEIGHT_STREAM_BASE", "KV_BASE_ADDR",
+]

@@ -1,0 +1,151 @@
+"""Open- and closed-loop request generation for serving replays.
+
+:class:`ArrivalProcess` turns an offered load into a reproducible
+sequence of :class:`RequestSpec` entries — arrival time plus sampled
+prompt/output token lengths. Three arrival disciplines:
+
+``poisson``
+    Open loop: exponential inter-arrival times at ``rate_rps`` requests
+    per (simulated) second — the classic offered-load axis.
+``bursty``
+    Open loop: Poisson *burst* arrivals of ``burst_size`` back-to-back
+    requests each, at the same aggregate ``rate_rps`` — the row-thrash
+    stressor (many tenants admitted in one scheduling window).
+``closed``
+    Closed loop: ``n_users`` users, each submitting its next request an
+    exponential think time after its previous one completes. Arrivals
+    are driven by :meth:`on_complete` callbacks from the replay engine,
+    so the offered load self-regulates with service time.
+
+Lengths come from a :class:`~repro.configs.paper_workloads.ServingMix`
+(per evaluation model, see ``SERVING_MIXES``), uniformly scaled by
+``length_scale`` so cycle-level simulation stays tractable; the mix
+*shape* (lognormal prompts, geometric outputs) is what matters to the
+memory system. Everything is drawn from one seeded
+``numpy.random.Generator`` — a given (mix, seed, load) always produces
+the same request sequence.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ...configs.paper_workloads import SERVING_MIXES, ServingMix
+
+KINDS = ("poisson", "bursty", "closed")
+
+
+@dataclass(frozen=True)
+class RequestSpec:
+    """One generated request: identity, arrival, and sampled lengths."""
+
+    rid: int
+    arrival_ns: float
+    prompt_len: int
+    max_new_tokens: int
+
+
+class ArrivalProcess:
+    """Seeded request generator over a serving length mix.
+
+    Open-loop kinds (``poisson``/``bursty``) pre-generate ``n_requests``
+    specs at construction; :meth:`due` hands them out as simulated time
+    passes. The ``closed`` kind seeds ``n_users`` requests at t=0 and
+    emits one more per :meth:`on_complete` until ``n_requests`` have
+    been issued.
+    """
+
+    def __init__(self, kind: str = "poisson", rate_rps: float = 1e5,
+                 n_requests: int = 16, mix: ServingMix | str = "deepseek-v3",
+                 length_scale: float = 1.0, seed: int = 0,
+                 burst_size: int = 4, n_users: int = 4,
+                 think_ns: float = 0.0):
+        if kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+        if rate_rps <= 0:
+            raise ValueError(f"rate_rps must be positive, got {rate_rps}")
+        if n_requests < 1:
+            raise ValueError(f"n_requests must be >= 1, got {n_requests}")
+        self.kind = kind
+        self.rate_rps = rate_rps
+        self.n_requests = n_requests
+        self.mix = SERVING_MIXES[mix] if isinstance(mix, str) else mix
+        self.length_scale = length_scale
+        self.burst_size = burst_size
+        self.n_users = n_users
+        self.think_ns = think_ns
+        self._rng = np.random.default_rng(seed)
+        self._issued = 0
+        self._pending: list[RequestSpec] = []
+        if kind == "poisson":
+            t = 0.0
+            for _ in range(n_requests):
+                t += self._rng.exponential(1e9 / rate_rps)
+                self._pending.append(self._spec(t))
+        elif kind == "bursty":
+            t = 0.0
+            while self._issued < n_requests:
+                t += self._rng.exponential(1e9 * burst_size / rate_rps)
+                for _ in range(min(burst_size,
+                                   n_requests - self._issued)):
+                    self._pending.append(self._spec(t))
+        else:                                    # closed loop
+            for _ in range(min(n_users, n_requests)):
+                self._pending.append(self._spec(0.0))
+
+    # -- sampling ------------------------------------------------------------
+
+    def _sample_lengths(self) -> tuple[int, int]:
+        m = self.mix
+        sigma = float(np.sqrt(np.log1p(m.prompt_cv ** 2)))
+        p = int(round(float(self._rng.lognormal(np.log(m.prompt_median),
+                                                sigma)) * self.length_scale))
+        o = int(round(float(self._rng.geometric(1.0 / m.out_mean))
+                      * self.length_scale))
+        p_max = max(1, int(round(m.prompt_max * self.length_scale)))
+        o_max = max(1, int(round(m.out_max * self.length_scale)))
+        return min(max(p, 1), p_max), min(max(o, 1), o_max)
+
+    def _spec(self, arrival_ns: float) -> RequestSpec:
+        prompt, out = self._sample_lengths()
+        spec = RequestSpec(self._issued, arrival_ns, prompt, out)
+        self._issued += 1
+        return spec
+
+    # -- engine interface ----------------------------------------------------
+
+    def due(self, now_ns: float) -> list[RequestSpec]:
+        """Pop every spec with ``arrival_ns <= now_ns``, in arrival order
+        (ties broken by rid). The explicit sort matters for the closed
+        loop, where :meth:`on_complete` appends in *completion* order
+        and think times can reorder arrivals."""
+        out = [s for s in self._pending if s.arrival_ns <= now_ns]
+        if out:
+            self._pending = [s for s in self._pending
+                             if s.arrival_ns > now_ns]
+            out.sort(key=lambda s: (s.arrival_ns, s.rid))
+        return out
+
+    def next_arrival_ns(self) -> float | None:
+        """Earliest not-yet-delivered arrival, or None when drained."""
+        if not self._pending:
+            return None
+        return min(s.arrival_ns for s in self._pending)
+
+    def on_complete(self, now_ns: float) -> None:
+        """Completion callback: closed-loop users submit their next
+        request one think time later; open-loop kinds ignore it."""
+        if self.kind != "closed" or self._issued >= self.n_requests:
+            return
+        dt = (self._rng.exponential(self.think_ns) if self.think_ns
+              else 0.0)
+        self._pending.append(self._spec(now_ns + dt))
+
+    def exhausted(self) -> bool:
+        """True once every request this process will ever emit is out."""
+        return not self._pending and (self.kind != "closed"
+                                      or self._issued >= self.n_requests)
+
+
+__all__ = ["ArrivalProcess", "RequestSpec", "KINDS"]

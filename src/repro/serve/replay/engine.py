@@ -1,0 +1,256 @@
+"""Replay recorded serve traffic through SystemSim; fold makespans into
+request timelines.
+
+:class:`ReplayEngine` runs the closed loop: at each decode step it asks
+the :class:`~.recorder.ServeTraceRecorder` for the step's multi-tenant
+extent stream, simulates it on the configured
+:class:`~repro.core.system_sim.SystemSim` (per-step reset semantics —
+see :meth:`SystemSim.run_steps`), and advances the replay clock by the
+measured makespan. Because admission windows depend on the clock, the
+recorded trace is *policy-dependent*: a slower memory system admits
+later and queues longer, which is exactly the SLO-level effect RoMe's
+bandwidth claim has to cash out as.
+
+Step duration = memory makespan + ``overhead_ns``. Weight-read arrival
+pacing inside the step already carries the compute/roofline serialization
+(``from_layer_ops``), so a memory-bound regime needs no extra compute
+term; ``overhead_ns`` models per-step launch/sync cost when wanted.
+
+The result (:class:`ReplayResult`) reports per-request TTFT / TPOT (in
+simulated ns, from the folded timelines), their p50/p95/p99, slot
+occupancy, and goodput against the offered load.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ...core.system_sim import SystemSim
+from .recorder import ServeTraceRecorder, StepTrace
+
+
+@dataclass
+class RequestReport:
+    """One request's folded timeline (simulated ns)."""
+
+    rid: int
+    arrival_ns: float
+    prompt_len: int
+    max_new_tokens: int
+    admitted_ns: float = -1.0
+    first_token_ns: float = -1.0
+    completed_ns: float = -1.0
+    n_out: int = 0
+
+    @property
+    def ttft_ns(self) -> float:
+        """Arrival -> first token (queue wait + first decode step)."""
+        return self.first_token_ns - self.arrival_ns
+
+    @property
+    def tpot_ns(self) -> float | None:
+        """Mean time per output token after the first; None for
+        single-token outputs."""
+        if self.n_out < 2:
+            return None
+        return (self.completed_ns - self.first_token_ns) / (self.n_out - 1)
+
+
+@dataclass
+class StepSummary:
+    index: int
+    start_ns: float
+    dur_ns: float
+    n_active: int
+    bytes_moved: int      # MC-granularity bytes the sim moved (overfetch in)
+    stream_bytes: int     # request-side bytes of the step's extent stream
+
+
+@dataclass
+class ReplayResult:
+    requests: list[RequestReport]
+    steps: list[StepSummary]
+    makespan_ns: float
+    occupancy: float
+    traces: list[StepTrace] = field(default_factory=list)
+
+    @property
+    def completed(self) -> int:
+        return sum(r.completed_ns >= 0 for r in self.requests)
+
+    @property
+    def goodput_rps(self) -> float:
+        """Completed requests per simulated second."""
+        if self.makespan_ns <= 0:
+            return 0.0
+        return self.completed / (self.makespan_ns / 1e9)
+
+    @property
+    def ttfts_ns(self) -> list[float]:
+        return [r.ttft_ns for r in self.requests if r.first_token_ns >= 0]
+
+    @property
+    def tpots_ns(self) -> list[float]:
+        return [t for r in self.requests
+                if (t := r.tpot_ns) is not None]
+
+    def percentiles(self, values: list[float],
+                    qs=(50, 95, 99)) -> dict[str, float]:
+        if not values:
+            return {f"p{q}": 0.0 for q in qs}
+        return {f"p{q}": round(float(np.percentile(values, q)), 1)
+                for q in qs}
+
+    def summary(self) -> dict:
+        """Flat metrics dict (benchmark/baseline currency)."""
+        out = {
+            "n_requests": len(self.requests),
+            "completed": self.completed,
+            "n_steps": len(self.steps),
+            "makespan_ns": round(self.makespan_ns, 1),
+            "occupancy": round(self.occupancy, 4),
+            "goodput_rps": round(self.goodput_rps, 1),
+            # bytes_moved is what the memory system transferred (MC
+            # access granularity) — under RoMe it exceeds stream_bytes
+            # by the whole-row rounding of sub-row KV appends (§VII
+            # overfetch); stream_bytes is the software-side demand.
+            "bytes_moved": int(sum(s.bytes_moved for s in self.steps)),
+            "stream_bytes": int(sum(s.stream_bytes for s in self.steps)),
+        }
+        for name, vals in (("ttft", self.ttfts_ns), ("tpot", self.tpots_ns)):
+            for k, v in self.percentiles(vals).items():
+                out[f"{name}_{k}_ns"] = v
+            out[f"{name}_mean_ns"] = (round(float(np.mean(vals)), 1)
+                                      if vals else 0.0)
+        return out
+
+
+class ReplayEngine:
+    """Drive a recorder's decode steps through a SystemSim.
+
+    ``keep_traces=True`` retains every recorded :class:`StepTrace`
+    (stream included) on the result — the hook for conservation checks
+    and for re-simulating the same trace open-loop under another policy
+    via :meth:`SystemSim.run_steps`.
+    """
+
+    def __init__(self, recorder: ServeTraceRecorder, system: SystemSim,
+                 overhead_ns: float = 0.0, keep_traces: bool = False,
+                 max_steps: int = 100_000):
+        self.recorder = recorder
+        self.system = system
+        self.overhead_ns = overhead_ns
+        self.keep_traces = keep_traces
+        self.max_steps = max_steps
+
+    def run(self) -> ReplayResult:
+        rec = self.recorder
+        reports: dict[int, RequestReport] = {}
+        steps: list[StepSummary] = []
+        traces: list[StepTrace] = []
+        now = 0.0
+        while not rec.drained():
+            for req in rec.submit_due(now):
+                spec = rec.specs[req.rid]
+                reports[req.rid] = RequestReport(
+                    req.rid, spec.arrival_ns, spec.prompt_len,
+                    spec.max_new_tokens)
+            st = rec.step(now)
+            if st is None:
+                nxt = rec.arrivals.next_arrival_ns()
+                if nxt is None:
+                    break              # nothing queued, nothing to come
+                now = max(now, nxt)
+                continue
+            res = self.system.run(st.stream.shifted(-now))
+            dur = res.total_ns + self.overhead_ns
+            end = now + dur
+            for rid in st.admitted:
+                reports[rid].admitted_ns = now
+            for rid in st.active:
+                rep = reports[rid]
+                rep.n_out += 1
+                if rep.first_token_ns < 0:
+                    rep.first_token_ns = end
+            for rid in st.finished:
+                reports[rid].completed_ns = end
+                rec.arrivals.on_complete(end)
+            steps.append(StepSummary(st.index, now, dur, len(st.active),
+                                     res.bytes_moved,
+                                     st.stream.total_bytes))
+            if self.keep_traces:
+                traces.append(st)
+            now = end
+            if len(steps) >= self.max_steps:
+                raise RuntimeError(
+                    f"replay exceeded max_steps={self.max_steps}; "
+                    f"offered load too high for the pool/slots?")
+        return ReplayResult(
+            requests=[reports[rid] for rid in sorted(reports)],
+            steps=steps,
+            makespan_ns=now,
+            occupancy=rec.batcher.occupancy,
+            traces=traces)
+
+
+def build_replay(workload: str = "deepseek-v3",
+                 policy: str = "hbm4_frfcfs",
+                 rate_rps: float = 1e5,
+                 n_requests: int = 16,
+                 kind: str = "poisson",
+                 seed: int = 0,
+                 length_scale: float = 1 / 32,
+                 n_slots: int = 4,
+                 n_ops: int = 4,
+                 scale: float = 2 ** -15,
+                 n_channels: int = 2,
+                 keep_traces: bool = False,
+                 overhead_ns: float = 0.0,
+                 mix=None,
+                 **arrival_kw):
+    """Wire a complete replay for one (workload, policy, load) cell.
+
+    ``policy`` names a :class:`repro.core.sched.registry.PolicySpec` —
+    the registered scheduling point whose family (hbm4/rome) also picks
+    the scaled accelerator the weight slice is paced on. Returns
+    ``(engine, acc)``; ``engine.run()`` produces the
+    :class:`ReplayResult`, ``acc`` is the
+    :func:`~repro.perfmodel.accelerator.scaled_accelerator` needed for
+    the analytic cross-check (``perfmodel.tpot.stream_mem_ns``).
+
+    The default ``scale`` keeps steps tiny for fast structural tests;
+    in that regime HBM4 steps are ACT-issue-bound and sit *outside* the
+    analytic model's validity. The band-valid regime
+    (benchmarks/serve_trace.py) uses ``scale=2**-12`` — ≈240 KB/step,
+    large enough that data transfer hides ACT-command serialization,
+    which is what the established 15 % engine_xval band assumes.
+    """
+    from ...configs.paper_workloads import PAPER_WORKLOADS, SERVING_MIXES
+    from ...core.sched.registry import policy_spec
+    from ...perfmodel.accelerator import scaled_accelerator
+    from .arrivals import ArrivalProcess
+    from .recorder import (ServeTraceRecorder, make_kv_cache,
+                           weight_step_stream)
+
+    spec = policy_spec(policy)
+    w = PAPER_WORKLOADS[workload]
+    mix = SERVING_MIXES[workload] if mix is None else mix
+    acc = scaled_accelerator(spec.family, n_channels=n_channels)
+    ws, chain_ns = weight_step_stream(w, acc, n_ops=n_ops, scale=scale)
+    max_tokens = (max(1, round(mix.prompt_max * length_scale))
+                  + max(1, round(mix.out_max * length_scale)))
+    cache = make_kv_cache(n_slots, max_tokens)
+    arrivals = ArrivalProcess(kind, rate_rps, n_requests, mix=mix,
+                              length_scale=length_scale, seed=seed,
+                              **arrival_kw)
+    recorder = ServeTraceRecorder(arrivals, cache, weight_stream=ws,
+                                  kv_offset_ns=chain_ns)
+    system = spec.system_sim(n_channels=n_channels)
+    engine = ReplayEngine(recorder, system, overhead_ns=overhead_ns,
+                          keep_traces=keep_traces)
+    return engine, acc
+
+
+__all__ = ["ReplayEngine", "ReplayResult", "RequestReport", "StepSummary",
+           "build_replay"]

@@ -34,18 +34,21 @@ addresses that never overlap read extents of the same trace:
 * :func:`bulk_stream` / :func:`strided_stream` / :func:`sparse_stream` —
   synthetic calibration and stress regimes.
 * :meth:`repro.serve.kv_cache.RowPagedKVCache.read_stream` /
-  ``append_stream`` — the serving-side producer of the same records.
+  ``append_stream`` — the serving-side producer of the same records;
+  :class:`repro.serve.replay.ServeTraceRecorder` interleaves them with
+  a weight slice into one multi-tenant stream per decode step.
 
 Consumers: :meth:`repro.core.system_sim.SystemSim.run` (cycle-accurate
 ground truth), :func:`repro.core.analytic.stream_time_ns` (closed form),
 :func:`repro.perfmodel.tpot.stream_mem_ns` (step memory time).
 """
 from .builders import (bulk_stream, from_layer_ops, interleave,
-                       scale_layer_ops, sparse_stream, strided_stream)
+                       layer_ops_span_ns, scale_layer_ops, sparse_stream,
+                       strided_stream)
 from .stream import KINDS, ExtentRecord, ExtentStream
 
 __all__ = [
     "ExtentRecord", "ExtentStream", "KINDS",
-    "from_layer_ops", "scale_layer_ops",
+    "from_layer_ops", "scale_layer_ops", "layer_ops_span_ns",
     "bulk_stream", "strided_stream", "sparse_stream", "interleave",
 ]

@@ -16,15 +16,14 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.analytic import calibrate
-from ..perfmodel.accelerator import AcceleratorSpec
-from ..perfmodel.tpot import op_times_ns
 from ..trace.layergraph import ROW, LayerOp, RowAllocator
 from .stream import ExtentRecord, ExtentStream
 
 
-def from_layer_ops(ops: list[LayerOp], acc: AcceleratorSpec,
+def from_layer_ops(ops: list[LayerOp], acc,
                    start_ns: float = 0.0) -> ExtentStream:
-    """Timed stream for a layer-op trace on accelerator ``acc``.
+    """Timed stream for a layer-op trace on accelerator ``acc``
+    (a :class:`repro.perfmodel.accelerator.AcceleratorSpec`).
 
     Every op's reads and writes arrive together at the op's start time;
     ``stream_id`` is the op index, so downstream consumers can group
@@ -44,9 +43,31 @@ def from_layer_ops(ops: list[LayerOp], acc: AcceleratorSpec,
         for a, n in op.write_extents:
             if n > 0:
                 records.append(ExtentRecord(a, n, "write", t, i))
-        m, c, _ = op_times_ns(op, acc, amap, eff.read_eff, eff.write_eff)
-        t += max(m, c) + acc.kernel_overhead_ns
+        t += _op_duration_ns(op, acc, eff, amap)
     return ExtentStream(records)
+
+
+def _op_duration_ns(op: LayerOp, acc, eff, amap) -> float:
+    """The pacing rule: op i+1 becomes visible when op i's modeled
+    ``max(mem, comp) + overhead`` elapses. The single definition both
+    :func:`from_layer_ops` and :func:`layer_ops_span_ns` use."""
+    # Lazy: perfmodel.accelerator imports repro.core, whose system_sim
+    # pulls this package back in — a module-level import here makes a
+    # cold `import repro.perfmodel` (or perfmodel-first benchmark)
+    # circular.
+    from ..perfmodel.tpot import op_times_ns
+    m, c, _ = op_times_ns(op, acc, amap, eff.read_eff, eff.write_eff)
+    return max(m, c) + acc.kernel_overhead_ns
+
+
+def layer_ops_span_ns(ops: list[LayerOp], acc) -> float:
+    """Modeled roofline span of a whole op chain — what
+    :func:`from_layer_ops` pacing adds up to, exposed so consumers
+    (e.g. ``serve.replay``'s KV-group offset) can schedule an event at
+    the chain's end without re-deriving the rule."""
+    eff = calibrate(acc.mem_cfg)
+    amap = acc.address_map()
+    return sum(_op_duration_ns(op, acc, eff, amap) for op in ops)
 
 
 def scale_layer_ops(ops: list[LayerOp], scale: float) -> list[LayerOp]:
@@ -135,6 +156,6 @@ interleave = ExtentStream.interleave
 
 
 __all__ = [
-    "from_layer_ops", "scale_layer_ops",
+    "from_layer_ops", "scale_layer_ops", "layer_ops_span_ns",
     "bulk_stream", "strided_stream", "sparse_stream", "interleave",
 ]

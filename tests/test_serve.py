@@ -157,6 +157,42 @@ def test_batcher_iteration_level_join():
     assert b.active[0].rid == 2 and b.active[1].rid == 1
 
 
+def test_occupancy_zero_before_first_step():
+    """No division by zero (and a defined 0.0) before any decode step."""
+    b = ContinuousBatcher(4)
+    assert b.occupancy == 0.0
+    b.submit(Request(0, np.array([1]), 1))
+    assert b.occupancy == 0.0          # still no step recorded
+
+
+def test_request_timeline_step_indices():
+    """submit/admit/first-token/completion step indices as maintained by
+    the batcher (the TTFT/TPOT accounting the replay engine folds
+    makespans onto)."""
+    b = ContinuousBatcher(1)
+    r0 = Request(0, np.array([1]), max_new_tokens=2)
+    r1 = Request(1, np.array([1]), max_new_tokens=1)
+    b.submit(r0)
+    b.submit(r1)
+    assert r0.timeline.submitted_step == 0 and r1.timeline.submitted_step == 0
+    b.schedule()                         # r0 takes the only slot
+    assert r0.timeline.admitted_step == 0
+    assert r1.timeline.admitted_step == -1
+    b.record_tokens(np.array([7]))       # step 0: r0 first token
+    assert r0.timeline.first_token_step == 0
+    assert r0.timeline.completed_step == -1
+    b.schedule()
+    b.record_tokens(np.array([8]))       # step 1: r0 completes
+    assert r0.timeline.completed_step == 1
+    assert r0.timeline.decode_steps == 2 == len(r0.out_tokens)
+    b.schedule()                         # r1 admitted at step index 2
+    assert r1.timeline.admitted_step == 2
+    b.record_tokens(np.array([9]))
+    assert r1.timeline.first_token_step == 2
+    assert r1.timeline.completed_step == 2
+    assert r1.timeline.decode_steps == 1
+
+
 def test_admission_check_blocks():
     b = ContinuousBatcher(2, admit=lambda req: req.rid != 1)
     b.submit(Request(0, np.array([1]), 1))
