@@ -1,0 +1,266 @@
+"""Hybrid-path cross-validation: queue-window analytic band + vectorized
+bit-identity + the wall-clock speedup that makes unscaled replay runnable.
+
+Three guarantees, each load-bearing for the hybrid fast path
+(``SystemSim(mode="hybrid")``, ROADMAP item):
+
+* **band** — for every registered policy, every step the hybrid
+  classifier prices *analytically* must land within the declared 15 %
+  band of the cycle engine's makespan. Checked on the calibration
+  stressor suite (``repro.core.queue_model.stressor_streams``) AND on
+  seeded holdout streams the fit never saw. Steps the classifier routes
+  to the cycle engine are exact by construction (same engine) — the
+  benchmark records them at ``rel == 0`` as a structural check.
+* **bit-identity** — the vectorized lockstep driver
+  (``core.sched.vectorized.run_channels``) must reproduce the scalar
+  event loop exactly (``finish_ns`` arrays equal, command censuses
+  equal) on the 20-trace facade suite.
+* **speedup** — pricing an uncontended bulk step analytically must beat
+  the cycle engine by a wide margin (the property that turns tens-of-GB
+  unscaled decode steps from ~hours into ~microseconds). Wall times are
+  machine-dependent; the baseline gates the speedup only with a very
+  loose band (sanity floor, not a perf SLO).
+
+``--reduced`` shrinks the policy set and holdout count for PR-CI smoke;
+the standalone ``--json`` payload mimics ``benchmarks.run --json`` (one
+benchmark entry named ``hybrid_xval_reduced``) so the same
+``scripts/bench_compare.py`` gate applies to both sizes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.queue_model import (DEFAULT_PRESSURE_THRESHOLD,
+                                    queue_window_params, stressor_streams)
+from repro.core.sched import facade_trace_suite, run_channels
+from repro.core.sched.channels import make_channel_sim
+from repro.core.sched.registry import policy_names, policy_spec
+from repro.core.timing import hbm4_config, rome_config
+from repro.workloads import (bulk_stream, interleave, sparse_stream,
+                             strided_stream)
+
+#: The declared hybrid accuracy band — the same 15 % the established
+#: engine_xval analytic/cycle cross-validation uses.
+BAND = 0.15
+
+REDUCED_POLICIES = ("hbm4_frfcfs", "rome_qd2")
+N_CHANNELS = 2
+SPEEDUP_POLICY = "hbm4_frfcfs"
+
+
+def _holdout_streams(cfg, n: int, seed: int = 7):
+    """Seeded mixed streams the calibration never saw: random sizes and
+    compositions drawn from the same regime *families* the model claims
+    (bulk weight slices, sub-row KV records, sparse sub-row gathers,
+    write tails — the decode-step shape) at parameters off the stressor
+    grid. Patterns outside the claimed regimes (e.g. random full-row
+    gathers) are the cycle engine's job, via the pressure classifier."""
+    rng = np.random.default_rng(seed)
+    row = cfg.row_bytes
+    fine = max(64, row // int(rng.integers(4, 16)))
+    out = []
+    for i in range(n):
+        if i % 2 == 0:
+            # Uncontended decode-step shape (bulk weight slice +
+            # row-scale tenant strides + small write tail): should
+            # classify analytic and land inside the band.
+            parts = [
+                bulk_stream(int(rng.integers(24, 96)) * row,
+                            n_extents=int(rng.integers(1, 5))),
+                strided_stream(int(rng.integers(8, 20)), 2 * row,
+                               int(rng.integers(3, 6)) * row,
+                               base_addr=1 << 21).retagged(1),
+                bulk_stream(int(rng.integers(2, 8)) * row, kind="write",
+                            base_addr=1 << 24).retagged(3),
+            ]
+        else:
+            # Fine sub-row mix: high thrash pressure — the classifier
+            # should route it to the cycle engine (exact).
+            parts = [
+                bulk_stream(int(rng.integers(24, 96)) * row,
+                            n_extents=int(rng.integers(1, 5))),
+                strided_stream(int(rng.integers(8, 24)), fine,
+                               int(rng.integers(3, 6)) * row,
+                               base_addr=1 << 21).retagged(1),
+                sparse_stream(int(rng.integers(16, 48)), fine,
+                              1 << 22, seed=int(rng.integers(1 << 20)),
+                              stream_id=2),
+            ]
+        out.append((f"holdout_{i}", interleave(parts)))
+    return out
+
+
+#: Policies that MUST get analytic coverage on the stressor suite — the
+#: serve-replay flagships whose unscaled path depends on it. Others may
+#: legitimately classify everything as contended (e.g. ``hbm4_closed``
+#: runs at the tRC random-row rate, far off the roofline, so its hybrid
+#: degenerates to pure cycle — safe, just never fast).
+ANALYTIC_REQUIRED = ("hbm4_frfcfs", "rome_qd2")
+
+
+def _band_cell(spec, streams):
+    """Hybrid vs cycle across labeled streams on one policy: per-stream
+    {pressure, mode, rel}; asserts the band on analytically-priced steps
+    and exactness on cycle-routed ones."""
+    cfg = hbm4_config() if spec.family == "hbm4" else rome_config()
+    cyc = spec.system_sim(n_channels=N_CHANNELS, mode="cycle")
+    hyb = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid")
+    rows, worst, n_analytic = {}, 0.0, 0
+    for label, stream in streams:
+        ref = cyc.run(stream)
+        res = hyb.run(stream)
+        rel = abs(res.total_ns - ref.total_ns) / ref.total_ns
+        rows[label] = {"mode": res.mode,
+                       "pressure": round(res.queue_pressure, 4),
+                       "rel_err": round(rel, 4)}
+        if res.mode == "analytic":
+            n_analytic += 1
+            worst = max(worst, rel)
+            assert rel < BAND, (spec.name, label, ref.total_ns,
+                                res.total_ns, rel)
+        else:
+            # Cycle-routed steps reuse the exact engine: any drift here
+            # means the hybrid dispatch changed the simulation itself.
+            assert rel == 0.0, (spec.name, label, rel)
+    if spec.name in ANALYTIC_REQUIRED:
+        assert n_analytic > 0, (spec.name, "classifier sent every "
+                                "stressor to the cycle engine")
+    return rows, {
+        "n_streams": len(rows),
+        "n_analytic": n_analytic,
+        "analytic_fraction": round(n_analytic / len(rows), 4),
+        "worst_analytic_rel": round(worst, 4),
+        "fit_resid_rel_max": round(
+            queue_window_params(spec.name).resid_rel_max, 4),
+    }
+
+
+def _bit_identity() -> dict:
+    """Scalar vs vectorized on the facade suite — grouped by simulator
+    configuration so the lockstep driver advances several live channels
+    together (the production shape), then compared trace by trace."""
+    suite = facade_trace_suite()
+    groups: dict = {}
+    for label, kind, kwargs, txns in suite:
+        groups.setdefault((kind, tuple(sorted(kwargs.items()))),
+                          []).append((label, kwargs, txns))
+    t0 = time.perf_counter()
+    scalar = {label: make_channel_sim(kind, **kwargs).run(txns)
+              for (kind, _), members in groups.items()
+              for label, kwargs, txns in members}
+    t_scalar = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vec = {}
+    for (kind, _), members in groups.items():
+        results = run_channels(kind, members[0][1],
+                               [txns for _, _, txns in members])
+        vec.update({label: r for (label, _, _), r
+                    in zip(members, results)})
+    t_vec = time.perf_counter() - t0
+    for label, s in scalar.items():
+        v = vec[label]
+        assert np.array_equal(s.finish_ns, v.finish_ns), label
+        assert s.total_ns == v.total_ns, label
+        assert s.bytes_moved == v.bytes_moved, label
+        assert s.cmd_counts == v.cmd_counts, (label, s.cmd_counts,
+                                              v.cmd_counts)
+    return {"n_traces": len(scalar), "n_groups": len(groups),
+            "scalar": {"wall_s": round(t_scalar, 3)},
+            "vectorized": {"wall_s": round(t_vec, 3)}}
+
+
+def _speedup(reduced: bool) -> dict:
+    """Analytic pricing vs cycle simulation of one uncontended bulk
+    step: the wall-clock ratio that makes the unscaled replay path
+    feasible. Both paths are warmed first (calibration caches)."""
+    nbytes = 1 << 20 if reduced else 4 << 20
+    spec = policy_spec(SPEEDUP_POLICY)
+    stream = bulk_stream(nbytes)
+    cyc = spec.system_sim(n_channels=N_CHANNELS, mode="cycle")
+    hyb = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid")
+    ref = cyc.run(stream)                    # warm + reference makespan
+    res = hyb.run(stream)                    # warm (lazy calibration)
+    assert res.mode == "analytic", (res.mode, res.queue_pressure)
+    t0 = time.perf_counter()
+    ref = cyc.run(stream)
+    t_cycle = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = hyb.run(stream)
+    t_hybrid = max(time.perf_counter() - t0, 1e-9)
+    rel = abs(res.total_ns - ref.total_ns) / ref.total_ns
+    assert rel < BAND, (ref.total_ns, res.total_ns, rel)
+    speedup = t_cycle / t_hybrid
+    # The point of the hybrid path: orders of magnitude, not percent.
+    assert speedup > 10, (t_cycle, t_hybrid)
+    return {"policy": SPEEDUP_POLICY, "stream_mb": nbytes / 2 ** 20,
+            "cycle": {"wall_s": round(t_cycle, 4)},
+            "analytic": {"wall_s": round(t_hybrid, 6)},
+            "speedup": round(speedup, 1),
+            "rel_err": round(rel, 4),
+            "makespan_ns": round(ref.total_ns, 1)}
+
+
+def run(reduced: bool = False) -> dict:
+    policies = REDUCED_POLICIES if reduced else policy_names()
+    n_holdout = 2 if reduced else 6
+    out: dict = {"config": {
+        "reduced": reduced,
+        "policies": list(policies),
+        "band": BAND,
+        "pressure_threshold": DEFAULT_PRESSURE_THRESHOLD,
+        "n_channels": N_CHANNELS,
+    }}
+
+    band = {}
+    for name in policies:
+        spec = policy_spec(name)
+        cfg = hbm4_config() if spec.family == "hbm4" else rome_config()
+        streams = (stressor_streams(cfg)
+                   + _holdout_streams(cfg, n_holdout))
+        rows, summary = _band_cell(spec, streams)
+        band[name] = {**summary, "streams": rows}
+    out["band"] = band
+
+    out["bit_identity"] = _bit_identity()
+    out["speedup"] = _speedup(reduced)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import traceback
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--reduced", action="store_true",
+                   help="PR-CI size: 2 policies, fewer holdouts")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write a benchmarks.run-shaped payload to PATH "
+                        "(gateable by scripts/bench_compare.py)")
+    args = p.parse_args()
+    name = "hybrid_xval_reduced" if args.reduced else "hybrid_xval"
+    t0 = time.time()
+    try:
+        results = run(reduced=args.reduced)
+        status = "PASS"
+    except AssertionError as e:
+        results = {"error": str(e)}
+        status = "FAIL"
+    except Exception:
+        results = {"error": traceback.format_exc()[-800:]}
+        status = "ERROR"
+    wall = round(time.time() - t0, 2)
+    print(json.dumps(results, indent=1, default=str))
+    print(f"[{status}] {name} ({wall:.1f}s)", flush=True)
+    if args.json:
+        payload = {"status": "pass" if status == "PASS" else "fail",
+                   "benchmarks": {name: {"status": status, "wall_s": wall,
+                                         "results": results}},
+                   "total_wall_s": wall,
+                   "failures": int(status != "PASS"),
+                   "completed": True}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"wrote {args.json}")
+    raise SystemExit(0 if status == "PASS" else 1)

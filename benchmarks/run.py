@@ -27,9 +27,9 @@ import traceback
 
 from . import (engine_dequeue, engine_xval, fig09_command_schedule,
                fig10_ca_pins, fig12_tpot, fig13_lbr, fig14_energy,
-               full_cube, policy_sweep, queue_depth, refresh_stall,
-               serve_trace, sparse_overfetch, tab_mc_complexity,
-               vba_design_space)
+               full_cube, hybrid_xval, policy_sweep, queue_depth,
+               refresh_stall, serve_trace, sparse_overfetch,
+               tab_mc_complexity, vba_design_space)
 
 ALL = [
     ("fig09_command_schedule", fig09_command_schedule),
@@ -45,6 +45,7 @@ ALL = [
     ("refresh_stall", refresh_stall),
     ("sparse_overfetch", sparse_overfetch),
     ("policy_sweep", policy_sweep),
+    ("hybrid_xval", hybrid_xval),
     ("full_cube", full_cube),
     ("serve_trace", serve_trace),
 ]

@@ -86,6 +86,64 @@ def channel_bytes(amap: AddressMap, extents: list[tuple[int, int]]) -> np.ndarra
     return out
 
 
+def channel_unit_counts(amap: AddressMap,
+                        extents: list[tuple[int, int]]) -> np.ndarray:
+    """Per-channel *stripe-unit* counts for a set of (addr, nbytes)
+    extents — the exact number of MC transactions
+    :meth:`repro.core.system_sim.SystemSim.decompose` would create per
+    channel (one txn per touched unit, duplicates counted per extent),
+    without materializing any of them. Same cyclic-window stripe math as
+    :func:`channel_bytes`, but counting whole units instead of trimming
+    partial stripes: this is the O(n_extents) transaction census the
+    queue-window model (:mod:`repro.core.queue_model`) and the hybrid
+    fast path price unscaled streams with.
+    """
+    out = np.zeros(amap.n_channels, dtype=np.int64)
+    g = amap.stripe_bytes
+    for start, nbytes in extents:
+        if nbytes <= 0:
+            continue
+        first_unit = start // g
+        last_unit = (start + nbytes - 1) // g
+        n_units = last_unit - first_unit + 1
+        full, rem = divmod(n_units, amap.n_channels)
+        if full:
+            out += full
+        if rem:
+            ch0 = first_unit % amap.n_channels
+            idx = (ch0 + np.arange(rem)) % amap.n_channels
+            np.add.at(out, idx, 1)
+    return out
+
+
+def record_touch_counts(amap: AddressMap,
+                        extents: list[tuple[int, int]]) -> np.ndarray:
+    """Per-channel *record* counts: how many of the given extents touch
+    each channel at least once (each record contributes at most 1 per
+    channel). This is the per-extent cost census — a record opening a
+    channel pays that channel's fixed row-open/ACT path once regardless
+    of how many units it then streams, which is the term the queue-window
+    model's ``ext_ns_per_rec`` coefficient prices. O(n_extents), same
+    cyclic-window stripe math as :func:`channel_unit_counts`.
+    """
+    out = np.zeros(amap.n_channels, dtype=np.int64)
+    g = amap.stripe_bytes
+    nch = amap.n_channels
+    for start, nbytes in extents:
+        if nbytes <= 0:
+            continue
+        first_unit = start // g
+        last_unit = (start + nbytes - 1) // g
+        n_units = last_unit - first_unit + 1
+        if n_units >= nch:
+            out += 1
+        else:
+            ch0 = first_unit % nch
+            idx = (ch0 + np.arange(n_units)) % nch
+            out[idx] += 1
+    return out
+
+
 def load_balance_ratio(amap: AddressMap,
                        extents: list[tuple[int, int]]) -> float:
     """LBR = mean(channel bytes) / max(channel bytes); 1.0 == perfectly

@@ -46,18 +46,20 @@ from .channels import (CHANNEL_SIM_KINDS, HBM4ChannelSim,
                        HBM4ClosedPageChannelSim, HBM4SIDGroupChannelSim,
                        HBM4WriteDrainChannelSim, RoMeChannelSim,
                        make_channel_sim)
-from .core import ChannelSimCore, SimResult, Txn, _PendingQueue
+from .core import ChannelRunState, ChannelSimCore, SimResult, Txn, _PendingQueue
 from .policies import (FRFCFSOpenPagePolicy, FRFCFSWriteDrainPolicy,
                        HBM4ClosedPagePolicy, HBM4SIDGroupPolicy,
                        RoMeRowPolicy, SchedulerPolicy)
 from .registry import (FAMILIES, PolicySpec, policy_names, policy_spec,
                        register_policy, registered_policies)
-from .traces import (hbm4_unit_location, interleaved_stream_txns_hbm4,
-                     rome_unit_location, sequential_read_txns_hbm4,
-                     sequential_read_txns_rome)
+from .traces import (facade_trace_suite, hbm4_unit_location,
+                     interleaved_stream_txns_hbm4, rome_unit_location,
+                     sequential_read_txns_hbm4, sequential_read_txns_rome)
+from .vectorized import run_channels
 
 __all__ = [
-    "ChannelSimCore", "SimResult", "Txn",
+    "ChannelSimCore", "ChannelRunState", "SimResult", "Txn",
+    "run_channels", "facade_trace_suite",
     "SchedulerPolicy", "FRFCFSOpenPagePolicy", "FRFCFSWriteDrainPolicy",
     "HBM4ClosedPagePolicy", "HBM4SIDGroupPolicy", "RoMeRowPolicy",
     "HBM4ChannelSim", "HBM4ClosedPageChannelSim",

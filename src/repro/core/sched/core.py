@@ -111,6 +111,136 @@ class _PendingQueue:
         self._tomb += 1
 
 
+class ChannelRunState:
+    """One channel's in-flight simulation: the event loop, suspended.
+
+    Everything :meth:`ChannelSimCore.run` used to keep in local variables
+    lives here, so a run can be advanced incrementally —
+    :meth:`advance` executes up to ``max_iters`` loop iterations and
+    returns whether the channel finished. This is the batched state-step
+    the vectorized multi-channel driver (:mod:`.vectorized`) interleaves
+    across all channels of a cube; because the scalar path
+    (:meth:`ChannelSimCore.run`) drives the *same* state machine to
+    completion in one call, and channels share no state, any interleaving
+    of ``advance`` calls is bit-identical to the scalar result.
+    """
+
+    __slots__ = ("core", "policy", "pending", "finish", "counts",
+                 "idx_in_finish", "period", "next_ref_t", "next_ref_unit",
+                 "ref_backlog", "now", "n_txns")
+
+    def __init__(self, core: "ChannelSimCore", txns: list[Txn]):
+        pol = core.policy
+        order = sorted(range(len(txns)), key=lambda i: txns[i].arrival_ns)
+        ordered = [txns[i] for i in order]
+        self.core = core
+        self.policy = pol
+        self.idx_in_finish = {id(tx): order[k]
+                              for k, tx in enumerate(ordered)}
+        self.pending = _PendingQueue(ordered)
+        self.finish = np.zeros(len(txns))
+        self.counts = {k: 0 for k in pol.count_keys}
+        self.counts["ref_backlog_max"] = 0
+        pol.begin(self.counts)
+        self.period = pol.ref_period
+        self.next_ref_t = self.period
+        self.next_ref_unit = 0
+        self.ref_backlog = 0
+        self.now = 0.0
+        self.n_txns = len(txns)
+
+    @property
+    def finished(self) -> bool:
+        return not self.pending
+
+    def advance(self, max_iters: int = 1) -> bool:
+        """Execute up to ``max_iters`` event-loop iterations; returns True
+        once the channel has drained. Hot path: every per-iteration
+        attribute is hoisted into locals so a batched advance amortizes
+        the Python dispatch cost across the whole batch."""
+        core = self.core
+        pol = self.policy
+        pending = self.pending
+        finish = self.finish
+        counts = self.counts
+        idx_in_finish = self.idx_in_finish
+        refresh = core.refresh
+        max_post = core.max_ref_postpone
+        depth = core.queue_depth
+        period = self.period
+        next_ref_t = self.next_ref_t
+        next_ref_unit = self.next_ref_unit
+        ref_backlog = self.ref_backlog
+        now = self.now
+        issue = pol.issue
+        issue_refresh = pol.issue_refresh
+        n_ref_units = pol.n_ref_units
+
+        for _ in range(max_iters):
+            if not pending:
+                break
+            qwin = pending.first(depth)
+
+            # -- refresh governor: rotating per-unit refresh with
+            # demand-aware bounded postponement, each issue anchored at its
+            # own due time so refreshes of different units may overlap. --
+            while refresh and next_ref_t <= now:
+                ref_backlog += 1
+                next_ref_t += period
+            if ref_backlog > counts["ref_backlog_max"]:
+                counts["ref_backlog_max"] = ref_backlog
+            while ref_backlog > 0:
+                demanded = any(tx.bank == next_ref_unit for tx in qwin)
+                if demanded and ref_backlog < max_post:
+                    break
+                due = next_ref_t - ref_backlog * period
+                issue_refresh(next_ref_unit, due)
+                next_ref_unit = (next_ref_unit + 1) % n_ref_units
+                ref_backlog -= 1
+
+            window = [tx for tx in qwin if tx.arrival_ns <= now]
+            if not window:
+                # Idle: jump to the next event — arrival OR refresh due —
+                # so refreshes due during a sparse-arrival gap are issued
+                # in the gap (bounded postponement) instead of piling up
+                # behind the next arrival.
+                cand = pending.head().arrival_ns
+                if refresh:
+                    cand = min(cand, next_ref_t)
+                now = max(now + 1e-9, cand)
+                continue
+
+            now, issued, completions = issue(window, now)
+            for tx, fin in completions:
+                finish[idx_in_finish[id(tx)]] = fin
+                pending.remove(tx)
+
+            if not issued:
+                # Nothing issueable: jump to the next event (refresh or
+                # arrival) to guarantee progress.
+                nxt = [tx.arrival_ns for tx in qwin if tx.arrival_ns > now]
+                cand = min(nxt) if nxt else now + period
+                if refresh:
+                    cand = min(cand, next_ref_t)
+                now = max(now + 1e-9, cand)
+
+        self.next_ref_t = next_ref_t
+        self.next_ref_unit = next_ref_unit
+        self.ref_backlog = ref_backlog
+        self.now = now
+        return not pending
+
+    def result(self) -> SimResult:
+        if self.pending:
+            raise RuntimeError(
+                f"channel not drained: {len(self.pending)} of "
+                f"{self.n_txns} transactions outstanding")
+        bytes_moved = self.n_txns * self.policy.bytes_per_txn
+        return SimResult(self.finish,
+                         float(self.finish.max(initial=0.0)),
+                         bytes_moved, self.counts)
+
+
 class ChannelSimCore:
     """Policy-driven event loop for one memory channel.
 
@@ -128,7 +258,10 @@ class ChannelSimCore:
        next arrival.
 
     Policies mutate their own FSM state and the shared ``counts`` dict;
-    the core owns the clock, the queue, and the finish array.
+    the loop state (clock, queue, refresh debt, finish array) lives in a
+    :class:`ChannelRunState` — :meth:`run` drives one state to
+    completion, :meth:`start_run` hands the state out for incremental
+    (batched / vectorized multi-channel) advancing.
     """
 
     def __init__(self, policy, queue_depth: int, refresh: bool = True,
@@ -138,69 +271,13 @@ class ChannelSimCore:
         self.refresh = refresh
         self.max_ref_postpone = max_ref_postpone
 
+    def start_run(self, txns: list[Txn]) -> ChannelRunState:
+        """Begin a run without driving it: the returned state advances
+        under caller control (see :mod:`repro.core.sched.vectorized`)."""
+        return ChannelRunState(self, txns)
+
     def run(self, txns: list[Txn]) -> SimResult:
-        pol = self.policy
-        order = sorted(range(len(txns)), key=lambda i: txns[i].arrival_ns)
-        ordered = [txns[i] for i in order]
-        idx_in_finish = {id(tx): order[k] for k, tx in enumerate(ordered)}
-        pending = _PendingQueue(ordered)
-        finish = np.zeros(len(txns))
-        counts = {k: 0 for k in pol.count_keys}
-        counts["ref_backlog_max"] = 0
-        pol.begin(counts)
-
-        period = pol.ref_period
-        next_ref_t = period
-        next_ref_unit = 0
-        ref_backlog = 0
-        now = 0.0
-
-        while pending:
-            qwin = pending.first(self.queue_depth)
-
-            # -- refresh governor: rotating per-unit refresh with
-            # demand-aware bounded postponement, each issue anchored at its
-            # own due time so refreshes of different units may overlap. ----
-            while self.refresh and next_ref_t <= now:
-                ref_backlog += 1
-                next_ref_t += period
-            counts["ref_backlog_max"] = max(counts["ref_backlog_max"],
-                                            ref_backlog)
-            while ref_backlog > 0:
-                demanded = any(tx.bank == next_ref_unit for tx in qwin)
-                if demanded and ref_backlog < self.max_ref_postpone:
-                    break
-                due = next_ref_t - ref_backlog * period
-                pol.issue_refresh(next_ref_unit, due)
-                next_ref_unit = (next_ref_unit + 1) % pol.n_ref_units
-                ref_backlog -= 1
-
-            window = [tx for tx in qwin if tx.arrival_ns <= now]
-            if not window:
-                # Idle: jump to the next event — arrival OR refresh due —
-                # so refreshes due during a sparse-arrival gap are issued
-                # in the gap (bounded postponement) instead of piling up
-                # behind the next arrival.
-                cand = pending.head().arrival_ns
-                if self.refresh:
-                    cand = min(cand, next_ref_t)
-                now = max(now + 1e-9, cand)
-                continue
-
-            now, issued, completions = pol.issue(window, now)
-            for tx, fin in completions:
-                finish[idx_in_finish[id(tx)]] = fin
-                pending.remove(tx)
-
-            if not issued:
-                # Nothing issueable: jump to the next event (refresh or
-                # arrival) to guarantee progress.
-                nxt = [tx.arrival_ns for tx in qwin if tx.arrival_ns > now]
-                cand = min(nxt) if nxt else now + period
-                if self.refresh:
-                    cand = min(cand, next_ref_t)
-                now = max(now + 1e-9, cand)
-
-        bytes_moved = len(txns) * pol.bytes_per_txn
-        return SimResult(finish, float(finish.max(initial=0.0)), bytes_moved,
-                         counts)
+        state = ChannelRunState(self, txns)
+        while not state.advance(4096):
+            pass
+        return state.result()

@@ -76,6 +76,9 @@ class PolicySpec:
         from ..system_sim import SystemSim
         from ..timing import hbm4_config, rome_config
         cfg = hbm4_config() if self.family == "hbm4" else rome_config()
+        # Thread the spec name so analytic/hybrid modes resolve this
+        # point's persisted queue-window calibration, not a family guess.
+        sys_kwargs.setdefault("policy_name", self.name)
         return SystemSim(cfg, n_channels=n_channels,
                          channel_kind=self.sim_kind,
                          channel_kwargs=dict(self.sim_kwargs), **sys_kwargs)

@@ -119,3 +119,72 @@ def interleaved_stream_txns_hbm4(n_streams: int, nbytes_each: int,
             if i < len(s):
                 out.append(s[i])
     return out
+
+
+def _staggered(txns: list[Txn], inter_ns: float) -> list[Txn]:
+    for i, t in enumerate(txns):
+        t.arrival_ns = i * inter_ns
+    return txns
+
+
+def facade_trace_suite() -> list[tuple[str, str, dict, list[Txn]]]:
+    """The 20-trace facade suite: ``(label, kind, kwargs, txns)`` tuples
+    covering every channel-sim kind across layouts, read/write direction,
+    queue depths, refresh on/off, and dense vs sparse arrivals.
+
+    This is the bit-identity contract between the scalar per-channel loop
+    (:meth:`~.core.ChannelSimCore.run`) and the vectorized lockstep
+    advance (:func:`~.vectorized.run_channels`): every trace must produce
+    byte-for-byte equal finish times and command counts under both.
+    Runs do not mutate ``Txn`` fields, so the same trace list can be fed
+    to both engines; each call builds the suite fresh regardless.
+    """
+    burst = 1 << 15
+    suite: list[tuple[str, str, dict, list[Txn]]] = [
+        ("hbm4_bg_read", "hbm4", {},
+         sequential_read_txns_hbm4(burst)),
+        ("hbm4_bg_write", "hbm4", {},
+         sequential_read_txns_hbm4(burst, is_write=True)),
+        ("hbm4_row_linear", "hbm4", {},
+         sequential_read_txns_hbm4(burst, layout="row_linear")),
+        ("hbm4_shallow", "hbm4", {"queue_depth": 2},
+         sequential_read_txns_hbm4(burst, layout="row_linear")),
+        ("hbm4_norefresh", "hbm4", {"refresh": False},
+         sequential_read_txns_hbm4(burst)),
+        ("hbm4_postpone32", "hbm4", {"max_ref_postpone": 32},
+         sequential_read_txns_hbm4(1 << 16)),
+        ("hbm4_interleave8", "hbm4", {},
+         interleaved_stream_txns_hbm4(8, 1 << 12)),
+        ("hbm4_interleave32", "hbm4", {},
+         interleaved_stream_txns_hbm4(32, 1 << 11, seed=1)),
+        ("hbm4_sparse", "hbm4", {},
+         _staggered(sequential_read_txns_hbm4(1 << 13), 200.0)),
+        ("hbm4_closed_read", "hbm4_closed", {},
+         sequential_read_txns_hbm4(burst)),
+        ("hbm4_closed_sparse", "hbm4_closed", {},
+         _staggered(sequential_read_txns_hbm4(1 << 13), 150.0)),
+        ("hbm4_writedrain_mix", "hbm4_writedrain", {},
+         [t for pair in zip(
+             sequential_read_txns_hbm4(burst // 2),
+             sequential_read_txns_hbm4(burst // 2, is_write=True))
+          for t in pair]),
+        ("hbm4_writedrain_sparse", "hbm4_writedrain", {},
+         _staggered(sequential_read_txns_hbm4(1 << 13, is_write=True),
+                    100.0)),
+        ("hbm4_sidgroup_read", "hbm4_sidgroup", {},
+         sequential_read_txns_hbm4(burst)),
+        ("rome_read", "rome", {},
+         sequential_read_txns_rome(1 << 20)),
+        ("rome_write", "rome", {},
+         sequential_read_txns_rome(1 << 19, is_write=True)),
+        ("rome_qd8", "rome", {"queue_depth": 8},
+         sequential_read_txns_rome(1 << 19)),
+        ("rome_one_vba", "rome", {"n_vbas": 1},
+         sequential_read_txns_rome(1 << 18, n_vbas=1)),
+        ("rome_eager", "rome", {"refresh_priority": "eager"},
+         sequential_read_txns_rome(1 << 19)),
+        ("rome_sparse", "rome", {},
+         _staggered(sequential_read_txns_rome(1 << 18), 500.0)),
+    ]
+    assert len(suite) == 20
+    return suite

@@ -33,6 +33,7 @@ see its docstring for why that is the right contract), parallel over
 """
 from __future__ import annotations
 
+import inspect
 import multiprocessing
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
@@ -42,8 +43,12 @@ import numpy as np
 from ..workloads.stream import ExtentRecord, ExtentStream
 from .address_map import AddressMap, make_address_map
 from .sched import SimResult, Txn, make_channel_sim
+from .sched.channels import CHANNEL_SIM_KINDS
 from .sched.traces import hbm4_unit_location, rome_unit_location
+from .sched.vectorized import run_channels
 from .timing import MemSystemConfig
+
+MODES = ("cycle", "analytic", "hybrid")
 
 
 @dataclass
@@ -58,7 +63,15 @@ class SystemResult:
     #: channel -> the exact txn list the channel sim ran, in the input
     #: order its SimResult.finish_ns indexes — so per-txn attribution
     #: (e.g. read latency) never depends on re-running decompose().
+    #: Empty for analytically priced runs (no txns are materialized).
     channel_txns: dict = field(default_factory=dict)
+    #: how this run was priced: "cycle" (event loop) or "analytic"
+    #: (queue-window model) — a hybrid SystemSim stamps each run with
+    #: the path it actually took.
+    mode: str = "cycle"
+    #: modeled queue pressure (queue-window correction / roofline floor);
+    #: 0.0 when the classifier did not run (pure cycle mode).
+    queue_pressure: float = 0.0
 
     @property
     def bandwidth_gbps(self) -> float:
@@ -98,6 +111,30 @@ class SystemSim:
     :meth:`run` for full-width systems; the per-channel behaviour is
     identical either way. ``max_ref_postpone`` defaults to 32 (the
     *well-tuned* pooled-refresh MC that the analytic calibration models).
+
+    ``mode`` selects the pricing engine:
+
+    * ``"cycle"`` (default) — every run goes through the per-channel
+      event loops (the lockstep vectorized advance in-process, a process
+      pool with ``workers > 1``). Ground truth.
+    * ``"analytic"`` — every run is priced by the calibrated
+      queue-window model (:mod:`repro.core.queue_model`): roofline floor
+      plus the fitted per-step/per-txn corrections, O(n_records), no
+      transactions materialized. Trustworthy at low queue pressure.
+    * ``"hybrid"`` — each run/step is classified by its modeled queue
+      pressure: uncontended ones (pressure <= ``pressure_threshold``,
+      defaulting to the policy's own *calibrated* cut from the
+      queue-window table) are priced analytically, contended ones drop
+      into the cycle engine. Runs whose decomposed transaction count would exceed
+      ``max_cycle_txns`` are *always* priced analytically — that guard
+      is what makes unscaled production traces (GB-scale steps that
+      would decompose into millions of transactions) runnable at all.
+
+    ``policy_name`` names the registered :class:`~.sched.PolicySpec`
+    whose persisted queue-window calibration the analytic path uses
+    (``PolicySpec.system_sim`` threads it automatically); without it the
+    family's default point is assumed (``hbm4_frfcfs`` / ``hbm4_closed``
+    by page policy, ``rome_qd2``).
     """
 
     def __init__(self, cfg: MemSystemConfig,
@@ -110,7 +147,21 @@ class SystemSim:
                  channel_kind: str | None = None,
                  channel_kwargs: dict | None = None,
                  sids: int = 1,
-                 sid_capacity_bytes: int = 64 << 20):
+                 sid_capacity_bytes: int = 64 << 20,
+                 mode: str = "cycle",
+                 pressure_threshold: float | None = None,
+                 max_cycle_txns: int = 500_000,
+                 policy_name: str | None = None):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        self.mode = mode
+        self.max_cycle_txns = max_cycle_txns
+        self.policy_name = policy_name
+        # None -> the policy's own calibrated cut (resolved lazily with
+        # the queue-window params; see QueueWindowParams.pressure_threshold).
+        self.pressure_threshold = pressure_threshold
+        self._eff = None               # lazy ChannelEfficiency cache
+        self._qparams = None           # lazy QueueWindowParams cache
         self.cfg = cfg
         self.is_rome = cfg.ag_mc_bytes >= cfg.row_bytes
         if channel_kind is not None:
@@ -195,7 +246,10 @@ class SystemSim:
         processes can rebuild the exact channel sim.
 
         The sims must see the same ChannelGeometry the decomposition
-        used, or bank ids and timing would silently desynchronize."""
+        used, or bank ids and timing would silently desynchronize.
+        ``channel_kwargs`` keys the selected channel-sim class does not
+        accept raise immediately — a typo'd knob (``quue_depth=2``)
+        must never be silently ignored."""
         geo = self.cfg.geometry.channel
         common = dict(geometry=geo, queue_depth=self.queue_depth,
                       refresh=self.refresh,
@@ -208,6 +262,13 @@ class SystemSim:
                 kind = "rome"
             else:
                 kind = "hbm4" if self.page_policy == "open" else "hbm4_closed"
+        allowed = set(inspect.signature(
+            CHANNEL_SIM_KINDS[kind].__init__).parameters) - {"self"}
+        unknown = set(self.channel_kwargs) - allowed
+        if unknown:
+            raise ValueError(
+                f"unknown channel_kwargs {sorted(unknown)} for channel kind "
+                f"{kind!r}; accepted keys: {sorted(allowed)}")
         # Registered per-policy kwargs (queue_depth, watermarks, variant,
         # ...) win over the SystemSim-level defaults.
         return kind, common | self.channel_kwargs
@@ -216,19 +277,111 @@ class SystemSim:
         kind, kwargs = self._sim_spec()
         return make_channel_sim(kind, **kwargs)
 
+    # -- analytic pricing / hybrid classification --------------------------
+
+    def _queue_params(self):
+        """The queue-window calibration for this scheduling point
+        (explicit ``policy_name`` when threaded from a ``PolicySpec``,
+        else the family default)."""
+        if self._qparams is None:
+            from .queue_model import queue_window_params
+            name = self.policy_name
+            if name is None:
+                kind, _ = self._sim_spec()
+                name = {"hbm4": "hbm4_frfcfs", "hbm4_closed": "hbm4_closed",
+                        "hbm4_writedrain": "hbm4_writedrain",
+                        "hbm4_sidgroup": "hbm4_sidgroup",
+                        "rome": "rome_qd2"}[kind]
+            self._qparams = queue_window_params(name)
+        return self._qparams
+
+    def _features(self, stream: ExtentStream) -> dict:
+        from .analytic import calibrate
+        from .queue_model import stream_features
+        if self._eff is None:
+            self._eff = calibrate(self.cfg)
+        return stream_features(stream, self.cfg, self.amap, eff=self._eff)
+
+    def _pressure(self, feats: dict) -> float:
+        floor = max(feats["base_ns"], feats["span_ns"])
+        if floor <= 0.0:
+            return 0.0
+        extra = self._queue_params().predict_extra_ns(
+            feats["txns_gating"], feats["fine_txns_gating"],
+            feats["ext_gating"])
+        return extra / floor
+
+    def _threshold(self) -> float:
+        """The classification cut: an explicit ``pressure_threshold``
+        wins; otherwise the policy's own calibrated threshold."""
+        if self.pressure_threshold is not None:
+            return self.pressure_threshold
+        return self._queue_params().pressure_threshold
+
+    def _use_cycle(self, feats: dict, pressure: float) -> bool:
+        """Hybrid classification: contended windows go to the cycle
+        engine — unless their decomposed transaction count would blow the
+        cycle budget, in which case analytic pricing is the only option
+        that keeps unscaled traces runnable."""
+        return (pressure > self._threshold()
+                and feats["total_txns"] <= self.max_cycle_txns)
+
+    def _analytic_result(self, feats: dict, pressure: float) -> SystemResult:
+        """Price one stream with the queue-window model. Byte accounting
+        matches the cycle engine exactly (both move whole stripe units);
+        per-channel finish times spread the makespan proportionally to
+        channel load, with the gating channel defining the makespan."""
+        floor = max(feats["base_ns"], feats["span_ns"])
+        total = floor + self._queue_params().predict_extra_ns(
+            feats["txns_gating"], feats["fine_txns_gating"],
+            feats["ext_gating"])
+        ch_bytes = feats["mc_channel_bytes"].astype(np.int64)
+        mx = ch_bytes.max(initial=0)
+        if mx == 0:
+            total, ch_finish = 0.0, np.zeros(self.amap.n_channels)
+        else:
+            ch_finish = total * (ch_bytes / mx)
+        return SystemResult(
+            total_ns=float(total),
+            bytes_moved=int(ch_bytes.sum()),
+            channel_bytes=ch_bytes,
+            channel_finish_ns=ch_finish,
+            channel_results={},
+            channel_txns={},
+            mode="analytic",
+            queue_pressure=pressure,
+        )
+
     # -- run ---------------------------------------------------------------
 
     def run(self, stream: ExtentStream, workers: int = 1) -> SystemResult:
-        """Simulate a timed extent stream on all loaded channels; idle
-        channels cost nothing. ``workers > 1`` simulates channels in a
-        process pool (channels share no modeled resource, so serial and
-        parallel runs are identical — asserted in tests/test_core_memory).
-        Returns the system-level :class:`SystemResult`."""
+        """Simulate or price a timed extent stream on all loaded
+        channels; idle channels cost nothing. The pricing engine follows
+        this sim's ``mode``: ``"cycle"`` always runs the event loops,
+        ``"analytic"`` always uses the queue-window model, ``"hybrid"``
+        classifies by modeled queue pressure (see the class docstring).
+        ``workers > 1`` simulates cycle-path channels in a process pool
+        (channels share no modeled resource, so serial and parallel runs
+        are identical — asserted in tests/test_core_memory); in-process,
+        channels advance in lockstep via the vectorized driver, which is
+        bit-identical to per-channel loops. Returns the system-level
+        :class:`SystemResult`, stamped with the path taken."""
+        if self.mode != "cycle":
+            feats = self._features(stream)
+            pressure = self._pressure(feats)
+            if self.mode == "analytic" or not self._use_cycle(feats,
+                                                              pressure):
+                return self._analytic_result(feats, pressure)
+            return self._run_cycle(stream, workers, pressure=pressure)
+        return self._run_cycle(stream, workers)
+
+    def _run_cycle(self, stream: ExtentStream, workers: int = 1,
+                   pressure: float = 0.0) -> SystemResult:
         per_channel = self.decompose(stream)
         items = sorted(per_channel.items())
         results: dict[int, SimResult] = {}
+        kind, kwargs = self._sim_spec()
         if workers > 1 and len(items) > 1:
-            kind, kwargs = self._sim_spec()
             # Spawn, not fork: the caller's process often has JAX's thread
             # pool alive (fork would risk deadlock), and the worker import
             # chain is numpy-only so fresh interpreters stay cheap.
@@ -239,9 +392,9 @@ class SystemSim:
                            for c, txns in items]
                 for c, fut in futures:
                     results[c] = fut.result()
-        else:
-            for c, txns in items:
-                results[c] = self._make_sim().run(txns)
+        elif items:
+            sims = run_channels(kind, kwargs, [txns for _, txns in items])
+            results = {c: r for (c, _), r in zip(items, sims)}
 
         nch = self.amap.n_channels
         ch_bytes = np.zeros(nch, dtype=np.int64)
@@ -256,6 +409,7 @@ class SystemSim:
             channel_finish_ns=ch_finish,
             channel_results=results,
             channel_txns=dict(items),
+            queue_pressure=pressure,
         )
 
     def run_steps(self, streams: "list[ExtentStream]",
@@ -281,23 +435,50 @@ class SystemSim:
         1`` farms (step, channel) sims out to one process pool — the
         batched path for re-simulating a recorded serve trace under
         another policy, where no step-by-step clock feedback is needed.
+
+        **Hybrid mode** classifies each step independently under the
+        same per-step reset contract: an uncontended step (modeled queue
+        pressure <= ``pressure_threshold``, or a decomposed transaction
+        count past ``max_cycle_txns``) is priced by the queue-window
+        model, a contended one runs through the cycle engine — both
+        against an idle system, exactly like every other step. No state
+        flows between steps in *any* mode, so mixing pricing engines
+        step-by-step cannot leak contention across a step boundary; each
+        returned :class:`SystemResult` is stamped with the ``mode`` it
+        took (:func:`hybrid_fraction` summarizes the split).
         """
         if starts_ns is not None and len(starts_ns) != len(streams):
             raise ValueError(
                 f"starts_ns has {len(starts_ns)} entries for "
                 f"{len(streams)} streams")
-        prepared = []                     # (step, channel, txns)
+        rebased: list[ExtentStream] = []
         for i, s in enumerate(streams):
             t0 = (starts_ns[i] if starts_ns is not None
                   else min((r.arrival_ns for r in s), default=0.0))
-            per_channel = self.decompose(s.shifted(-t0) if t0 else s)
-            prepared.append(sorted(per_channel.items()))
-        out: list[SystemResult] = []
-        all_results: list[dict[int, SimResult]] = [dict() for _ in prepared]
-        flat = [(i, c, txns) for i, items in enumerate(prepared)
+            rebased.append(s.shifted(-t0) if t0 else s)
+
+        out: list[SystemResult | None] = [None] * len(rebased)
+        cycle_steps: list[tuple[int, float]] = []    # (step, pressure)
+        if self.mode != "cycle":
+            for i, s in enumerate(rebased):
+                feats = self._features(s)
+                pressure = self._pressure(feats)
+                if self.mode == "analytic" or not self._use_cycle(feats,
+                                                                  pressure):
+                    out[i] = self._analytic_result(feats, pressure)
+                else:
+                    cycle_steps.append((i, pressure))
+        else:
+            cycle_steps = [(i, 0.0) for i in range(len(rebased))]
+
+        prepared = {i: sorted(self.decompose(rebased[i]).items())
+                    for i, _ in cycle_steps}
+        all_results: dict[int, dict[int, SimResult]] = {
+            i: {} for i in prepared}
+        flat = [(i, c, txns) for i, items in prepared.items()
                 for c, txns in items]
+        kind, kwargs = self._sim_spec()
         if workers > 1 and len(flat) > 1:
-            kind, kwargs = self._sim_spec()
             with ProcessPoolExecutor(
                     max_workers=min(workers, len(flat)),
                     mp_context=multiprocessing.get_context("spawn")) as pool:
@@ -306,25 +487,28 @@ class SystemSim:
                            for i, c, txns in flat]
                 for i, c, fut in futures:
                     all_results[i][c] = fut.result()
-        else:
-            for i, c, txns in flat:
-                all_results[i][c] = self._make_sim().run(txns)
+        elif flat:
+            sims = run_channels(kind, kwargs, [txns for _, _, txns in flat])
+            for (i, c, _), r in zip(flat, sims):
+                all_results[i][c] = r
         nch = self.amap.n_channels
-        for i, items in enumerate(prepared):
+        for i, pressure in cycle_steps:
+            items = prepared[i]
             results = all_results[i]
             ch_bytes = np.zeros(nch, dtype=np.int64)
             ch_finish = np.zeros(nch)
             for c, r in results.items():
                 ch_bytes[c] = r.bytes_moved
                 ch_finish[c] = r.total_ns
-            out.append(SystemResult(
+            out[i] = SystemResult(
                 total_ns=float(ch_finish.max(initial=0.0)),
                 bytes_moved=int(ch_bytes.sum()),
                 channel_bytes=ch_bytes,
                 channel_finish_ns=ch_finish,
                 channel_results=results,
                 channel_txns=dict(items),
-            ))
+                queue_pressure=pressure,
+            )
         return out
 
     def run_extents(self, extents: list[tuple[int, int]],
@@ -343,6 +527,15 @@ class SystemSim:
         return self.run(stream, workers=workers)
 
 
+def hybrid_fraction(results: "list[SystemResult]") -> float:
+    """Fraction of runs a hybrid SystemSim priced analytically (1.0 =
+    every step took the fast path; 0.0 for an all-cycle run or an empty
+    list)."""
+    if not results:
+        return 0.0
+    return sum(r.mode == "analytic" for r in results) / len(results)
+
+
 def bulk_stream_extents(nbytes: int, n_extents: int = 1,
                         base_addr: int = 0,
                         gap_bytes: int = 0) -> list[tuple[int, int]]:
@@ -357,4 +550,5 @@ def bulk_stream_extents(nbytes: int, n_extents: int = 1,
                        gap_bytes=gap_bytes).extents()
 
 
-__all__ = ["SystemSim", "SystemResult", "bulk_stream_extents"]
+__all__ = ["SystemSim", "SystemResult", "bulk_stream_extents",
+           "hybrid_fraction", "MODES"]

@@ -65,6 +65,7 @@ class StepSummary:
     n_active: int
     bytes_moved: int      # MC-granularity bytes the sim moved (overfetch in)
     stream_bytes: int     # request-side bytes of the step's extent stream
+    mode: str = "cycle"   # pricing path the SystemSim took for this step
 
 
 @dataclass
@@ -85,6 +86,14 @@ class ReplayResult:
         if self.makespan_ns <= 0:
             return 0.0
         return self.completed / (self.makespan_ns / 1e9)
+
+    @property
+    def hybrid_fraction(self) -> float:
+        """Fraction of decode steps priced by the queue-window analytic
+        model (0.0 for a pure-cycle replay)."""
+        if not self.steps:
+            return 0.0
+        return sum(s.mode == "analytic" for s in self.steps) / len(self.steps)
 
     @property
     def ttfts_ns(self) -> list[float]:
@@ -117,6 +126,7 @@ class ReplayResult:
             # overfetch); stream_bytes is the software-side demand.
             "bytes_moved": int(sum(s.bytes_moved for s in self.steps)),
             "stream_bytes": int(sum(s.stream_bytes for s in self.steps)),
+            "hybrid_fraction": round(self.hybrid_fraction, 4),
         }
         for name, vals in (("ttft", self.ttfts_ns), ("tpot", self.tpots_ns)):
             for k, v in self.percentiles(vals).items():
@@ -178,7 +188,8 @@ class ReplayEngine:
                 rec.arrivals.on_complete(end)
             steps.append(StepSummary(st.index, now, dur, len(st.active),
                                      res.bytes_moved,
-                                     st.stream.total_bytes))
+                                     st.stream.total_bytes,
+                                     mode=res.mode))
             if self.keep_traces:
                 traces.append(st)
             now = end
@@ -208,6 +219,7 @@ def build_replay(workload: str = "deepseek-v3",
                  keep_traces: bool = False,
                  overhead_ns: float = 0.0,
                  mix=None,
+                 sim_mode: str = "cycle",
                  **arrival_kw):
     """Wire a complete replay for one (workload, policy, load) cell.
 
@@ -221,16 +233,25 @@ def build_replay(workload: str = "deepseek-v3",
 
     The default ``scale`` keeps steps tiny for fast structural tests;
     in that regime HBM4 steps are ACT-issue-bound and sit *outside* the
-    analytic model's validity. The band-valid regime
+    analytic model's validity. The band-valid cycle regime
     (benchmarks/serve_trace.py) uses ``scale=2**-12`` — ≈240 KB/step,
     large enough that data transfer hides ACT-command serialization,
     which is what the established 15 % engine_xval band assumes.
+
+    ``scale=1.0`` replays the *unscaled* weight slice — decode steps in
+    the tens of GB that would decompose into ~1e9 transactions each.
+    That path requires ``sim_mode="hybrid"`` (or ``"analytic"``): the
+    queue-window model prices the bulk weight stream in O(n_records),
+    and the KV pool base auto-raises past the unscaled slice's end (the
+    recorder rejects aliasing layouts otherwise). ``sim_mode`` is passed
+    straight to :meth:`PolicySpec.system_sim` as the SystemSim ``mode``.
     """
     from ...configs.paper_workloads import PAPER_WORKLOADS, SERVING_MIXES
     from ...core.sched.registry import policy_spec
     from ...perfmodel.accelerator import scaled_accelerator
+    from ...trace.layergraph import ROW
     from .arrivals import ArrivalProcess
-    from .recorder import (ServeTraceRecorder, make_kv_cache,
+    from .recorder import (KV_BASE_ADDR, ServeTraceRecorder, make_kv_cache,
                            weight_step_stream)
 
     spec = policy_spec(policy)
@@ -238,6 +259,10 @@ def build_replay(workload: str = "deepseek-v3",
     mix = SERVING_MIXES[workload] if mix is None else mix
     acc = scaled_accelerator(spec.family, n_channels=n_channels)
     ws, chain_ns = weight_step_stream(w, acc, n_ops=n_ops, scale=scale)
+    # An unscaled slice overruns the default KV base; park the pool at
+    # the first row past the weights so layouts never alias at any scale.
+    w_end = max((r.end for r in ws), default=0)
+    kv_base = max(KV_BASE_ADDR, -(-w_end // ROW) * ROW)
     max_tokens = (max(1, round(mix.prompt_max * length_scale))
                   + max(1, round(mix.out_max * length_scale)))
     cache = make_kv_cache(n_slots, max_tokens)
@@ -245,8 +270,9 @@ def build_replay(workload: str = "deepseek-v3",
                               length_scale=length_scale, seed=seed,
                               **arrival_kw)
     recorder = ServeTraceRecorder(arrivals, cache, weight_stream=ws,
-                                  kv_offset_ns=chain_ns)
-    system = spec.system_sim(n_channels=n_channels)
+                                  kv_offset_ns=chain_ns,
+                                  kv_base_addr=kv_base)
+    system = spec.system_sim(n_channels=n_channels, mode=sim_mode)
     engine = ReplayEngine(recorder, system, overhead_ns=overhead_ns,
                           keep_traces=keep_traces)
     return engine, acc

@@ -1,0 +1,203 @@
+"""Hybrid fast-path SystemSim: calibrated queue-window model, pressure
+classification, vectorized lockstep engine, and the unscaled replay path.
+
+The two contracts under test (benchmarks/hybrid_xval.py cross-validates
+the same claims at full size):
+
+* analytically-priced steps sit within the declared band
+  (``HYBRID_BAND``) of the cycle engine; cycle-routed steps are the
+  cycle engine — exactly;
+* the vectorized lockstep driver is bit-identical to the scalar event
+  loop on every facade trace.
+"""
+import numpy as np
+import pytest
+
+from _proptest import given, settings, strategies as st
+from repro.core.queue_model import (HYBRID_BAND, QueueWindowParams,
+                                    queue_window_params, stream_features,
+                                    stressor_streams)
+from repro.core.sched import facade_trace_suite, make_channel_sim, run_channels
+from repro.core.sched.registry import policy_names, policy_spec
+from repro.core.system_sim import SystemSim, hybrid_fraction
+from repro.core.timing import hbm4_config, rome_config
+from repro.workloads import (bulk_stream, interleave, sparse_stream,
+                             strided_stream)
+
+N_CHANNELS = 2
+
+
+def _cfg_of(spec):
+    return hbm4_config() if spec.family == "hbm4" else rome_config()
+
+
+def _random_mixed_stream(cfg, rng):
+    """A randomized decode-step-shaped mix (bulk slice + row-scale
+    strides + sparse sub-row gather + optional write tail), small enough
+    that the cycle reference stays fast."""
+    row = cfg.row_bytes
+    parts = [
+        bulk_stream(int(rng.integers(8, 48)) * row,
+                    n_extents=int(rng.integers(1, 4))),
+        strided_stream(int(rng.integers(4, 16)),
+                       int(rng.integers(1, 3)) * row,
+                       4 * row, base_addr=1 << 21).retagged(1),
+    ]
+    if rng.integers(2):
+        parts.append(sparse_stream(int(rng.integers(8, 32)),
+                                   max(64, row // 8), 1 << 22,
+                                   seed=int(rng.integers(1 << 20)),
+                                   stream_id=2))
+    if rng.integers(2):
+        parts.append(bulk_stream(int(rng.integers(1, 6)) * row,
+                                 kind="write",
+                                 base_addr=1 << 24).retagged(3))
+    return interleave(parts)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine: bit-identity
+# ---------------------------------------------------------------------------
+
+def test_vectorized_bit_identical_on_facade_suite():
+    """Every facade trace: the lockstep driver must reproduce the scalar
+    event loop exactly — same finish times, makespan, byte count, and
+    command census. (Identity by construction: both drive the same
+    suspended ChannelRunState machine.)"""
+    for label, kind, kwargs, txns in facade_trace_suite():
+        scalar = make_channel_sim(kind, **kwargs).run(txns)
+        vec, = run_channels(kind, kwargs, [txns])
+        assert np.array_equal(scalar.finish_ns, vec.finish_ns), label
+        assert scalar.total_ns == vec.total_ns, label
+        assert scalar.bytes_moved == vec.bytes_moved, label
+        assert scalar.cmd_counts == vec.cmd_counts, label
+
+
+def test_vectorized_multi_channel_matches_per_channel_runs():
+    """Several channels advancing together in one lockstep batch must
+    equal independent scalar runs of each channel's queue."""
+    suite = [t for t in facade_trace_suite() if t[1] == "hbm4"][:3]
+    kwargs = suite[0][2]
+    queues = [txns for _, _, kw, txns in suite if kw == kwargs]
+    results = run_channels("hbm4", kwargs, queues, batch=7)
+    for txns, vec in zip(queues, results):
+        scalar = make_channel_sim("hbm4", **kwargs).run(txns)
+        assert np.array_equal(scalar.finish_ns, vec.finish_ns)
+        assert scalar.cmd_counts == vec.cmd_counts
+
+
+# ---------------------------------------------------------------------------
+# Hybrid band: every registered policy, randomized mixed streams
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", policy_names())
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=3, deadline=None)
+def test_hybrid_within_band_of_cycle(policy, seed):
+    """Hybrid pricing vs the cycle engine on randomized mixed streams:
+    analytically-classified runs must land within the declared band;
+    cycle-routed runs must be *exactly* the cycle engine's answer."""
+    spec = policy_spec(policy)
+    cfg = _cfg_of(spec)
+    rng = np.random.default_rng(seed)
+    stream = _random_mixed_stream(cfg, rng)
+    ref = spec.system_sim(n_channels=N_CHANNELS, mode="cycle").run(stream)
+    res = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid").run(stream)
+    rel = abs(res.total_ns - ref.total_ns) / ref.total_ns
+    if res.mode == "analytic":
+        assert rel < HYBRID_BAND, (policy, seed, ref.total_ns, res.total_ns)
+        # Byte accounting must match the cycle engine exactly in every
+        # mode — both price whole stripe units.
+        assert res.bytes_moved == ref.bytes_moved
+    else:
+        assert res.mode == "cycle"
+        assert rel == 0.0, (policy, seed, rel)
+
+
+def test_hybrid_band_on_stressor_suite_flagships():
+    """The calibration stressors themselves, end to end through the
+    hybrid classifier, for the two serve-replay flagship policies."""
+    for policy in ("hbm4_frfcfs", "rome_qd2"):
+        spec = policy_spec(policy)
+        cfg = _cfg_of(spec)
+        cyc = spec.system_sim(n_channels=N_CHANNELS, mode="cycle")
+        hyb = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid")
+        n_analytic = 0
+        for label, stream in stressor_streams(cfg):
+            ref = cyc.run(stream)
+            res = hyb.run(stream)
+            rel = abs(res.total_ns - ref.total_ns) / ref.total_ns
+            if res.mode == "analytic":
+                n_analytic += 1
+                assert rel < HYBRID_BAND, (policy, label, rel)
+            else:
+                assert rel == 0.0, (policy, label, rel)
+        # The flagships must actually exercise the analytic path.
+        assert n_analytic > 0, policy
+
+
+# ---------------------------------------------------------------------------
+# Classification & mode plumbing
+# ---------------------------------------------------------------------------
+
+def test_txn_guard_forces_analytic_pricing():
+    """A stream whose decomposed transaction count exceeds
+    ``max_cycle_txns`` must be priced analytically even when contended —
+    the guard that makes unscaled traces runnable."""
+    spec = policy_spec("hbm4_frfcfs")
+    sim = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid",
+                          max_cycle_txns=10)
+    res = sim.run(bulk_stream(1 << 16))
+    assert res.mode == "analytic"
+
+
+def test_explicit_threshold_overrides_calibrated_cut():
+    """``pressure_threshold=0.0`` must route every nonzero-pressure run
+    to the cycle engine regardless of the calibrated table."""
+    spec = policy_spec("rome_qd2")
+    sim = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid",
+                          pressure_threshold=0.0)
+    res = sim.run(bulk_stream(1 << 20))
+    assert res.mode == "cycle"
+    assert res.queue_pressure > 0.0
+
+
+def test_calibrated_threshold_is_loaded_from_table():
+    """Every registered policy resolves a calibrated threshold in
+    (0, DEFAULT]; the persisted table is the source."""
+    from repro.core.queue_model import DEFAULT_PRESSURE_THRESHOLD
+    for name in policy_names():
+        p = queue_window_params(name)
+        assert isinstance(p, QueueWindowParams)
+        assert 0.0 < p.pressure_threshold <= DEFAULT_PRESSURE_THRESHOLD, name
+
+
+def test_run_steps_mixed_modes_and_hybrid_fraction():
+    """run_steps classifies per step independently: a bulk step prices
+    analytic while a fine-thrash step drops to cycle, and
+    ``hybrid_fraction`` reports the split."""
+    spec = policy_spec("rome_qd2")
+    cfg = rome_config()
+    row = cfg.row_bytes
+    sim = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid")
+    streams = [bulk_stream(64 * row),
+               strided_stream(128, max(64, row // 16), row,
+                              base_addr=1 << 22)]
+    results = sim.run_steps(streams)
+    modes = [r.mode for r in results]
+    assert modes == ["analytic", "cycle"], modes
+    assert hybrid_fraction(results) == 0.5
+
+
+def test_analytic_features_match_cycle_byte_accounting():
+    """The O(n_records) census prices exactly the bytes the cycle engine
+    moves (whole stripe units, overfetch included)."""
+    spec = policy_spec("rome_qd2")
+    cfg = rome_config()
+    sim = spec.system_sim(n_channels=N_CHANNELS)
+    stream = interleave([
+        bulk_stream(10 * cfg.row_bytes),
+        sparse_stream(16, 256, 1 << 22, seed=5, stream_id=1)])
+    feats = stream_features(stream, cfg, sim.amap)
+    ref = sim.run(stream)
+    assert int(feats["mc_channel_bytes"].sum()) == ref.bytes_moved
