@@ -1,0 +1,347 @@
+"""Fleet goodput vs offered load: equal-pin HBM4 vs RoMe across router
+policies, plus the batched-pricing speedup that makes the sweep feasible.
+
+Three claims, each carried by the record:
+
+* **fleet curves** — ``ClusterSim`` sweeps of N replicas behind a
+  router, equal-pin HBM4 (8 channels) vs RoMe (9 channels, the paper's
+  pin-neutral comparison), over bursty open-loop *and* closed-loop
+  arrivals and ≥2 placement policies. Per cell: goodput, TTFT/TPOT
+  tails, rejection counts, conservation checks. The record notes
+  whether RoMe's single-cube goodput edge compounds or washes out per
+  router at fleet scale.
+* **speedup** — pricing the fleet's decode steps through the batched
+  census + signature memo cache (``StepPricer``) must beat the per-step
+  unbatched path (the pre-batching implementation: per-extent Python
+  loop censuses, one call per step, no cache — reproduced verbatim
+  below as the reference) by ≥10× wall-clock on steps sampled from the
+  real sweep. Also recorded: the intermediate vectorized-per-step time,
+  so the ledger separates the census rewrite's win from the memo
+  cache's win. A correctness guard asserts the reference and the
+  batched path price identical features before timing anything.
+* **scale** (full mode only) — a 1M-request, 8-replica hybrid-mode
+  sweep completes in minutes of wall-clock; the measured request and
+  step throughput are stamped in the record.
+
+``--reduced`` shrinks the grid for PR-CI smoke; the standalone
+``--json`` payload mimics ``benchmarks.run --json`` (one benchmark
+entry named ``cluster_sweep_reduced``) so the same
+``scripts/bench_compare.py`` gate applies to both sizes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.analytic import calibrate, stream_time_ns
+from repro.core.queue_model import StepPricer, queue_window_params
+from repro.core.sched.registry import policy_spec
+from repro.core.timing import hbm4_config, rome_config
+from repro.serve.cluster import REJECTED, ClusterSim
+
+#: Equal-pin channel counts (paper §VI): RoMe's narrower CA interface
+#: buys one extra channel on the same pin budget.
+EQUAL_PIN = {"hbm4_frfcfs": 8, "rome_qd2": 9}
+ROUTERS = ("round_robin", "least_kv")
+SPEEDUP_FLOOR = 10.0
+N_SAMPLE_STREAMS = 128
+
+#: Fleet-sweep sizing shared by every curve cell.
+CELL = dict(workload="deepseek-v3", scale=1.0, sim_mode="hybrid",
+            length_scale=1 / 64, n_slots=8, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Reference: the pre-batching per-step pricing path (kept verbatim so the
+# speedup claim is measured against real code, not a strawman)
+# ---------------------------------------------------------------------------
+
+def _loop_unit_counts(amap, extents):
+    out = np.zeros(amap.n_channels, dtype=np.int64)
+    g = amap.stripe_bytes
+    for start, nbytes in extents:
+        if nbytes <= 0:
+            continue
+        first_unit = start // g
+        last_unit = (start + nbytes - 1) // g
+        n_units = last_unit - first_unit + 1
+        full, rem = divmod(n_units, amap.n_channels)
+        if full:
+            out += full
+        if rem:
+            ch0 = first_unit % amap.n_channels
+            idx = (ch0 + np.arange(rem)) % amap.n_channels
+            np.add.at(out, idx, 1)
+    return out
+
+
+def _loop_touch_counts(amap, extents):
+    out = np.zeros(amap.n_channels, dtype=np.int64)
+    g, nch = amap.stripe_bytes, amap.n_channels
+    for start, nbytes in extents:
+        if nbytes <= 0:
+            continue
+        first_unit = start // g
+        last_unit = (start + nbytes - 1) // g
+        n_units = last_unit - first_unit + 1
+        if n_units >= nch:
+            out += 1
+        else:
+            idx = (first_unit % nch + np.arange(n_units)) % nch
+            out[np.unique(idx)] += 1
+    return out
+
+
+def _unbatched_features(stream, cfg, amap, eff):
+    """The pre-batching ``stream_features``: one call per step, four
+    per-extent loop censuses, no signature cache."""
+    reads = stream.extents("read")
+    writes = stream.extents("write")
+    base_ns = stream_time_ns(stream, cfg, amap, eff=eff)
+    counts = (_loop_unit_counts(amap, reads)
+              + _loop_unit_counts(amap, writes))
+    fine_reads = [(a, n) for a, n in reads if n < cfg.row_bytes]
+    fine_writes = [(a, n) for a, n in writes if n < cfg.row_bytes]
+    fine = (_loop_unit_counts(amap, fine_reads)
+            + _loop_unit_counts(amap, fine_writes))
+    ext = (_loop_touch_counts(amap, reads)
+           + _loop_touch_counts(amap, writes))
+    return {
+        "base_ns": base_ns,
+        "span_ns": stream.span_ns,
+        "txns_gating": float(counts.max(initial=0)),
+        "fine_txns_gating": float(fine.max(initial=0)),
+        "ext_gating": float(ext.max(initial=0)),
+        "total_txns": int(counts.sum()),
+        "mc_channel_bytes": counts * amap.stripe_bytes,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fleet curve cells
+# ---------------------------------------------------------------------------
+
+def _cell(policy, n_channels, router, kind, rate_rps, n_requests,
+          n_replicas, keep_samples=0, **kw):
+    params = dict(CELL, policy=policy, n_channels=n_channels,
+                  router=router, kind=kind, rate_rps=rate_rps,
+                  n_requests=n_requests, n_replicas=n_replicas,
+                  keep_sample_streams=keep_samples, **kw)
+    cs = ClusterSim(**params)
+    t0 = time.perf_counter()
+    r = cs.run()
+    wall = time.perf_counter() - t0
+    # Conservation: issued requests are placed exactly once; everything
+    # placed completes (rejection only under an SLO router, absent here).
+    assert r.issued == n_requests, (r.issued, n_requests)
+    assert r.completed + r.rejected == r.issued
+    assert r.rejected == 0, r.rejected      # no SLO router in the curves
+    assert (r.replica_of != REJECTED).all()
+    assert int(r.requests_per_replica.sum()) == r.issued
+    s = r.summary()
+    s["wall_s"] = round(wall, 3)
+    s["offered_rps"] = rate_rps
+    return cs, r, s
+
+
+def _curves(reduced: bool) -> tuple[dict, list]:
+    """goodput-vs-offered-load per (policy, router, arrival kind); also
+    returns sampled step streams for the speedup measurement."""
+    loads = [1e5, 3e5] if reduced else [1e5, 2e5, 4e5, 8e5]
+    n_req = 96 if reduced else 600
+    n_rep = 2 if reduced else 4
+    samples: list = []
+    out: dict = {}
+    for policy, nch in EQUAL_PIN.items():
+        out[policy] = {}
+        for router in ROUTERS:
+            cell_rows: dict = {"bursty": {}, "closed": {}}
+            for rate in loads:
+                # Sample real decode-step streams from the RoMe cells
+                # (across loads and routers, the production step mix)
+                # until the speedup measurement has enough of them.
+                keep = (N_SAMPLE_STREAMS - len(samples)
+                        if policy == "rome_qd2" else 0)
+                cs, r, s = _cell(policy, nch, router, "bursty", rate,
+                                 n_req, n_rep, burst_size=8,
+                                 keep_samples=max(keep, 0))
+                if keep > 0:
+                    samples.extend(cs.sample_streams)
+                cell_rows["bursty"][f"{rate:g}"] = s
+            _, r, s = _cell(policy, nch, router, "closed", loads[-1],
+                            n_req, n_rep, n_users=4 * n_rep,
+                            think_ns=1e4)
+            cell_rows["closed"]["steady"] = s
+            out[policy][router] = cell_rows
+    out["_samples_policy"] = "rome_qd2"
+    return out, samples
+
+
+def _compounding(curves: dict) -> dict:
+    """Does RoMe's single-cube goodput edge survive fleet routing? Per
+    (router, load): fleet goodput ratio RoMe / HBM4."""
+    out = {}
+    for router in ROUTERS:
+        rows = {}
+        for kind in ("bursty", "closed"):
+            h = curves["hbm4_frfcfs"][router][kind]
+            m = curves["rome_qd2"][router][kind]
+            for load in h:
+                denom = max(h[load]["goodput_rps"], 1e-9)
+                rows[f"{kind}@{load}"] = round(
+                    m[load]["goodput_rps"] / denom, 4)
+        out[router] = rows
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Speedup: batched + memoized pricing vs the per-step unbatched path
+# ---------------------------------------------------------------------------
+
+def _speedup(samples, policy: str) -> dict:
+    spec = policy_spec(policy)
+    cfg = hbm4_config() if spec.family == "hbm4" else rome_config()
+    amap = spec.system_sim(n_channels=EQUAL_PIN[policy]).amap
+    eff = calibrate(cfg)
+    params = queue_window_params(policy)
+    assert len(samples) >= 32, len(samples)
+
+    # Correctness first: the loop reference and the batched census price
+    # identical features (bit-exact — same integer censuses, same IEEE
+    # roofline op order) on a prefix of the sample.
+    pricer = StepPricer(cfg, amap, params, eff=eff, recheck_every=0)
+    batched = pricer.features_many(samples)
+    for s, f in list(zip(samples, batched))[:8]:
+        ref = _unbatched_features(s, cfg, amap, eff)
+        for key in ("base_ns", "span_ns", "txns_gating",
+                    "fine_txns_gating", "ext_gating", "total_txns"):
+            assert ref[key] == f[key], (key, ref[key], f[key])
+        assert np.array_equal(ref["mc_channel_bytes"],
+                              f["mc_channel_bytes"])
+
+    # Reference: one unbatched call per step (pre-batching code path).
+    t0 = time.perf_counter()
+    for s in samples:
+        _unbatched_features(s, cfg, amap, eff)
+    t_unbatched = time.perf_counter() - t0
+
+    # Intermediate: the vectorized census, still one call per step and
+    # no cache — isolates the census rewrite from the memo cache.
+    from repro.core.queue_model import _features_batch
+    t0 = time.perf_counter()
+    for s in samples:
+        s.memo.clear()
+        _features_batch([s], cfg, amap, eff)
+    t_per_step = time.perf_counter() - t0
+
+    # Production path: fresh pricer, fleet-round-sized batches, memo
+    # cache warm across rounds exactly as in ClusterSim.run.
+    for s in samples:
+        s.memo.clear()
+    pricer = StepPricer(cfg, amap, params, eff=eff, recheck_every=0)
+    round_size = 32
+    t0 = time.perf_counter()
+    for i in range(0, len(samples), round_size):
+        pricer.features_many(samples[i:i + round_size])
+    t_batched = max(time.perf_counter() - t0, 1e-9)
+
+    speedup = t_unbatched / t_batched
+    assert speedup >= SPEEDUP_FLOOR, (
+        f"batched+memoized pricing only {speedup:.1f}x faster than the "
+        f"per-step unbatched path (floor {SPEEDUP_FLOOR}x): "
+        f"{t_unbatched:.4f}s vs {t_batched:.4f}s over {len(samples)} steps")
+    return {
+        "policy": policy,
+        "n_steps": len(samples),
+        "unbatched": {"wall_s": round(t_unbatched, 4)},
+        "per_step_vectorized": {"wall_s": round(t_per_step, 4)},
+        "batched_memoized": {"wall_s": round(t_batched, 5)},
+        "speedup_vs_unbatched": round(speedup, 1),
+        "speedup_vs_per_step": round(t_per_step / t_batched, 1),
+        "cache": pricer.stats,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Scale: the million-request fleet cell
+# ---------------------------------------------------------------------------
+
+def _mega_cell() -> dict:
+    n_requests = 1_000_000
+    t0 = time.perf_counter()
+    cs = ClusterSim(**dict(CELL, policy="rome_qd2",
+                           n_channels=EQUAL_PIN["rome_qd2"],
+                           router="least_kv", kind="bursty", burst_size=8,
+                           rate_rps=5e6, n_requests=n_requests,
+                           n_replicas=8))
+    t_build = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r = cs.run()
+    wall = time.perf_counter() - t0
+    assert r.completed == n_requests, (r.completed, n_requests)
+    assert int(r.requests_per_replica.sum()) == n_requests
+    s = r.summary()
+    s.update({
+        "build_s": round(t_build, 1),
+        "wall_s": round(wall, 1),
+        "requests_per_wall_s": round(n_requests / wall, 0),
+        "steps_per_wall_s": round(r.steps_total / wall, 0),
+        "pricer": r.pricer_stats,
+    })
+    return s
+
+
+def run(reduced: bool = False) -> dict:
+    out: dict = {"config": {
+        "reduced": reduced,
+        "equal_pin_channels": dict(EQUAL_PIN),
+        "routers": list(ROUTERS),
+        "speedup_floor": SPEEDUP_FLOOR,
+        **{k: v for k, v in CELL.items() if k != "workload"},
+    }}
+    curves, samples = _curves(reduced)
+    out["curves"] = curves
+    out["rome_over_hbm4_goodput"] = _compounding(curves)
+    out["speedup"] = _speedup(samples, curves["_samples_policy"])
+    if not reduced:
+        out["mega"] = _mega_cell()
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import traceback
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--reduced", action="store_true",
+                   help="PR-CI size: smaller grid, no 1M-request cell")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write a benchmarks.run-shaped payload to PATH "
+                        "(gateable by scripts/bench_compare.py)")
+    args = p.parse_args()
+    name = "cluster_sweep_reduced" if args.reduced else "cluster_sweep"
+    t0 = time.time()
+    try:
+        results = run(reduced=args.reduced)
+        status = "PASS"
+    except AssertionError as e:
+        results = {"error": str(e)}
+        status = "FAIL"
+    except Exception:
+        results = {"error": traceback.format_exc()[-800:]}
+        status = "ERROR"
+    wall = round(time.time() - t0, 2)
+    print(json.dumps(results, indent=1, default=str))
+    print(f"[{status}] {name} ({wall:.1f}s)", flush=True)
+    if args.json:
+        payload = {"status": "pass" if status == "PASS" else "fail",
+                   "benchmarks": {name: {"status": status, "wall_s": wall,
+                                         "results": results}},
+                   "total_wall_s": wall,
+                   "failures": int(status != "PASS"),
+                   "completed": True}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"wrote {args.json}")
+    raise SystemExit(0 if status == "PASS" else 1)

@@ -25,11 +25,11 @@ import sys
 import time
 import traceback
 
-from . import (engine_dequeue, engine_xval, fig09_command_schedule,
-               fig10_ca_pins, fig12_tpot, fig13_lbr, fig14_energy,
-               full_cube, hybrid_xval, policy_sweep, queue_depth,
-               refresh_stall, serve_trace, sparse_overfetch,
-               tab_mc_complexity, vba_design_space)
+from . import (cluster_sweep, engine_dequeue, engine_xval,
+               fig09_command_schedule, fig10_ca_pins, fig12_tpot,
+               fig13_lbr, fig14_energy, full_cube, hybrid_xval,
+               policy_sweep, queue_depth, refresh_stall, serve_trace,
+               sparse_overfetch, tab_mc_complexity, vba_design_space)
 
 ALL = [
     ("fig09_command_schedule", fig09_command_schedule),
@@ -48,6 +48,7 @@ ALL = [
     ("hybrid_xval", hybrid_xval),
     ("full_cube", full_cube),
     ("serve_trace", serve_trace),
+    ("cluster_sweep", cluster_sweep),
 ]
 
 

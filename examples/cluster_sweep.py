@@ -1,0 +1,54 @@
+"""Fleet-scale serving demo: N replicas behind a router, HBM4 vs RoMe.
+
+    PYTHONPATH=src python examples/cluster_sweep.py
+
+One command, one table: a seeded bursty request stream is routed across
+a small fleet of replica cubes (each a continuous batcher + row-paged
+KV pool + the shared weight slice), every replica's decode steps are
+priced in batched hybrid-mode SystemSim calls, and the folded timelines
+print fleet goodput and tail latencies per memory system and router.
+The full sweep with reproduction bands and the million-request scale
+cell lives in benchmarks/cluster_sweep.py.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.serve.cluster import ClusterSim
+
+CELLS = {"hbm4_frfcfs": 8, "rome_qd2": 9}   # equal-pin channel widths
+ROUTERS = ("round_robin", "least_kv")
+N_REPLICAS = 4
+N_REQUESTS = 400
+OFFERED_RPS = 4e5
+
+
+def main() -> int:
+    goodput = {}
+    for policy, nch in CELLS.items():
+        for router in ROUTERS:
+            cs = ClusterSim(policy=policy, n_channels=nch, router=router,
+                            n_replicas=N_REPLICAS, n_requests=N_REQUESTS,
+                            rate_rps=OFFERED_RPS, kind="bursty",
+                            burst_size=8, seed=0, scale=1.0,
+                            sim_mode="hybrid", length_scale=1 / 64,
+                            n_slots=8)
+            r = cs.run()
+            s = r.summary()
+            goodput[(policy, router)] = s["goodput_rps"]
+            print(f"[{policy} x {nch}ch | {router:>12}] "
+                  f"{s['completed']}/{s['n_requests']} done in "
+                  f"{s['n_steps']} steps, goodput {s['goodput_rps']:,.0f} "
+                  f"rps, TTFT p99 {s['ttft_p99_ns']:,.0f} ns, "
+                  f"TPOT p99 {s['tpot_p99_ns']:,.0f} ns "
+                  f"(load share max {s['max_replica_share']:.2f}, "
+                  f"pricer hits {s.get('pricer_hit_rate', 0):.0%})")
+    for router in ROUTERS:
+        h = goodput[("hbm4_frfcfs", router)]
+        m = goodput[("rome_qd2", router)]
+        print(f"fleet goodput RoMe/HBM4 under {router}: {m / h:.3f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,66 @@
+"""Persistent process-pool for cycle-path channel simulation.
+
+``SystemSim.run``/``run_steps`` used to construct (and tear down) a
+fresh ``ProcessPoolExecutor`` on every call. With spawn workers — the
+only safe start method here, because the caller's process usually has
+JAX's thread pool alive and a fork would risk deadlock — that meant one
+full interpreter start-up per call: tens to hundreds of milliseconds of
+pure churn, paid once per decode step in a replay and once per replica
+round in a fleet sweep. This module hoists the pool to process scope:
+one long-lived spawn pool, grown on demand, shared by every SystemSim
+in the process and shut down at interpreter exit.
+
+Correctness is unaffected: channels share no simulated state, so which
+pool (or how old a pool) runs them cannot change results — the serial
+path is bit-identical either way (asserted in tests/test_hybrid.py).
+"""
+from __future__ import annotations
+
+import atexit
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor
+
+_pool: ProcessPoolExecutor | None = None
+_pool_workers: int = 0
+
+
+def get_pool(workers: int) -> ProcessPoolExecutor:
+    """The shared spawn pool, sized for at least ``workers`` workers.
+
+    The pool persists across calls and callers; asking for more workers
+    than the current pool has replaces it with a larger one (existing
+    submitted work is drained first). Asking for fewer reuses the
+    existing pool — an oversized pool is idle processes, not wrong
+    results.
+    """
+    global _pool, _pool_workers
+    if workers < 1:
+        raise ValueError(f"workers must be >= 1, got {workers}")
+    if _pool is None or _pool_workers < workers:
+        if _pool is not None:
+            _pool.shutdown(wait=True)
+        _pool = ProcessPoolExecutor(
+            max_workers=workers,
+            mp_context=multiprocessing.get_context("spawn"))
+        _pool_workers = workers
+    return _pool
+
+
+def pool_workers() -> int:
+    """Current pool size (0 when no pool has been created)."""
+    return _pool_workers
+
+
+def shutdown_pool() -> None:
+    """Tear the shared pool down (tests; atexit). Safe to call twice —
+    the next :func:`get_pool` simply builds a fresh pool."""
+    global _pool, _pool_workers
+    if _pool is not None:
+        _pool.shutdown(wait=True)
+        _pool = None
+        _pool_workers = 0
+
+
+atexit.register(shutdown_pool)
+
+__all__ = ["get_pool", "pool_workers", "shutdown_pool"]

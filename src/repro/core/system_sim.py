@@ -34,14 +34,13 @@ see its docstring for why that is the right contract), parallel over
 from __future__ import annotations
 
 import inspect
-import multiprocessing
-from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from ..workloads.stream import ExtentRecord, ExtentStream
 from .address_map import AddressMap, make_address_map
+from .pool import get_pool
 from .sched import SimResult, Txn, make_channel_sim
 from .sched.channels import CHANNEL_SIM_KINDS
 from .sched.traces import hbm4_unit_location, rome_unit_location
@@ -162,6 +161,10 @@ class SystemSim:
         self.pressure_threshold = pressure_threshold
         self._eff = None               # lazy ChannelEfficiency cache
         self._qparams = None           # lazy QueueWindowParams cache
+        #: optional :class:`repro.core.queue_model.StepPricer` — when
+        #: attached, every feature extraction goes through its signature
+        #: memo cache (see :meth:`attach_pricer`).
+        self.pricer = None
         self.cfg = cfg
         self.is_rome = cfg.ag_mc_bytes >= cfg.row_bytes
         if channel_kind is not None:
@@ -295,12 +298,36 @@ class SystemSim:
             self._qparams = queue_window_params(name)
         return self._qparams
 
+    def attach_pricer(self, maxsize: int = 65536, recheck_every: int = 64):
+        """Create (or return) this sim's :class:`~repro.core.queue_model
+        .StepPricer`: a bounded LRU over step-pricing features keyed on
+        an exact stream-shape signature, with sampled hit re-pricing as
+        a correctness guard. Decode steps from continuous batching are
+        highly repetitive, so the fleet paths attach one pricer per
+        cluster and skip re-pricing the repeats."""
+        if self.pricer is None:
+            from .analytic import calibrate
+            from .queue_model import StepPricer
+            if self._eff is None:
+                self._eff = calibrate(self.cfg)
+            self.pricer = StepPricer(self.cfg, self.amap,
+                                     self._queue_params(), eff=self._eff,
+                                     maxsize=maxsize,
+                                     recheck_every=recheck_every)
+        return self.pricer
+
     def _features(self, stream: ExtentStream) -> dict:
+        return self._features_many([stream])[0]
+
+    def _features_many(self, streams) -> "list[dict]":
+        if self.pricer is not None:
+            return self.pricer.features_many(streams)
         from .analytic import calibrate
-        from .queue_model import stream_features
+        from .queue_model import stream_features_many
         if self._eff is None:
             self._eff = calibrate(self.cfg)
-        return stream_features(stream, self.cfg, self.amap, eff=self._eff)
+        return stream_features_many(streams, self.cfg, self.amap,
+                                    eff=self._eff)
 
     def _pressure(self, feats: dict) -> float:
         floor = max(feats["base_ns"], feats["span_ns"])
@@ -354,26 +381,44 @@ class SystemSim:
 
     # -- run ---------------------------------------------------------------
 
-    def run(self, stream: ExtentStream, workers: int = 1) -> SystemResult:
+    def run(self, stream: ExtentStream, workers: int = 1,
+            start_ns: float | None = None) -> SystemResult:
         """Simulate or price a timed extent stream on all loaded
         channels; idle channels cost nothing. The pricing engine follows
         this sim's ``mode``: ``"cycle"`` always runs the event loops,
         ``"analytic"`` always uses the queue-window model, ``"hybrid"``
         classifies by modeled queue pressure (see the class docstring).
-        ``workers > 1`` simulates cycle-path channels in a process pool
-        (channels share no modeled resource, so serial and parallel runs
-        are identical — asserted in tests/test_core_memory); in-process,
-        channels advance in lockstep via the vectorized driver, which is
+        ``workers > 1`` simulates cycle-path channels in the shared
+        persistent process pool (:mod:`repro.core.pool`; channels share
+        no modeled resource, so serial and parallel runs are identical —
+        asserted in tests/test_core_memory); in-process, channels
+        advance in lockstep via the vectorized driver, which is
         bit-identical to per-channel loops. Returns the system-level
-        :class:`SystemResult`, stamped with the path taken."""
+        :class:`SystemResult`, stamped with the path taken.
+
+        ``start_ns`` rebases the stream's arrivals to that clock value
+        (equivalent to ``run(stream.shifted(-start_ns))``) — but
+        *lazily*: every queue-model feature is shift-invariant, so an
+        analytically priced run never materializes the shifted copy.
+        That is the fleet fast path: a replay engine passes its clock
+        instead of shifting GB-scale step streams it will never cycle-
+        simulate."""
         if self.mode != "cycle":
             feats = self._features(stream)
             pressure = self._pressure(feats)
             if self.mode == "analytic" or not self._use_cycle(feats,
                                                               pressure):
                 return self._analytic_result(feats, pressure)
-            return self._run_cycle(stream, workers, pressure=pressure)
-        return self._run_cycle(stream, workers)
+            return self._run_cycle(self._rebase(stream, start_ns), workers,
+                                   pressure=pressure)
+        return self._run_cycle(self._rebase(stream, start_ns), workers)
+
+    @staticmethod
+    def _rebase(stream: ExtentStream,
+                start_ns: float | None) -> ExtentStream:
+        if start_ns is None or not start_ns:
+            return stream
+        return stream.shifted(-start_ns)
 
     def _run_cycle(self, stream: ExtentStream, workers: int = 1,
                    pressure: float = 0.0) -> SystemResult:
@@ -383,15 +428,14 @@ class SystemSim:
         kind, kwargs = self._sim_spec()
         if workers > 1 and len(items) > 1:
             # Spawn, not fork: the caller's process often has JAX's thread
-            # pool alive (fork would risk deadlock), and the worker import
-            # chain is numpy-only so fresh interpreters stay cheap.
-            with ProcessPoolExecutor(
-                    max_workers=min(workers, len(items)),
-                    mp_context=multiprocessing.get_context("spawn")) as pool:
-                futures = [(c, pool.submit(_run_channel, kind, kwargs, txns))
-                           for c, txns in items]
-                for c, fut in futures:
-                    results[c] = fut.result()
+            # pool alive (fork would risk deadlock). The pool is the
+            # process-wide persistent one — interpreter start-up is paid
+            # once per process, not once per call.
+            pool = get_pool(workers)
+            futures = [(c, pool.submit(_run_channel, kind, kwargs, txns))
+                       for c, txns in items]
+            for c, fut in futures:
+                results[c] = fut.result()
         elif items:
             sims = run_channels(kind, kwargs, [txns for _, txns in items])
             results = {c: r for (c, _), r in zip(items, sims)}
@@ -451,17 +495,16 @@ class SystemSim:
             raise ValueError(
                 f"starts_ns has {len(starts_ns)} entries for "
                 f"{len(streams)} streams")
-        rebased: list[ExtentStream] = []
-        for i, s in enumerate(streams):
-            t0 = (starts_ns[i] if starts_ns is not None
-                  else min((r.arrival_ns for r in s), default=0.0))
-            rebased.append(s.shifted(-t0) if t0 else s)
 
-        out: list[SystemResult | None] = [None] * len(rebased)
+        out: list[SystemResult | None] = [None] * len(streams)
         cycle_steps: list[tuple[int, float]] = []    # (step, pressure)
         if self.mode != "cycle":
-            for i, s in enumerate(rebased):
-                feats = self._features(s)
+            # Classification is batched (one vectorized census over every
+            # step's records) and runs on the *unshifted* streams — all
+            # queue-model features are shift-invariant, so analytically
+            # priced steps never materialize a rebased copy.
+            feats_all = self._features_many(streams)
+            for i, feats in enumerate(feats_all):
                 pressure = self._pressure(feats)
                 if self.mode == "analytic" or not self._use_cycle(feats,
                                                                   pressure):
@@ -469,9 +512,15 @@ class SystemSim:
                 else:
                     cycle_steps.append((i, pressure))
         else:
-            cycle_steps = [(i, 0.0) for i in range(len(rebased))]
+            cycle_steps = [(i, 0.0) for i in range(len(streams))]
 
-        prepared = {i: sorted(self.decompose(rebased[i]).items())
+        def _cycle_stream(i: int) -> ExtentStream:
+            s = streams[i]
+            t0 = (starts_ns[i] if starts_ns is not None
+                  else min((r.arrival_ns for r in s), default=0.0))
+            return s.shifted(-t0) if t0 else s
+
+        prepared = {i: sorted(self.decompose(_cycle_stream(i)).items())
                     for i, _ in cycle_steps}
         all_results: dict[int, dict[int, SimResult]] = {
             i: {} for i in prepared}
@@ -479,14 +528,12 @@ class SystemSim:
                 for c, txns in items]
         kind, kwargs = self._sim_spec()
         if workers > 1 and len(flat) > 1:
-            with ProcessPoolExecutor(
-                    max_workers=min(workers, len(flat)),
-                    mp_context=multiprocessing.get_context("spawn")) as pool:
-                futures = [(i, c, pool.submit(_run_channel, kind, kwargs,
-                                              txns))
-                           for i, c, txns in flat]
-                for i, c, fut in futures:
-                    all_results[i][c] = fut.result()
+            pool = get_pool(workers)
+            futures = [(i, c, pool.submit(_run_channel, kind, kwargs,
+                                          txns))
+                       for i, c, txns in flat]
+            for i, c, fut in futures:
+                all_results[i][c] = fut.result()
         elif flat:
             sims = run_channels(kind, kwargs, [txns for _, _, txns in flat])
             for (i, c, _), r in zip(flat, sims):

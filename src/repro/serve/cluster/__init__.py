@@ -1,0 +1,12 @@
+"""Fleet-scale serving simulation: N replica cubes behind a router."""
+from .router import (ROUTERS, LeastKVRouter, RoundRobinRouter, Router,
+                     SessionAffinityRouter, SLOAwareRouter, make_router)
+from .sim import (REJECTED, UNROUTED, ClusterResult, ClusterSim, Replica,
+                  RoutedQueue)
+
+__all__ = [
+    "ClusterSim", "ClusterResult", "Replica", "RoutedQueue",
+    "UNROUTED", "REJECTED",
+    "Router", "RoundRobinRouter", "LeastKVRouter", "SessionAffinityRouter",
+    "SLOAwareRouter", "ROUTERS", "make_router",
+]

@@ -1,0 +1,131 @@
+"""Pluggable request placement for :class:`~repro.serve.cluster.ClusterSim`.
+
+A router sees one :class:`~repro.serve.replay.arrivals.RequestSpec` at a
+time — in global (arrival, rid) order — plus the live replica states,
+and returns the replica index to enqueue it on (or ``None`` to reject
+it at admission). The registry mirrors the scheduler-policy registry's
+shape: small named strategy classes behind a factory, so sweeps treat
+the placement policy as one more axis.
+
+Placement policies:
+
+``round_robin``
+    Stateless rotation — the baseline every serving stack ships.
+``least_kv``
+    Least outstanding worst-case KV pages (committed + routed-but-not-
+    admitted): the pool-aware balancer, which tracks the real admission
+    currency of :class:`~repro.serve.replay.recorder.ServeTraceRecorder`.
+``session_affinity``
+    Sticky hashing of a session key onto replicas. Sessions are a
+    stand-in keyed by ``rid mod n_sessions`` (the request generator has
+    no user identity beyond the closed-loop user count, for which
+    ``n_sessions = n_users`` makes the mapping exact at steady state):
+    it models the real-world sticky-routing regime where one user's
+    requests always land where their KV/prefix state lives — and shows
+    its cost, hot replicas that the load-aware policies would shed.
+``slo_aware``
+    Deadline-aware admission over the least-loaded replica: estimates
+    the queue wait from each replica's clock lag, backlog depth, and
+    its EMA step duration, places on the minimum, and *rejects* the
+    request when even that minimum violates the TTFT deadline — turning
+    overload into fast-failure instead of unbounded queueing (goodput,
+    not throughput).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Router:
+    """Base placement policy. Subclasses override :meth:`place`."""
+
+    name = "base"
+
+    def place(self, spec, replicas, now_ns: float):
+        """Replica index for ``spec``, or None to reject at admission."""
+        raise NotImplementedError
+
+    @staticmethod
+    def est_wait_ns(replica, now_ns: float) -> float:
+        """Estimated admission wait on one replica: how far its clock
+        already ran ahead of the arrival, plus one EMA step duration per
+        backlog wave (``ceil(backlog / slots)`` admission rounds)."""
+        backlog = replica.backlog()
+        waves = -(-backlog // replica.n_slots) if backlog else 0
+        return (max(replica.clock - now_ns, 0.0)
+                + (waves + 1) * replica.ema_step_ns)
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def place(self, spec, replicas, now_ns):
+        i = self._i % len(replicas)
+        self._i += 1
+        return i
+
+
+class LeastKVRouter(Router):
+    name = "least_kv"
+
+    def place(self, spec, replicas, now_ns):
+        return min(range(len(replicas)),
+                   key=lambda i: (replicas[i].outstanding_pages, i))
+
+
+class SessionAffinityRouter(Router):
+    name = "session_affinity"
+
+    #: Knuth multiplicative hash constant — spreads consecutive session
+    #: ids across replicas instead of striding them.
+    _MULT = 2654435761
+
+    def __init__(self, n_sessions: int = 64):
+        if n_sessions < 1:
+            raise ValueError(f"n_sessions must be >= 1, got {n_sessions}")
+        self.n_sessions = n_sessions
+
+    def place(self, spec, replicas, now_ns):
+        session = spec.rid % self.n_sessions
+        return (session * self._MULT) % (1 << 32) % len(replicas)
+
+
+class SLOAwareRouter(Router):
+    name = "slo_aware"
+
+    def __init__(self, ttft_slo_ns: float = float("inf")):
+        self.ttft_slo_ns = ttft_slo_ns
+
+    def place(self, spec, replicas, now_ns):
+        waits = [self.est_wait_ns(r, now_ns) for r in replicas]
+        best = int(np.argmin(waits))
+        if waits[best] > self.ttft_slo_ns:
+            return None
+        return best
+
+
+ROUTERS = {
+    "round_robin": RoundRobinRouter,
+    "least_kv": LeastKVRouter,
+    "session_affinity": SessionAffinityRouter,
+    "slo_aware": SLOAwareRouter,
+}
+
+
+def make_router(name, **kwargs) -> Router:
+    """Instantiate a registered router by name (a :class:`Router`
+    instance passes through unchanged)."""
+    if isinstance(name, Router):
+        return name
+    if name not in ROUTERS:
+        raise ValueError(
+            f"unknown router {name!r}; registered: {sorted(ROUTERS)}")
+    return ROUTERS[name](**kwargs)
+
+
+__all__ = ["Router", "RoundRobinRouter", "LeastKVRouter",
+           "SessionAffinityRouter", "SLOAwareRouter", "ROUTERS",
+           "make_router"]

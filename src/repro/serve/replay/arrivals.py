@@ -27,6 +27,7 @@ the same request sequence.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass
 
 import numpy as np
@@ -77,7 +78,15 @@ class ArrivalProcess:
         self.think_ns = think_ns
         self._rng = np.random.default_rng(seed)
         self._issued = 0
+        # Sorted by (arrival_ns, rid); [_next:] is the undelivered tail.
+        # Construction appends in that order by design (poisson/bursty
+        # emit non-decreasing times with increasing rids; the closed
+        # seeds all arrive at t=0), and on_complete insorts — so due()
+        # is a bisect + slice, O(log n) per call instead of rebuilding
+        # the whole list (the difference between an O(n²) and an O(n
+        # log n) million-request sweep).
         self._pending: list[RequestSpec] = []
+        self._next = 0
         if kind == "poisson":
             t = 0.0
             for _ in range(n_requests):
@@ -117,21 +126,30 @@ class ArrivalProcess:
 
     def due(self, now_ns: float) -> list[RequestSpec]:
         """Pop every spec with ``arrival_ns <= now_ns``, in arrival order
-        (ties broken by rid). The explicit sort matters for the closed
-        loop, where :meth:`on_complete` appends in *completion* order
-        and think times can reorder arrivals."""
-        out = [s for s in self._pending if s.arrival_ns <= now_ns]
-        if out:
-            self._pending = [s for s in self._pending
-                             if s.arrival_ns > now_ns]
-            out.sort(key=lambda s: (s.arrival_ns, s.rid))
+        (ties broken by rid). The pending list is kept sorted by
+        (arrival, rid) — :meth:`on_complete` insorts, and rids are
+        issued in increasing order so equal-arrival closed-loop
+        re-submissions land after their peers — making this a bisect +
+        slice instead of a full-list rebuild."""
+        p, lo = self._pending, self._next
+        hi = bisect.bisect_right(p, now_ns, lo=lo,
+                                 key=lambda s: s.arrival_ns)
+        if hi == lo:
+            return []
+        out = p[lo:hi]
+        self._next = hi
+        # Compact the delivered prefix once it dominates the list, so a
+        # million delivered specs don't sit pinned behind the pointer.
+        if self._next > 4096 and self._next * 2 > len(p):
+            del p[:self._next]
+            self._next = 0
         return out
 
     def next_arrival_ns(self) -> float | None:
         """Earliest not-yet-delivered arrival, or None when drained."""
-        if not self._pending:
+        if self._next >= len(self._pending):
             return None
-        return min(s.arrival_ns for s in self._pending)
+        return self._pending[self._next].arrival_ns
 
     def on_complete(self, now_ns: float) -> None:
         """Completion callback: closed-loop users submit their next
@@ -140,12 +158,14 @@ class ArrivalProcess:
             return
         dt = (self._rng.exponential(self.think_ns) if self.think_ns
               else 0.0)
-        self._pending.append(self._spec(now_ns + dt))
+        bisect.insort(self._pending, self._spec(now_ns + dt),
+                      lo=self._next, key=lambda s: s.arrival_ns)
 
     def exhausted(self) -> bool:
         """True once every request this process will ever emit is out."""
-        return not self._pending and (self.kind != "closed"
-                                      or self._issued >= self.n_requests)
+        return (self._next >= len(self._pending)
+                and (self.kind != "closed"
+                     or self._issued >= self.n_requests))
 
 
 __all__ = ["ArrivalProcess", "RequestSpec", "KINDS"]

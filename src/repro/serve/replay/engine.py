@@ -173,7 +173,10 @@ class ReplayEngine:
                     break              # nothing queued, nothing to come
                 now = max(now, nxt)
                 continue
-            res = self.system.run(st.stream.shifted(-now))
+            # start_ns rebases lazily: analytic steps are priced on the
+            # recorded stream itself (features are shift-invariant), so
+            # the hybrid fast path never copies GB-scale step streams.
+            res = self.system.run(st.stream, start_ns=now)
             dur = res.total_ns + self.overhead_ns
             end = now + dur
             for rid in st.admitted:

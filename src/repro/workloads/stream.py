@@ -67,7 +67,7 @@ class ExtentStream:
     :meth:`sorted_by_arrival` restore that invariant after merging.
     """
 
-    __slots__ = ("_records",)
+    __slots__ = ("_records", "_memo")
 
     def __init__(self, records: Iterable[ExtentRecord] = ()) -> None:
         recs = tuple(records)
@@ -75,6 +75,9 @@ class ExtentStream:
             if not isinstance(r, ExtentRecord):
                 raise TypeError(f"expected ExtentRecord, got {type(r)!r}")
         object.__setattr__(self, "_records", recs)
+        # Per-instance scratch for derived immutable views (numpy arrays,
+        # queue-model features). Never part of equality/hashing.
+        object.__setattr__(self, "_memo", {})
 
     # -- sequence protocol ---------------------------------------------------
 
@@ -151,6 +154,39 @@ class ExtentStream:
             raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
         return [(r.addr, r.nbytes) for r in self._records
                 if kind is None or r.kind == kind]
+
+    @property
+    def memo(self) -> dict:
+        """Per-instance cache for derived views keyed by the deriver.
+
+        Streams are immutable, so anything computed from the records
+        (feature censuses, pricing signatures) stays valid for the
+        stream's lifetime. Excluded from ``__eq__``/``__hash__``.
+        """
+        return self._memo
+
+    def arrays(self):
+        """Columnar numpy view ``(addr, nbytes, is_write, arrival_ns)``
+        of the records, computed once per instance — the input format of
+        the vectorized censuses (:func:`repro.core.address_map
+        .extent_census`) and the batched queue-model pricer."""
+        cached = self._memo.get("arrays")
+        if cached is None:
+            import numpy as np
+            n = len(self._records)
+            addr = np.empty(n, np.int64)
+            nbytes = np.empty(n, np.int64)
+            is_write = np.empty(n, bool)
+            arrival = np.empty(n, np.float64)
+            for i, r in enumerate(self._records):
+                addr[i] = r.addr
+                nbytes[i] = r.nbytes
+                is_write[i] = r.kind == "write"
+                arrival[i] = r.arrival_ns
+            for a in (addr, nbytes, is_write, arrival):
+                a.setflags(write=False)
+            cached = self._memo["arrays"] = (addr, nbytes, is_write, arrival)
+        return cached
 
     # -- derivation ----------------------------------------------------------
 

@@ -1,0 +1,214 @@
+"""Fleet-scale ClusterSim: router conservation, KV page accounting across
+replicas, rejection semantics, and seeded bit-reproducibility.
+
+The conservation properties are the ones a fleet simulator can silently
+break while every single-replica test stays green: a request routed
+twice, a rejected request double-counted, or replica-level page
+reservations drifting from the recorder commitments they summarize.
+"""
+import numpy as np
+import pytest
+
+from _proptest import given, settings, strategies as st
+from repro.serve.cluster import (REJECTED, UNROUTED, ROUTERS, ClusterSim,
+                                 Router, make_router)
+
+FAST = dict(n_requests=20, rate_rps=2e5, scale=2 ** -12, sim_mode="hybrid",
+            n_channels=4, length_scale=1 / 32)
+
+
+def _run(router="round_robin", n_replicas=3, **kw):
+    params = dict(FAST, n_replicas=n_replicas, router=router, kind="poisson",
+                  seed=0)
+    params.update(kw)
+    cs = ClusterSim(**params)
+    return cs, cs.run()
+
+
+# ---------------------------------------------------------------------------
+# Router conservation: every issued request is placed exactly once
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12)
+@given(seed=st.integers(0, 1 << 16),
+       router=st.sampled_from(sorted(ROUTERS)),
+       kind=st.sampled_from(["poisson", "bursty", "closed"]))
+def test_router_conservation(seed, router, kind):
+    kw = {"n_users": 5, "think_ns": 1e4} if kind == "closed" else {}
+    cs, r = _run(router=router, kind=kind, seed=seed, **kw)
+    issued = r.arrival_ns >= 0
+    # Open-loop kinds issue every request; closed loops may stop short
+    # only if rejections burned the rid budget (none here: no SLO).
+    assert r.issued == cs.arrivals.n_requests
+    # Placed exactly once: every issued rid carries either one replica
+    # index or the rejected sentinel — never UNROUTED, never both.
+    placed = issued & (r.replica_of >= 0)
+    rejected = issued & (r.replica_of == REJECTED)
+    assert not (issued & (r.replica_of == UNROUTED)).any()
+    assert (placed | rejected).sum() == r.issued
+    # Per-replica placement counts sum back to the fleet total.
+    counts = np.bincount(r.replica_of[placed],
+                         minlength=len(cs.replicas))
+    assert np.array_equal(counts, r.requests_per_replica)
+    assert counts.sum() + rejected.sum() == r.issued
+    # Every placed request ran to completion (no SLO rejection here, and
+    # the loop only terminates drained); rejected ones never produced
+    # tokens.
+    assert (r.completed_ns[placed] >= 0).all()
+    assert (r.n_out[rejected] == 0).all()
+    assert (r.first_token_ns[rejected] < 0).all()
+
+
+# ---------------------------------------------------------------------------
+# KV page accounting: replica reservations == fleet-wide live demand
+# ---------------------------------------------------------------------------
+
+class _AuditingRouter(Router):
+    """least_kv placement + a fleet-wide page-conservation audit at every
+    routing decision (the instant replica state is consulted)."""
+
+    def __init__(self):
+        self.inner = make_router("least_kv")
+        self.audits = 0
+
+    def place(self, spec, replicas, now_ns):
+        fleet_outstanding = 0
+        for rep in replicas:
+            rec = rep.rec
+            # Replica-level reservation is internally consistent...
+            assert rep.outstanding_pages == sum(rep._worst.values())
+            # ...and decomposes exactly into recorder-committed pages
+            # (admitted, live) plus the worst case of requests still
+            # waiting in the routed queue or the batcher queue.
+            committed = sum(rec._worst_pages.values())
+            assert rec._committed_pages == committed
+            waiting = sum(
+                rec.cache.pages_for(s.prompt_len + s.max_new_tokens)
+                for s in rep.queue._q[rep.queue._next:])
+            waiting += sum(
+                rec.cache.pages_for(q.prompt_len + q.max_new_tokens)
+                for q in rec.batcher.queue)
+            assert rep.outstanding_pages == committed + waiting, (
+                rep.index, rep.outstanding_pages, committed, waiting)
+            # Committed pages never overrun the replica's pool.
+            assert committed <= rec.cache.n_pages
+            fleet_outstanding += rep.outstanding_pages
+        self.fleet_outstanding = fleet_outstanding
+        self.audits += 1
+        return self.inner.place(spec, replicas, now_ns)
+
+
+def test_kv_page_accounting_sums_to_fleet_total():
+    router = _AuditingRouter()
+    cs, r = _run(router=router, kind="bursty", burst_size=6, seed=3)
+    assert router.audits == r.issued
+    # Drained fleet holds no reservations anywhere.
+    for rep in cs.replicas:
+        assert rep.outstanding_pages == 0
+        assert rep.rec._committed_pages == 0
+        assert not rep._worst
+        assert not rep.rec._worst_pages
+
+
+# ---------------------------------------------------------------------------
+# Determinism
+# ---------------------------------------------------------------------------
+
+def test_seeded_sweep_bit_reproducible_same_workers():
+    _, a = _run(router="least_kv", kind="bursty", burst_size=5, seed=11)
+    _, b = _run(router="least_kv", kind="bursty", burst_size=5, seed=11)
+    for f in ("arrival_ns", "admitted_ns", "first_token_ns", "completed_ns",
+              "n_out", "replica_of"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.makespan_ns == b.makespan_ns
+    assert a.steps_total == b.steps_total
+
+
+def test_seeded_sweep_bit_reproducible_across_workers():
+    """workers only parallelizes cycle-path channel sims, which are
+    bit-identical to serial — so the worker count can never change a
+    fleet result."""
+    kw = dict(router="round_robin", kind="bursty", burst_size=5, seed=2,
+              n_requests=8, scale=2 ** -15, n_channels=2,
+              sim_mode="cycle")
+    _, a = _run(workers=1, **kw)
+    _, b = _run(workers=2, **kw)
+    for f in ("arrival_ns", "admitted_ns", "first_token_ns", "completed_ns",
+              "n_out", "replica_of"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.makespan_ns == b.makespan_ns
+
+
+# ---------------------------------------------------------------------------
+# Router semantics
+# ---------------------------------------------------------------------------
+
+def test_slo_rejection_semantics():
+    """Overload + a tight TTFT deadline turns into admission rejections,
+    not unbounded queueing — and the accounting stays conserved."""
+    router = make_router("slo_aware", ttft_slo_ns=500.0)
+    cs, r = _run(router=router, kind="bursty", burst_size=10,
+                 rate_rps=5e5, n_requests=40, n_replicas=2, seed=0)
+    assert r.rejected > 0
+    assert r.completed + r.rejected == r.issued
+    issued = r.arrival_ns >= 0
+    assert (((r.replica_of == REJECTED) == (r.completed_ns < 0))
+            [issued]).all()
+
+
+def test_slo_rejection_closed_loop_terminates():
+    """Closed-loop users whose requests are rejected still consume the
+    rid budget (fast error + think time), so an over-tight SLO cannot
+    deadlock the fleet loop."""
+    router = make_router("slo_aware", ttft_slo_ns=0.0)
+    cs, r = _run(router=router, kind="closed", n_users=4, think_ns=1e3,
+                 n_requests=16, seed=5)
+    assert r.issued == 16
+    assert r.completed + r.rejected == 16
+
+
+def test_session_affinity_is_sticky():
+    router = make_router("session_affinity", n_sessions=8)
+    _, r = _run(router=router, kind="poisson", n_requests=32, seed=9)
+    placed = np.flatnonzero(r.replica_of >= 0)
+    by_session = {}
+    for rid in placed:
+        by_session.setdefault(rid % 8, set()).add(int(r.replica_of[rid]))
+    for session, reps in by_session.items():
+        assert len(reps) == 1, (session, reps)
+
+
+def test_round_robin_balances_counts():
+    _, r = _run(router="round_robin", n_replicas=4, n_requests=32, seed=1)
+    counts = r.requests_per_replica
+    assert counts.max() - counts.min() <= 1, counts.tolist()
+
+
+def test_more_replicas_shorter_makespan():
+    kw = dict(kind="bursty", burst_size=6, rate_rps=4e5, n_requests=24,
+              seed=4)
+    _, one = _run(n_replicas=1, **kw)
+    _, four = _run(n_replicas=4, **kw)
+    assert one.completed == four.completed == 24
+    assert four.makespan_ns < one.makespan_ns
+
+
+# ---------------------------------------------------------------------------
+# Pricer integration
+# ---------------------------------------------------------------------------
+
+def test_pricer_stats_stamped_in_result():
+    _, r = _run(seed=6)
+    st_ = r.pricer_stats
+    assert st_["hits"] + st_["misses"] == r.steps_total
+    assert 0.0 <= st_["hit_rate"] <= 1.0
+    _, bare = _run(seed=6, attach_pricer=False)
+    assert bare.pricer_stats == {}
+    # The signature cache changes wall-clock, never results.
+    assert bare.makespan_ns == r.makespan_ns
+    assert bare.steps_total == r.steps_total
+
+
+def test_unknown_router_rejected():
+    with pytest.raises(ValueError, match="unknown router"):
+        make_router("nope")

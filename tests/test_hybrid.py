@@ -201,3 +201,89 @@ def test_analytic_features_match_cycle_byte_accounting():
     feats = stream_features(stream, cfg, sim.amap)
     ref = sim.run(stream)
     assert int(feats["mc_channel_bytes"].sum()) == ref.bytes_moved
+
+
+# ---------------------------------------------------------------------------
+# Persistent pool + step-pricing cache
+# ---------------------------------------------------------------------------
+
+def test_persistent_pool_is_reused_and_parallel_bit_identical():
+    """get_pool hands back one engine-lifetime pool (no per-call spawn
+    churn), and parallel channel sims are bit-identical to serial —
+    channels share no state, so the split cannot change results."""
+    from repro.core.pool import get_pool, pool_workers
+
+    pool = get_pool(2)
+    assert get_pool(2) is pool
+    assert get_pool(1) is pool          # smaller ask reuses the pool
+    assert pool_workers() >= 2
+
+    spec = policy_spec("rome_qd2")
+    cfg = rome_config()
+    rng = np.random.default_rng(0)
+    sim = spec.system_sim(n_channels=N_CHANNELS, mode="cycle")
+    stream = _random_mixed_stream(cfg, rng)
+    serial = sim.run(stream, workers=1)
+    parallel = sim.run(stream, workers=2)
+    assert get_pool(2) is pool          # still the same pool afterwards
+    assert parallel.total_ns == serial.total_ns
+    assert parallel.bytes_moved == serial.bytes_moved
+    assert np.array_equal(parallel.channel_finish_ns,
+                          serial.channel_finish_ns)
+    # Batched steps through the same pool, same contract.
+    streams = [_random_mixed_stream(cfg, rng) for _ in range(3)]
+    s1 = sim.run_steps(streams, workers=1)
+    s2 = sim.run_steps(streams, workers=2)
+    for a, b in zip(s1, s2):
+        assert a.total_ns == b.total_ns
+        assert a.bytes_moved == b.bytes_moved
+
+
+def test_step_pricer_cache_hits_are_exact():
+    """A signature hit returns features priced identically to a fresh
+    computation: the signature (kind, relative arrival, stripe offset,
+    channel, size) determines every census input, so caching is exact,
+    not approximate."""
+    from repro.core.queue_model import StepPricer, queue_window_params
+
+    spec = policy_spec("rome_qd2")
+    cfg = rome_config()
+    sim = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid")
+    rng = np.random.default_rng(1)
+    stream = _random_mixed_stream(cfg, rng)
+    # A shifted copy has a different identity and absolute arrivals but
+    # the same signature — the cache must hit and the hit must price
+    # identically to computing from scratch.
+    shifted = stream.shifted(12_345.0)
+    pricer = StepPricer(cfg, sim.amap, queue_window_params("rome_qd2"),
+                        recheck_every=1)
+    assert pricer.signature(stream) == pricer.signature(shifted)
+    a = pricer.features(stream)
+    assert pricer.stats["misses"] == 1
+    b = pricer.features(shifted)          # hit + forced recheck
+    assert pricer.stats["hits"] == 1
+    assert pricer.stats["rechecks"] == 1  # recheck passed (no raise)
+    for key in ("base_ns", "txns_gating", "ext_gating", "total_txns"):
+        assert a[key] == b[key], key
+    fresh = stream_features(stream, cfg, sim.amap)
+    assert a["base_ns"] == fresh["base_ns"]
+    assert np.array_equal(a["mc_channel_bytes"], fresh["mc_channel_bytes"])
+
+
+def test_attached_pricer_does_not_change_run_steps_results():
+    spec = policy_spec("rome_qd2")
+    cfg = rome_config()
+    rng = np.random.default_rng(2)
+    streams = [_random_mixed_stream(cfg, rng) for _ in range(4)]
+    plain = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid")
+    cached = spec.system_sim(n_channels=N_CHANNELS, mode="hybrid")
+    cached.attach_pricer(recheck_every=3)
+    r1 = plain.run_steps(streams)
+    r2 = cached.run_steps(streams)
+    # Second pass over shifted copies of the same steps: every lookup
+    # hits the signature cache, and results stay identical.
+    r3 = cached.run_steps([s.shifted(999.0) for s in streams])
+    for a, b, c in zip(r1, r2, r3):
+        assert a.total_ns == b.total_ns == c.total_ns
+        assert a.mode == b.mode == c.mode
+    assert cached.pricer.stats["hits"] >= len(streams)
