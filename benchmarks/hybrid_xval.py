@@ -140,10 +140,14 @@ def _band_cell(spec, streams):
 def _bit_identity() -> dict:
     """Scalar vs vectorized on the facade suite — grouped by simulator
     configuration so the lockstep driver advances several live channels
-    together (the production shape), then compared trace by trace."""
+    together (the production shape), then compared trace by trace. Both
+    paths run with command-trace emission on, so identity is asserted on
+    the *full command stream* (every ACT/RD/WR/PRE/REF with its bank,
+    SID and timestamp), not just finish times and command counts."""
     suite = facade_trace_suite()
     groups: dict = {}
     for label, kind, kwargs, txns in suite:
+        kwargs = dict(kwargs, emit_trace=True)
         groups.setdefault((kind, tuple(sorted(kwargs.items()))),
                           []).append((label, kwargs, txns))
     t0 = time.perf_counter()
@@ -153,6 +157,7 @@ def _bit_identity() -> dict:
     t_scalar = time.perf_counter() - t0
     t0 = time.perf_counter()
     vec = {}
+    n_commands = 0
     for (kind, _), members in groups.items():
         results = run_channels(kind, members[0][1],
                                [txns for _, _, txns in members])
@@ -166,7 +171,10 @@ def _bit_identity() -> dict:
         assert s.bytes_moved == v.bytes_moved, label
         assert s.cmd_counts == v.cmd_counts, (label, s.cmd_counts,
                                               v.cmd_counts)
+        assert s.trace == v.trace, (label, len(s.trace), len(v.trace))
+        n_commands += len(s.trace)
     return {"n_traces": len(scalar), "n_groups": len(groups),
+            "n_commands": n_commands,
             "scalar": {"wall_s": round(t_scalar, 3)},
             "vectorized": {"wall_s": round(t_vec, 3)}}
 

@@ -29,7 +29,8 @@ from . import (cluster_sweep, engine_dequeue, engine_xval,
                fig09_command_schedule, fig10_ca_pins, fig12_tpot,
                fig13_lbr, fig14_energy, full_cube, hybrid_xval,
                policy_sweep, queue_depth, refresh_stall, serve_trace,
-               sparse_overfetch, tab_mc_complexity, vba_design_space)
+               sparse_overfetch, tab_mc_complexity, timing_conformance,
+               vba_design_space)
 
 ALL = [
     ("fig09_command_schedule", fig09_command_schedule),
@@ -44,6 +45,7 @@ ALL = [
     ("fig14_energy", fig14_energy),
     ("refresh_stall", refresh_stall),
     ("sparse_overfetch", sparse_overfetch),
+    ("timing_conformance", timing_conformance),
     ("policy_sweep", policy_sweep),
     ("hybrid_xval", hybrid_xval),
     ("full_cube", full_cube),

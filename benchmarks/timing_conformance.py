@@ -1,0 +1,78 @@
+"""Timing-protocol conformance census (ISSUE: sanitizer over every
+registered scheduler policy).
+
+Every policy in ``repro.core.sched.registry`` replays its family's
+facade trace suite plus adversarial stressors with command-trace
+emission on, and the independent :mod:`repro.analysis.timing_checker`
+re-derives legality of the full command stream from the timing
+dataclasses alone (JEDEC Table V rules for the HBM4 policies, RoMe
+Table III row-command rules for the RoMe policies — see
+docs/timing_sanitizer.md).
+
+The benchmark asserts **zero violations** across every (policy, trace)
+cell; the committed baseline additionally pins the exact per-policy
+command census (``rel_tol`` 0), so a scheduler change that silently
+alters command streams — even a legal one — shows up in the
+bench_compare gate rather than only in downstream bandwidth drift.
+
+``--reduced`` sweeps one policy per distinct sim kind with shorter
+stressors (the PR-CI smoke); the nightly job runs the full 9-policy
+sweep. Both are gated against their own baseline
+(``timing_conformance[_reduced].json``).
+"""
+from __future__ import annotations
+
+from repro.analysis.conformance import conformance_report
+
+
+def run(reduced: bool = False) -> dict:
+    rep = conformance_report(reduced=reduced)
+    assert rep["n_commands"] > 0, "conformance sweep replayed no commands"
+    for name, pol in rep["policies"].items():
+        assert pol["clean"], (
+            f"{name}: {pol['total_violations']} timing violations "
+            f"{pol['violations']}"
+            + (f"; examples: {pol['examples'][:3]}"
+               if "examples" in pol else ""))
+    assert rep["clean"]
+    return rep
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import time
+    import traceback
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--reduced", action="store_true",
+                   help="one policy per sim kind, shorter stressors")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write a benchmarks.run-shaped payload to PATH "
+                        "(gateable by scripts/bench_compare.py)")
+    args = p.parse_args()
+    name = ("timing_conformance_reduced" if args.reduced
+            else "timing_conformance")
+    t0 = time.time()
+    try:
+        results = run(reduced=args.reduced)
+        status = "PASS"
+    except AssertionError as e:
+        results = {"error": str(e)}
+        status = "FAIL"
+    except Exception:
+        results = {"error": traceback.format_exc()[-800:]}
+        status = "ERROR"
+    wall = round(time.time() - t0, 2)
+    print(json.dumps(results, indent=1, default=str))
+    print(f"[{status}] {name} ({wall:.1f}s)", flush=True)
+    if args.json:
+        payload = {"status": "pass" if status == "PASS" else "fail",
+                   "benchmarks": {name: {"status": status, "wall_s": wall,
+                                         "results": results}},
+                   "total_wall_s": wall,
+                   "failures": int(status != "PASS"),
+                   "completed": True}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"wrote {args.json}")
+    raise SystemExit(0 if status == "PASS" else 1)

@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate (ROADMAP.md). Usage: scripts/check.sh [pytest args]
+# Tier-1 verification gate (ROADMAP.md): repo lints, then the test suite.
+# Usage: scripts/check.sh [pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/lint.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""Run the repo-invariant AST lints (repro.analysis.lints).
+
+Usage:
+    PYTHONPATH=src python scripts/lint.py [paths...]
+
+Defaults to the whole checked tree (src, benchmarks, scripts, tests).
+Exits 1 if any finding fires; prints ``path:line: [rule] message`` lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.lints import lint_paths  # noqa: E402
+
+DEFAULT_PATHS = ("src", "benchmarks", "scripts", "tests")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", help="files or directories "
+                    "(default: %s)" % " ".join(DEFAULT_PATHS))
+    args = ap.parse_args(argv)
+    paths = [Path(p) for p in (args.paths or
+                               [REPO / p for p in DEFAULT_PATHS])]
+    findings = lint_paths(p for p in paths if p.exists())
+    for f in findings:
+        try:
+            shown = f._replace(path=str(Path(f.path).relative_to(REPO)))
+        except ValueError:
+            shown = f
+        print(shown)
+    if findings:
+        print(f"\nlint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

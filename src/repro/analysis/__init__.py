@@ -1,0 +1,30 @@
+"""Static analysis of the repro itself: trace sanitizing + repo lints.
+
+Two independent verifiers live here, both deliberately *outside* the
+code they check:
+
+``timing_checker``
+    Replays a :class:`~repro.core.sched.CmdRecord` command trace against
+    a declarative JEDEC (HBM4) or Table III (RoMe) rule table. The
+    scheduler policies compute their own readiness clocks; every headline
+    number rests on that math, so the checker re-derives legality from
+    the timing dataclasses alone and reports per-rule violation counts.
+``conformance``
+    Runs every registered scheduler policy over the facade trace suite
+    plus adversarial stressors and aggregates checker reports — the
+    per-policy conformance census gated in CI.
+``lints``
+    AST-based repo-invariant lints (compat boundary, determinism,
+    mutable defaults, pool picklability) behind ``scripts/lint.py``.
+"""
+from .conformance import conformance_report, policy_conformance
+from .timing_checker import (CheckReport, HBM4TraceChecker, RoMeTraceChecker,
+                             TimingProtocolError, Violation, check_sim_result,
+                             checker_for_sim)
+
+__all__ = [
+    "CheckReport", "Violation", "TimingProtocolError",
+    "HBM4TraceChecker", "RoMeTraceChecker",
+    "checker_for_sim", "check_sim_result",
+    "conformance_report", "policy_conformance",
+]

@@ -1,0 +1,161 @@
+"""Per-policy timing-conformance sweep: every registered scheduling
+point replayed through the independent :mod:`.timing_checker`.
+
+Each policy runs (a) every facade-suite transaction trace of its family
+— the same 20-trace contract the scalar/vectorized bit-identity check
+uses — and (b) a set of adversarial stressors built to poke the rules a
+well-behaved stream never exercises: mixed read/write bank thrash
+(turnarounds + PRE/ACT churn), row-miss ACT pressure (tFAW/tRRD), cross-
+SID interleave (tCCDR), write-batch turnaround flips (tRTW/tWTR), sparse
+arrivals across many refresh periods (bounded postponement), and
+same-VBA chaining for RoMe (tRD_row/tWR_row).
+
+Everything is seeded and deterministic, so the aggregate census is
+byte-stable and gated as ``benchmarks/baselines/timing_conformance.json``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.sched import Txn, registered_policies
+from ..core.sched.registry import PolicySpec, policy_spec
+from ..core.sched.traces import facade_trace_suite
+from .timing_checker import CheckReport, check_sim_result
+
+#: Fast subset for the per-commit CI sanitizer pass: one spec per
+#: distinct sim kind (the queue-depth / refresh-knob variants share
+#:  their scheduling code with rome_qd2).
+REDUCED_POLICIES = ("hbm4_frfcfs", "hbm4_closed", "hbm4_writedrain",
+                    "hbm4_sidgroup", "rome_qd2")
+
+
+def _hbm4_stressors(n: int):
+    rng = np.random.default_rng(8)
+    out = []
+
+    txns = [Txn(i * 0.5, int(rng.integers(0, 128)), int(rng.integers(0, 8)),
+                col=int(rng.integers(0, 32)),
+                is_write=bool(rng.integers(0, 2)),
+                sid=int(rng.integers(0, 4)))
+            for i in range(n)]
+    out.append(("stress_rw_thrash", txns))
+
+    # Row-miss ACT pressure inside one PC: every access opens a new row
+    # on a rotating 4-bank set, so ACT spacing and the rolling tFAW
+    # window are the binding constraints.
+    txns = [Txn(i * 0.25, (i * 4) % 64, i, col=0, is_write=False)
+            for i in range(n)]
+    out.append(("stress_act_pressure", txns))
+
+    # Cross-SID interleave on shared banks (tCCDR + SID grouping).
+    txns = [Txn(i * 0.5, int(rng.integers(0, 64)), int(rng.integers(0, 4)),
+                col=int(rng.integers(0, 32)),
+                is_write=bool(rng.integers(0, 4) == 0), sid=i % 4)
+            for i in range(n)]
+    out.append(("stress_xsid_mix", txns))
+
+    # Write batches flipping to read batches on open rows: bus
+    # turnarounds (tRTW, tWTRS/tWTRL) at maximum rate.
+    txns = []
+    for batch in range(max(2, n // 32)):
+        wr = batch % 2 == 0
+        for j in range(32):
+            bank = (batch + j) % 8
+            txns.append(Txn(batch * 8.0, bank, 0, col=j % 32, is_write=wr))
+    out.append(("stress_turnaround", txns))
+
+    # Sparse arrivals over ~40 refresh periods: refresh issues must ride
+    # in the gaps with bounded postponement.
+    txns = [Txn(i * 600.0, int(rng.integers(0, 128)),
+                int(rng.integers(0, 8)), col=int(rng.integers(0, 32)),
+                is_write=bool(rng.integers(0, 2)))
+            for i in range(max(8, n // 75))]
+    out.append(("stress_sparse_refresh", txns))
+    return out
+
+
+def _rome_stressors(n: int):
+    rng = np.random.default_rng(9)
+    out = []
+
+    txns = [Txn(i * 10.0, int(rng.integers(0, 16)), int(rng.integers(0, 64)),
+                is_write=bool(rng.integers(0, 2)),
+                sid=int(rng.integers(0, 4)))
+            for i in range(n)]
+    out.append(("stress_rome_rw_mix", txns))
+
+    # Same-VBA chaining: every command must wait the full service time.
+    txns = [Txn(i * 10.0, 0, i, is_write=bool(i % 3 == 0))
+            for i in range(n)]
+    out.append(("stress_rome_vba_chain", txns))
+
+    # Strict SID round-robin (tR2RR/tW2WR cross-SID gaps).
+    txns = [Txn(i * 10.0, i % 16, i, is_write=bool(i % 2), sid=i % 4)
+            for i in range(n)]
+    out.append(("stress_rome_xsid", txns))
+
+    # Sparse arrivals across many VBA-paired refresh periods.
+    txns = [Txn(i * 900.0, int(rng.integers(0, 16)),
+                int(rng.integers(0, 64)), is_write=bool(rng.integers(0, 2)))
+            for i in range(max(8, n // 12))]
+    out.append(("stress_rome_sparse_refresh", txns))
+    return out
+
+
+def _traces_for(spec: PolicySpec, reduced: bool):
+    """(label, txns) pairs: facade-suite traces of the spec's family plus
+    the family's adversarial stressors. Transactions are rebuilt per call
+    — the sims take ownership of arrival ordering."""
+    fam = spec.family
+    out = [(label, txns) for label, kind, _, txns in facade_trace_suite()
+           if ("rome" if kind == "rome" else "hbm4") == fam]
+    if reduced:
+        out = out[::2]
+    n = 200 if reduced else 600
+    out.extend(_hbm4_stressors(n) if fam == "hbm4" else _rome_stressors(n))
+    return out
+
+
+def policy_conformance(name_or_spec, reduced: bool = False) -> dict:
+    """Conformance census for one registered policy."""
+    spec = (name_or_spec if isinstance(name_or_spec, PolicySpec)
+            else policy_spec(name_or_spec))
+    agg = CheckReport(spec.name)
+    per_trace_bad = {}
+    n_traces = 0
+    for label, txns in _traces_for(spec, reduced):
+        sim = spec.make_sim(emit_trace=True)
+        rep = check_sim_result(sim, sim.run(txns), f"{spec.name}:{label}")
+        agg.merge(rep)
+        n_traces += 1
+        if not rep.ok:
+            per_trace_bad[label] = dict(sorted(rep.counts.items()))
+    res = {
+        "policy": spec.name,
+        "family": spec.family,
+        "n_traces": n_traces,
+        "n_commands": agg.n_commands,
+        "violations": dict(sorted(agg.counts.items())),
+        "total_violations": sum(agg.counts.values()),
+        "clean": agg.ok,
+    }
+    if per_trace_bad:
+        res["bad_traces"] = per_trace_bad
+        res["examples"] = [f"{v.rule}@{v.t_ns:.3f} bank {v.bank}: {v.detail}"
+                           for v in agg.violations[:10]]
+    return res
+
+
+def conformance_report(policies=None, reduced: bool = False) -> dict:
+    """Census over all (or the given) registered policies."""
+    names = tuple(policies) if policies is not None else \
+        (REDUCED_POLICIES if reduced else tuple(registered_policies()))
+    per = {name: policy_conformance(name, reduced=reduced) for name in names}
+    return {
+        "reduced": reduced,
+        "policies": per,
+        "n_policies": len(per),
+        "n_commands": sum(p["n_commands"] for p in per.values()),
+        "total_violations": sum(p["total_violations"] for p in per.values()),
+        "clean": all(p["clean"] for p in per.values()),
+    }

@@ -1,0 +1,306 @@
+"""AST-based repo-invariant lints.
+
+These machine-check the policies the repo records in prose (CHANGES.md,
+docs/compat.md) but nothing previously enforced:
+
+``jax-drift``
+    Drifted JAX API symbols must be adapted *exactly once*, in
+    :mod:`repro.compat` (the PR 1 policy). Using ``jax.tree.map``,
+    ``jax.make_mesh``, ``jax.sharding.get_abstract_mesh``,
+    ``pltpu.TPUCompilerParams``, ``.cost_analysis()`` etc. anywhere else
+    reintroduces a per-call-site version dependency.
+``version-compare``
+    Feature detection over version-string comparison — ``__version__``
+    parsing breaks on rc/dev suffixes and lies about backports.
+``unseeded-random``
+    Module-level (global-state) RNG calls in ``core/`` / ``serve/``:
+    the hybrid bit-identity contract and the StepPricer memoization both
+    assume runs are deterministic functions of their inputs. Seeded
+    ``np.random.default_rng(seed)`` generators are fine.
+``mutable-default``
+    Mutable default arguments (lists/dicts/sets) shared across calls.
+``pool-submit-closure``
+    Lambdas / nested functions handed to ``.submit(...)``: the process
+    pools in :mod:`repro.core.pool` need picklable (module-level)
+    callables; closures die with an opaque pickling error at the first
+    real fan-out.
+
+Use :func:`lint_paths` (or ``scripts/lint.py``). Findings carry
+(path, line, rule, message) and are deterministic and sorted.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, NamedTuple
+
+
+class LintFinding(NamedTuple):
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+#: Dotted drifted-API chains -> the repro.compat replacement. Chains are
+#: matched against fully-resolved attribute paths rooted at a module
+#: alias (``import jax`` / ``import jax.sharding`` both resolve).
+DRIFTED_CHAINS = {
+    "jax.tree.map": "repro.compat.tree_map",
+    "jax.tree_util.tree_map": "repro.compat.tree_map",
+    "jax.make_mesh": "repro.compat.make_mesh",
+    "jax.set_mesh": "repro.compat.set_mesh",
+    "jax.sharding.use_mesh": "repro.compat.set_mesh",
+    "jax.sharding.get_abstract_mesh": "repro.compat.active_mesh",
+    "jax.shard_map": "repro.compat.shard_map",
+}
+
+#: Drifted attribute *names* (the owning module moved across versions).
+DRIFTED_ATTRS = {
+    "TPUCompilerParams": "repro.compat.tpu_compiler_params",
+    "CompilerParams": "repro.compat.tpu_compiler_params",
+    "axis_sizes": "repro.compat.mesh_axis_sizes",
+}
+
+#: Drifted method calls (result shape / existence varies by version).
+DRIFTED_METHOD_CALLS = {
+    "cost_analysis": "repro.compat.xla_cost_analysis / "
+                     "normalize_cost_analysis",
+}
+
+#: ``from <module> import <name>`` pairs that smuggle drifted symbols in
+#: under a local alias.
+DRIFTED_IMPORTS = {
+    ("jax", "make_mesh"), ("jax", "set_mesh"), ("jax", "shard_map"),
+    ("jax.tree_util", "tree_map"),
+    ("jax.sharding", "use_mesh"), ("jax.sharding", "get_abstract_mesh"),
+}
+
+#: numpy legacy global-RNG functions (process-wide state).
+_NP_LEGACY = {
+    "seed", "random", "rand", "randn", "randint", "random_sample",
+    "ranf", "sample", "choice", "shuffle", "permutation", "normal",
+    "uniform", "standard_normal", "poisson", "exponential", "beta",
+    "binomial", "gamma", "geometric", "lognormal",
+}
+
+#: stdlib ``random`` module-level functions (shared Mersenne state).
+_PY_RANDOM = {
+    "seed", "random", "randint", "randrange", "uniform", "choice",
+    "choices", "shuffle", "sample", "gauss", "normalvariate",
+    "expovariate", "betavariate", "paretovariate", "triangular",
+    "getrandbits",
+}
+
+ALL_RULES = ("jax-drift", "version-compare", "unseeded-random",
+             "mutable-default", "pool-submit-closure")
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """Resolve an Attribute/Name chain to ``a.b.c`` or None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, rules: Iterable[str]):
+        self.path = path
+        self.rules = set(rules)
+        self.findings: list[LintFinding] = []
+        self._imports: set[str] = set()       # imported top-level modules
+        self._func_stack: list[ast.AST] = []
+        self._nested_defs: set[str] = set()   # names of nested functions
+
+    def add(self, rule: str, node: ast.AST, msg: str) -> None:
+        if rule in self.rules:
+            self.findings.append(
+                LintFinding(self.path, getattr(node, "lineno", 0), rule, msg))
+
+    # -- imports -----------------------------------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self._imports.add(alias.asname or alias.name.split(".")[0])
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        for alias in node.names:
+            if (node.module, alias.name) in DRIFTED_IMPORTS:
+                self.add("jax-drift", node,
+                         f"import of drifted symbol "
+                         f"{node.module}.{alias.name} — use "
+                         f"{DRIFTED_CHAINS.get(f'{node.module}.{alias.name}', 'repro.compat')}")
+        self.generic_visit(node)
+
+    # -- drifted attribute chains ------------------------------------------
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        chain = _dotted(node)
+        if chain is not None:
+            hit = DRIFTED_CHAINS.get(chain)
+            if hit is not None:
+                self.add("jax-drift", node,
+                         f"drifted JAX API {chain} outside repro.compat "
+                         f"— use {hit}")
+                return  # don't re-flag inner attributes
+        if node.attr in DRIFTED_ATTRS and (
+                chain is None or not chain.startswith(("self.", "cls."))):
+            self.add("jax-drift", node,
+                     f"drifted attribute .{node.attr} outside repro.compat "
+                     f"— use {DRIFTED_ATTRS[node.attr]}")
+        self.generic_visit(node)
+
+    # -- calls -------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        chain = _dotted(fn) if isinstance(fn, (ast.Attribute, ast.Name)) \
+            else None
+        if isinstance(fn, ast.Attribute):
+            if fn.attr in DRIFTED_METHOD_CALLS:
+                self.add("jax-drift", node,
+                         f".{fn.attr}() call outside repro.compat — use "
+                         f"{DRIFTED_METHOD_CALLS[fn.attr]}")
+            if fn.attr == "submit" and node.args:
+                self._check_submit(node)
+        if chain is not None:
+            self._check_random(node, chain)
+        self.generic_visit(node)
+
+    def _check_random(self, node: ast.Call, chain: str) -> None:
+        parts = chain.split(".")
+        root = parts[0]
+        if root in ("np", "numpy") and len(parts) == 3 \
+                and parts[1] == "random":
+            if parts[2] in _NP_LEGACY:
+                self.add("unseeded-random", node,
+                         f"global-state numpy RNG {chain}() — use a seeded "
+                         f"np.random.default_rng(seed) generator")
+            elif parts[2] == "default_rng" and not node.args:
+                self.add("unseeded-random", node,
+                         "np.random.default_rng() without a seed — "
+                         "nondeterministic across runs")
+        elif root == "random" and len(parts) == 2 \
+                and "random" in self._imports and parts[1] in _PY_RANDOM:
+            self.add("unseeded-random", node,
+                     f"stdlib global RNG {chain}() — use a seeded "
+                     f"random.Random(seed) (or np.random.default_rng)")
+
+    def _check_submit(self, node: ast.Call) -> None:
+        arg = node.args[0]
+        if isinstance(arg, ast.Lambda):
+            self.add("pool-submit-closure", node,
+                     "lambda handed to .submit() — process pools need a "
+                     "picklable module-level callable")
+        elif isinstance(arg, ast.Name) and arg.id in self._nested_defs:
+            self.add("pool-submit-closure", node,
+                     f"nested function {arg.id!r} handed to .submit() — "
+                     f"process pools need a module-level callable")
+
+    # -- comparisons -------------------------------------------------------
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        for side in [node.left, *node.comparators]:
+            # Unwrap subscripts/calls like __version__.split(".")[0].
+            inner = side
+            while isinstance(inner, (ast.Subscript, ast.Call)):
+                inner = inner.value if isinstance(inner, ast.Subscript) \
+                    else inner.func
+            chain = _dotted(inner)
+            if chain and chain.split(".")[-1] in ("__version__", "split"):
+                base = _dotted(inner.value) if isinstance(inner, ast.Attribute) \
+                    else None
+                if "__version__" in chain or (base and "__version__" in base):
+                    self.add("version-compare", node,
+                             f"comparison against {chain} — feature-detect "
+                             f"in repro.compat instead of parsing versions")
+                    break
+        self.generic_visit(node)
+
+    # -- defs --------------------------------------------------------------
+
+    def _visit_func(self, node) -> None:
+        if self._func_stack:
+            self._nested_defs.add(node.name)
+        for default in [*node.args.defaults, *node.args.kw_defaults]:
+            if default is None:
+                continue
+            bad = None
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                bad = type(default).__name__.lower() + " literal"
+            elif isinstance(default, ast.Call):
+                callee = _dotted(default.func)
+                if callee in ("list", "dict", "set", "bytearray",
+                              "collections.defaultdict"):
+                    bad = f"{callee}() call"
+            if bad:
+                self.add("mutable-default", default,
+                         f"mutable default argument ({bad}) in "
+                         f"{node.name}() — default to None and build "
+                         f"inside the function")
+        self._func_stack.append(node)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+
+def lint_source(source: str, path: str = "<string>",
+                rules: Iterable[str] = ALL_RULES) -> list[LintFinding]:
+    """Lint one source string; returns findings sorted by line."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintFinding(path, e.lineno or 0, "syntax-error", str(e.msg))]
+    linter = _Linter(path, rules)
+    linter.visit(tree)
+    return sorted(linter.findings, key=lambda f: (f.line, f.rule))
+
+
+def rules_for_path(path: str, root: str = "") -> tuple[str, ...]:
+    """Which rules apply where.
+
+    * ``jax-drift`` everywhere under ``src/repro`` except
+      ``repro/compat`` (the one place drifted symbols are *supposed* to
+      appear) — plus benchmarks/scripts/tests, which must also route
+      through the adapters.
+    * ``unseeded-random`` only in the determinism-critical packages
+      (``repro/core``, ``repro/serve``) — tests and benchmarks may roll
+      dice however they like (they seed at the call site).
+    * everything else applies everywhere.
+    """
+    p = Path(path).as_posix()
+    rules = ["version-compare", "mutable-default", "pool-submit-closure"]
+    if "repro/compat" not in p:
+        rules.append("jax-drift")
+    if "repro/core" in p or "repro/serve" in p:
+        rules.append("unseeded-random")
+    return tuple(rules)
+
+
+def lint_paths(paths: Iterable[str | Path]) -> list[LintFinding]:
+    """Lint ``.py`` files (recursing into directories); deterministic
+    order."""
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    findings: list[LintFinding] = []
+    for f in files:
+        rel = f.as_posix()
+        findings.extend(
+            lint_source(f.read_text(), rel, rules=rules_for_path(rel)))
+    return findings

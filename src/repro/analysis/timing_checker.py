@@ -1,0 +1,490 @@
+"""Independent timing-protocol verification of emitted command traces.
+
+The scheduler policies in :mod:`repro.core.sched.policies` compute their
+own readiness clocks — a single optimistic off-by-one there silently
+inflates HBM4 or RoMe bandwidth and corrupts the paper's central
+comparison. This module re-derives command-stream legality from the
+timing dataclasses alone: it never calls into the policy code, and the
+rule set is a declarative table (:class:`GapRule` entries built straight
+from :class:`~repro.core.timing.HBM4Timing` /
+:class:`~repro.core.timing.RoMeTiming` fields) plus a handful of
+structural checks that cannot be expressed as a pairwise gap (rolling
+tFAW window, bank/row state, DQ-bus occupancy, bounded refresh
+postponement).
+
+Granularity matches what each MC actually schedules:
+
+* HBM4 policies are checked at DRAM-command level (ACT/RD/WR/PRE/REF)
+  against the JEDEC-style Table V parameters.
+* The RoMe policy is checked at row-command level (RD_row/WR_row/REF)
+  against the published Table III row-to-row gaps — Table III *is* its
+  protocol; the intra-row DRAM expansion is statically derived (and
+  separately verified) in :mod:`repro.core.command_generator`.
+
+Traces are emitted per command *site*, not in global time order (the
+column C/A path may legally land a command before ``now``; refresh
+issues are anchored at their backdated due times), so the checker sorts
+by timestamp before replaying.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+from ..core.timing import ChannelGeometry, HBM4Timing, RoMeTiming
+
+#: Float-time comparison slack (ns). Command times are exact IEEE sums of
+#: the same parameters the rules use, so anything beyond rounding noise
+#: is a real violation.
+EPS = 1e-6
+
+
+class Violation(NamedTuple):
+    rule: str
+    t_ns: float
+    bank: int
+    detail: str
+
+
+class TimingProtocolError(AssertionError):
+    """Raised by sanitizer mode (``SystemSim(check_timing=True)``)."""
+
+    def __init__(self, report: "CheckReport"):
+        self.report = report
+        super().__init__(report.summary())
+
+
+@dataclass(frozen=True)
+class GapRule:
+    """One declarative minimum-gap rule.
+
+    For every command whose op is in ``ops``, the elapsed time since the
+    most recent ``event`` in the rule's ``scope`` must be at least
+    ``gap_ns``:
+
+    ``scope``
+        ``"bank"`` — same bank / VBA; ``"pc"`` — same pseudo channel;
+        ``"bg"`` — same (pc, bank group); ``"xsid"`` — same pseudo
+        channel, *different* SID; ``"ch"`` — whole channel.
+    ``event``
+        Register name: ``"ACT"``, ``"PRE"``, ``"RD"`` (last RD command),
+        ``"WR_data_end"`` (last write's final data beat), ``"burst"``
+        (last RD or WR command), ``"REF"``.
+    """
+
+    name: str
+    ops: frozenset
+    scope: str
+    event: str
+    gap_ns: float
+
+
+@dataclass
+class CheckReport:
+    """Per-rule violation census for one replayed trace."""
+
+    kind: str
+    n_commands: int = 0
+    counts: dict = field(default_factory=dict)      # rule -> n violations
+    violations: list = field(default_factory=list)  # first `max_keep`
+    max_keep: int = 50
+
+    @property
+    def ok(self) -> bool:
+        return not self.counts
+
+    def add(self, rule: str, t_ns: float, bank: int, detail: str) -> None:
+        self.counts[rule] = self.counts.get(rule, 0) + 1
+        if len(self.violations) < self.max_keep:
+            self.violations.append(Violation(rule, t_ns, bank, detail))
+
+    def merge(self, other: "CheckReport") -> None:
+        self.n_commands += other.n_commands
+        for rule, n in other.counts.items():
+            self.counts[rule] = self.counts.get(rule, 0) + n
+        keep = self.max_keep - len(self.violations)
+        if keep > 0:
+            self.violations.extend(other.violations[:keep])
+
+    def summary(self) -> str:
+        if self.ok:
+            return (f"{self.kind}: {self.n_commands} commands, "
+                    f"0 violations")
+        rules = ", ".join(f"{k}×{v}" for k, v in sorted(self.counts.items()))
+        first = "; ".join(
+            f"{v.rule}@{v.t_ns:.3f}ns bank {v.bank}: {v.detail}"
+            for v in self.violations[:5])
+        return (f"{self.kind}: {self.n_commands} commands, "
+                f"{sum(self.counts.values())} violations ({rules}) — {first}")
+
+
+def _sorted(trace) -> list:
+    return sorted(trace, key=lambda r: r.t_ns)
+
+
+# ===========================================================================
+# HBM4: DRAM-command-level JEDEC rules
+# ===========================================================================
+
+class HBM4TraceChecker:
+    """Replays an ACT/RD/WR/PRE/REF trace against the Table V rule table.
+
+    Mirrors the *model's* resource scoping (which is no looser than
+    JEDEC's): bank-core rules are keyed on the flat bank id, burst/ACT
+    spacing on the pseudo channel and (pc, bank group), tCCDR across SIDs
+    sharing a pseudo channel, tFAW as a rolling 4-ACT window per pseudo
+    channel, and the DQ data bus as one exclusive resource per pseudo
+    channel.
+    """
+
+    def __init__(self, timing: HBM4Timing | None = None,
+                 geometry: ChannelGeometry | None = None,
+                 refresh: bool = True,
+                 ref_period: float | None = None,
+                 max_ref_postpone: int = 8):
+        t = self.t = timing or HBM4Timing()
+        self.g = geometry or ChannelGeometry()
+        self.refresh = refresh
+        self.ref_period = ref_period if ref_period is not None else t.tREFIpb
+        self.max_ref_postpone = max_ref_postpone
+        col = frozenset({"RD", "WR"})
+        self.rules = (
+            # Bank core
+            GapRule("tRCDRD", frozenset({"RD"}), "bank", "ACT", t.tRCDRD),
+            GapRule("tRCDWR", frozenset({"WR"}), "bank", "ACT", t.tRCDWR),
+            GapRule("tRAS", frozenset({"PRE"}), "bank", "ACT", t.tRAS),
+            GapRule("tRP", frozenset({"ACT", "REF"}), "bank", "PRE", t.tRP),
+            GapRule("tRTP", frozenset({"PRE"}), "bank", "RD", t.tRTP),
+            GapRule("tWR", frozenset({"PRE"}), "bank", "WR_data_end", t.tWR),
+            # Refresh blackout: nothing touches the bank during tRFCpb.
+            GapRule("tRFCpb", frozenset({"ACT", "RD", "WR", "PRE", "REF"}),
+                    "bank", "REF", t.tRFCpb),
+            GapRule("tRREFpb", frozenset({"REF"}), "ch", "REF", t.tRREFpb),
+            # Column command spacing
+            GapRule("tCCDS", col, "pc", "burst", t.tCCDS),
+            GapRule("tCCDL", col, "bg", "burst", t.tCCDL),
+            GapRule("tCCDR", col, "xsid", "burst", t.tCCDR),
+            # Activation spacing
+            GapRule("tRRDS", frozenset({"ACT"}), "pc", "ACT", t.tRRDS),
+            GapRule("tRRDL", frozenset({"ACT"}), "bg", "ACT", t.tRRDL),
+            # Bus turnarounds
+            GapRule("tRTW", frozenset({"WR"}), "pc", "RD", t.tRTW),
+            GapRule("tWTRS", frozenset({"RD"}), "pc", "WR_data_end", t.tWTRS),
+            GapRule("tWTRL", frozenset({"RD"}), "bg", "WR_data_end", t.tWTRL),
+        )
+        self._by_op: dict[str, list[GapRule]] = {}
+        for rule in self.rules:
+            for op in rule.ops:
+                self._by_op.setdefault(op, []).append(rule)
+
+    def _bg(self, bank: int) -> int:
+        return (bank % self.g.banks_per_pc) // self.g.banks_per_group
+
+    def check(self, trace) -> CheckReport:
+        rep = CheckReport("hbm4")
+        recs = _sorted(trace)
+        rep.n_commands = len(recs)
+        t_faw = self.t.tFAW
+        bank_ev: dict[int, dict] = {}
+        pc_ev: dict[int, dict] = {}
+        bg_ev: dict[tuple, dict] = {}
+        ch_ev: dict = {}
+        sid_burst: dict[int, dict] = {}
+        open_row: dict[int, int] = {}
+        pc_acts: dict[int, list] = {}
+        windows: dict[int, list] = {}
+        ref_times: list[float] = []
+        by_op = self._by_op
+
+        for rec in recs:
+            t, op, b, pc = rec.t_ns, rec.op, rec.bank, rec.pc
+            bg = (pc, self._bg(b))
+            for rule in by_op.get(op, ()):
+                scope = rule.scope
+                if scope == "bank":
+                    ref = bank_ev.get(b, {}).get(rule.event)
+                elif scope == "pc":
+                    ref = pc_ev.get(pc, {}).get(rule.event)
+                elif scope == "bg":
+                    ref = bg_ev.get(bg, {}).get(rule.event)
+                elif scope == "ch":
+                    ref = ch_ev.get(rule.event)
+                else:  # xsid: most recent burst by any *other* SID
+                    ref = None
+                    for s, tb in sid_burst.get(pc, {}).items():
+                        if s != rec.sid and (ref is None or tb > ref):
+                            ref = tb
+                if ref is not None and t - ref < rule.gap_ns - EPS:
+                    rep.add(rule.name, t, b,
+                            f"{op} {t - ref:.3f}ns after {rule.event} "
+                            f"(min {rule.gap_ns})")
+
+            if op == "ACT":
+                if open_row.get(b) is not None:
+                    rep.add("bank-state", t, b, "ACT on bank with open row")
+                acts = pc_acts.setdefault(pc, [])
+                if len(acts) >= 4 and t - acts[-4] < t_faw - EPS:
+                    rep.add("tFAW", t, b,
+                            f"5th ACT {t - acts[-4]:.3f}ns into a "
+                            f"{t_faw}ns window")
+                acts.append(t)
+                if len(acts) > 8:
+                    del acts[0]
+                open_row[b] = rec.row
+                bank_ev.setdefault(b, {})["ACT"] = t
+                pc_ev.setdefault(pc, {})["ACT"] = t
+                bg_ev.setdefault(bg, {})["ACT"] = t
+            elif op in ("RD", "WR"):
+                if open_row.get(b) != rec.row:
+                    rep.add("row-state", t, b,
+                            f"{op} row {rec.row} but open row is "
+                            f"{open_row.get(b)}")
+                bev = bank_ev.setdefault(b, {})
+                pev = pc_ev.setdefault(pc, {})
+                gev = bg_ev.setdefault(bg, {})
+                pev["burst"] = gev["burst"] = t
+                sid_burst.setdefault(pc, {})[rec.sid] = t
+                if op == "WR":
+                    bev["WR_data_end"] = rec.data_end_ns
+                    pev["WR_data_end"] = rec.data_end_ns
+                    gev["WR_data_end"] = rec.data_end_ns
+                else:
+                    bev["RD"] = pev["RD"] = t
+                windows.setdefault(pc, []).append(
+                    (rec.data_start_ns, rec.data_end_ns))
+            elif op == "PRE":
+                if open_row.get(b) is None:
+                    rep.add("bank-state", t, b, "PRE on precharged bank")
+                open_row[b] = None
+                bank_ev.setdefault(b, {})["PRE"] = t
+            elif op == "REF":
+                if open_row.get(b) is not None:
+                    rep.add("bank-state", t, b, "REF on bank with open row")
+                bank_ev.setdefault(b, {})["REF"] = t
+                ch_ev["REF"] = t
+                ref_times.append(t)
+            else:
+                rep.add("unknown-op", t, b, f"unexpected op {op!r}")
+
+        for pc, wins in windows.items():
+            _check_bus(rep, wins, f"pc {pc}")
+        if self.refresh:
+            _check_refresh_debt(rep, ref_times, recs, self.ref_period,
+                                self.max_ref_postpone)
+        return rep
+
+
+# ===========================================================================
+# RoMe: row-command-level Table III rules
+# ===========================================================================
+
+#: (prev_is_write, next_is_write, same_sid) -> Table III parameter name.
+ROME_GAP_NAMES = {
+    (False, False, True): "tR2RS", (False, False, False): "tR2RR",
+    (False, True, True): "tR2WS", (False, True, False): "tR2WR",
+    (True, False, True): "tW2RS", (True, False, False): "tW2RR",
+    (True, True, True): "tW2WS", (True, True, False): "tW2WR",
+}
+
+
+class RoMeTraceChecker:
+    """Replays a RD_row/WR_row/REF trace against Table III.
+
+    Rules:
+
+    * consecutive row commands (channel C/A order) must respect the
+      Table III start-to-start gap for their (prev kind, next kind,
+      same-SID) pair;
+    * a row command to a VBA must wait out that VBA's previous service
+      time (tRD_row / tWR_row) and any refresh window
+      (tRFCpb + tRREFpb) regardless of interveners;
+    * REF must not start while its VBA is mid-access, and two REFs to
+      the same VBA are spaced by the full refresh window;
+    * VBA-refresh starts keep 2*tRREFpb on the C/A path (each expands
+      to two REFpb commands tRREFpb apart), and no more than
+      ``RoMeTiming.max_concurrent_refreshing()`` refresh windows overlap
+      — the MC provisions exactly that many refresh FSMs (§V-A);
+    * same-direction data-bus windows must not overlap (mixed-direction
+      spacing is owned by the Table III R2W/W2R gaps themselves — see
+      docs/timing_sanitizer.md on the tCWL offset);
+    * refresh postponement stays bounded.
+    """
+
+    def __init__(self, timing: RoMeTiming | None = None,
+                 n_vbas: int = 16,
+                 refresh: bool = True,
+                 ref_period: float | None = None,
+                 max_ref_postpone: int = 8):
+        t = self.t = timing or RoMeTiming()
+        self.n_vbas = n_vbas
+        self.refresh = refresh
+        self.ref_period = (ref_period if ref_period is not None
+                           else 2 * t.tREFIpb)
+        self.max_ref_postpone = max_ref_postpone
+        self.ref_window = t.tRFCpb + t.tRREFpb
+        self.ref_cap = t.max_concurrent_refreshing()
+
+    def check(self, trace) -> CheckReport:
+        rep = CheckReport("rome")
+        recs = _sorted(trace)
+        rep.n_commands = len(recs)
+        t = self.t
+        prev = None                      # last row command (any VBA)
+        vba_last: dict[int, tuple] = {}  # vba -> (t, is_write)
+        vba_ref_end: dict[int, float] = {}
+        vba_ref_t: dict[int, float] = {}
+        windows: dict[bool, list] = {False: [], True: []}
+        ref_times: list[float] = []
+
+        for rec in recs:
+            tn, b = rec.t_ns, rec.bank
+            if rec.op in ("RD_row", "WR_row"):
+                w = rec.op == "WR_row"
+                if prev is not None:
+                    pt, pw, pb, ps = prev
+                    gap = t.gap_ns(pw, w, same_vba=(b == pb),
+                                   same_sid=(rec.sid == ps))
+                    if b == pb:
+                        name = "tWR_row" if pw else "tRD_row"
+                    else:
+                        name = ROME_GAP_NAMES[(pw, w, rec.sid == ps)]
+                    if tn - pt < gap - EPS:
+                        rep.add(name, tn, b,
+                                f"{rec.op} {tn - pt:.3f}ns after previous "
+                                f"row command (min {gap})")
+                # Same-VBA service time vs this VBA's last access even
+                # with interveners (the consecutive-pair rule above
+                # already covered the no-intervener case).
+                last = vba_last.get(b)
+                if last is not None and not (prev is not None
+                                             and prev[2] == b):
+                    svc = t.tWR_row if last[1] else t.tRD_row
+                    if tn - last[0] < svc - EPS:
+                        rep.add("tWR_row" if last[1] else "tRD_row", tn, b,
+                                f"{rec.op} {tn - last[0]:.3f}ns after "
+                                f"previous access to VBA (min {svc})")
+                ref_end = vba_ref_end.get(b)
+                if ref_end is not None and tn < ref_end - EPS:
+                    rep.add("ref-blackout", tn, b,
+                            f"{rec.op} during refresh window ending "
+                            f"{ref_end:.3f}ns")
+                prev = (tn, w, b, rec.sid)
+                vba_last[b] = (tn, w)
+                windows[w].append((rec.data_start_ns, rec.data_end_ns))
+            elif rec.op == "REF":
+                last = vba_last.get(b)
+                if last is not None:
+                    svc = t.tWR_row if last[1] else t.tRD_row
+                    if tn - last[0] < svc - EPS:
+                        rep.add("ref-vba-busy", tn, b,
+                                f"REF {tn - last[0]:.3f}ns after access "
+                                f"(min {svc})")
+                last_ref = vba_ref_t.get(b)
+                if last_ref is not None and \
+                        tn - last_ref < self.ref_window - EPS:
+                    rep.add("ref-ref-gap", tn, b,
+                            f"REF {tn - last_ref:.3f}ns after previous "
+                            f"REF to VBA (min {self.ref_window})")
+                if ref_times and tn - ref_times[-1] < 2 * t.tRREFpb - EPS:
+                    rep.add("ref-ref-ch", tn, b,
+                            f"VBA-refresh {tn - ref_times[-1]:.3f}ns after "
+                            f"previous start (min {2 * t.tRREFpb})")
+                vba_ref_t[b] = tn
+                vba_ref_end[b] = tn + self.ref_window
+                ref_times.append(tn)
+            else:
+                rep.add("unknown-op", tn, b, f"unexpected op {rec.op!r}")
+
+        for w, wins in windows.items():
+            _check_bus(rep, wins, "WR" if w else "RD")
+        # Refresh-FSM provisioning: at most `ref_cap` windows in flight.
+        active: list[float] = []
+        for tn in ref_times:           # already sorted (emission order)
+            active = [e for e in active if e > tn + EPS]
+            if len(active) >= self.ref_cap:
+                rep.add("ref-concurrency", tn, -1,
+                        f"{len(active) + 1} refresh windows in flight "
+                        f"(cap {self.ref_cap})")
+            active.append(tn + self.ref_window)
+        if self.refresh:
+            _check_refresh_debt(rep, ref_times, recs, self.ref_period,
+                                self.max_ref_postpone)
+        return rep
+
+
+# ===========================================================================
+# Shared structural checks
+# ===========================================================================
+
+def _check_bus(rep: CheckReport, wins: list, label: str) -> None:
+    """Exclusive-resource occupancy: sorted data windows must not
+    overlap. Emission order need not be data order (write latency <<
+    read latency), so sort by window start."""
+    wins = sorted(w for w in wins if w[0] >= 0.0)
+    for (s0, e0), (s1, e1) in zip(wins, wins[1:]):
+        if s1 < e0 - EPS:
+            rep.add("dq-overlap", s1, -1,
+                    f"{label}: data window [{s1:.3f}, {e1:.3f}] overlaps "
+                    f"previous ending {e0:.3f}")
+
+
+def _check_refresh_debt(rep: CheckReport, ref_times: list, recs: list,
+                        period: float, max_postpone: int) -> None:
+    """Bounded refresh postponement.
+
+    The governor owes one refresh per elapsed ``period``; JEDEC-style
+    bounded postponement allows at most ``max_postpone`` of them to be
+    outstanding under demand. Refresh issues are anchored at their due
+    times, so debt is observable straight from the trace: at the i-th
+    REF (0-based), dues(start_i) - i must stay within the bound, and at
+    the end of the trace the leftover debt must too. Slack of +2 covers
+    the transient between the governor's accrual step and its same-
+    iteration drain (clock advances are bounded by tRFCpb > 2 periods).
+    """
+    if not recs:
+        return
+    bound = max_postpone + 2
+    for i, tr in enumerate(sorted(ref_times)):
+        debt = int(tr / period) - i
+        if debt > bound:
+            rep.add("ref-postpone", tr, -1,
+                    f"{debt} refreshes overdue at {tr:.3f}ns "
+                    f"(bound {bound})")
+    t_end = max(r.t_ns for r in recs)
+    debt = int(t_end / period) - len(ref_times)
+    if debt > bound:
+        rep.add("ref-postpone", t_end, -1,
+                f"{debt} refreshes never issued by end of trace "
+                f"(bound {bound})")
+
+
+# ===========================================================================
+# Factories
+# ===========================================================================
+
+def checker_for_sim(sim):
+    """Build the matching checker for a constructed channel sim, reading
+    only its *configuration* (timing tables, geometry, refresh knobs) —
+    never its scheduling state."""
+    from ..core.sched.policies import RoMeRowPolicy
+    pol = sim.policy
+    if isinstance(pol, RoMeRowPolicy):
+        return RoMeTraceChecker(pol.t, n_vbas=pol.n_vbas,
+                                refresh=sim.refresh,
+                                ref_period=pol.ref_period,
+                                max_ref_postpone=sim.max_ref_postpone)
+    return HBM4TraceChecker(pol.t, pol.g, refresh=sim.refresh,
+                            ref_period=pol.ref_period,
+                            max_ref_postpone=sim.max_ref_postpone)
+
+
+def check_sim_result(sim, result, label: str = "") -> CheckReport:
+    """Check one SimResult's trace; raises if the run wasn't traced."""
+    if result.trace is None:
+        raise ValueError(
+            f"{label or 'run'} has no command trace — construct the sim "
+            f"with emit_trace=True (or SystemSim(check_timing=True))")
+    rep = checker_for_sim(sim).check(result.trace)
+    if label:
+        rep.kind = label
+    return rep

@@ -16,6 +16,7 @@ Stable surface:
   * :func:`set_mesh`                 — jax.set_mesh / sharding.use_mesh / Mesh ctx
   * :func:`active_mesh_axis_names`   — abstract mesh / thread-resource env
   * :func:`mesh_axis_sizes`          — Mesh.axis_sizes / devices.shape
+  * :func:`shard_map`                — jax.shard_map / experimental.shard_map
   * :func:`normalize_cost_analysis`  — dict vs list[dict] returns
   * :func:`xla_cost_analysis`        — Compiled -> normalized flat dict
   * :func:`tree_map`                 — jax.tree.map / jax.tree_util.tree_map
@@ -25,7 +26,7 @@ from __future__ import annotations
 from .hlo import normalize_cost_analysis, xla_cost_analysis
 from .pallas import tpu_compiler_params
 from .sharding import (active_mesh, active_mesh_axis_names, make_mesh,
-                       mesh_axis_sizes, set_mesh)
+                       mesh_axis_sizes, set_mesh, shard_map)
 from .tree import tree_map
 
 __all__ = [
@@ -35,6 +36,7 @@ __all__ = [
     "active_mesh",
     "active_mesh_axis_names",
     "mesh_axis_sizes",
+    "shard_map",
     "normalize_cost_analysis",
     "xla_cost_analysis",
     "tree_map",

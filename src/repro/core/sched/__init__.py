@@ -46,7 +46,8 @@ from .channels import (CHANNEL_SIM_KINDS, HBM4ChannelSim,
                        HBM4ClosedPageChannelSim, HBM4SIDGroupChannelSim,
                        HBM4WriteDrainChannelSim, RoMeChannelSim,
                        make_channel_sim)
-from .core import ChannelRunState, ChannelSimCore, SimResult, Txn, _PendingQueue
+from .core import (ChannelRunState, ChannelSimCore, CmdRecord, SimResult,
+                   Txn, _PendingQueue)
 from .policies import (FRFCFSOpenPagePolicy, FRFCFSWriteDrainPolicy,
                        HBM4ClosedPagePolicy, HBM4SIDGroupPolicy,
                        RoMeRowPolicy, SchedulerPolicy)
@@ -58,7 +59,7 @@ from .traces import (facade_trace_suite, hbm4_unit_location,
 from .vectorized import run_channels
 
 __all__ = [
-    "ChannelSimCore", "ChannelRunState", "SimResult", "Txn",
+    "ChannelSimCore", "ChannelRunState", "CmdRecord", "SimResult", "Txn",
     "run_channels", "facade_trace_suite",
     "SchedulerPolicy", "FRFCFSOpenPagePolicy", "FRFCFSWriteDrainPolicy",
     "HBM4ClosedPagePolicy", "HBM4SIDGroupPolicy", "RoMeRowPolicy",

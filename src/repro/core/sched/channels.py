@@ -27,7 +27,8 @@ class HBM4ChannelSim(ChannelSimCore):
                  refresh: bool = True,
                  max_ref_postpone: int = 8,
                  page_policy: str = "open",
-                 policy: SchedulerPolicy | None = None):
+                 policy: SchedulerPolicy | None = None,
+                 emit_trace: bool = False):
         t = timing or HBM4Timing()
         g = geometry or ChannelGeometry()
         if policy is None:
@@ -37,7 +38,8 @@ class HBM4ChannelSim(ChannelSimCore):
                 policy = HBM4ClosedPagePolicy(t, g)
             else:
                 raise ValueError(f"unknown page_policy {page_policy!r}")
-        super().__init__(policy, queue_depth, refresh, max_ref_postpone)
+        super().__init__(policy, queue_depth, refresh, max_ref_postpone,
+                         emit_trace=emit_trace)
         self.t = t
         self.g = g
         self.page_policy = page_policy
@@ -53,9 +55,11 @@ class HBM4ClosedPageChannelSim(HBM4ChannelSim):
                  geometry: ChannelGeometry | None = None,
                  queue_depth: int = 64,
                  refresh: bool = True,
-                 max_ref_postpone: int = 8):
+                 max_ref_postpone: int = 8,
+                 emit_trace: bool = False):
         super().__init__(timing, geometry, queue_depth, refresh,
-                         max_ref_postpone, page_policy="closed")
+                         max_ref_postpone, page_policy="closed",
+                         emit_trace=emit_trace)
 
 
 class HBM4WriteDrainChannelSim(HBM4ChannelSim):
@@ -70,10 +74,12 @@ class HBM4WriteDrainChannelSim(HBM4ChannelSim):
                  high_watermark: int = 8,
                  low_watermark: int = 2,
                  drain_budget: int = 16,
-                 write_age_ns: float = 400.0):
+                 write_age_ns: float = 400.0,
+                 emit_trace: bool = False):
         t = timing or HBM4Timing()
         g = geometry or ChannelGeometry()
         super().__init__(t, g, queue_depth, refresh, max_ref_postpone,
+                         emit_trace=emit_trace,
                          policy=FRFCFSWriteDrainPolicy(
                              t, g, high_watermark=high_watermark,
                              low_watermark=low_watermark,
@@ -89,10 +95,12 @@ class HBM4SIDGroupChannelSim(HBM4ChannelSim):
                  geometry: ChannelGeometry | None = None,
                  queue_depth: int = 64,
                  refresh: bool = True,
-                 max_ref_postpone: int = 8):
+                 max_ref_postpone: int = 8,
+                 emit_trace: bool = False):
         t = timing or HBM4Timing()
         g = geometry or ChannelGeometry()
         super().__init__(t, g, queue_depth, refresh, max_ref_postpone,
+                         emit_trace=emit_trace,
                          policy=HBM4SIDGroupPolicy(t, g))
 
 
@@ -114,14 +122,16 @@ class RoMeChannelSim(ChannelSimCore):
                  refresh: bool = True,
                  max_ref_postpone: int = 8,
                  variant: str | None = None,
-                 refresh_priority: str = "demand"):
+                 refresh_priority: str = "demand",
+                 emit_trace: bool = False):
         t = timing or RoMeTiming()
         g = geometry or ChannelGeometry()
         policy = RoMeRowPolicy(t, g, n_vbas=n_vbas, variant=variant,
                                refresh_priority=refresh_priority)
         if refresh_priority == "eager":
             max_ref_postpone = 1
-        super().__init__(policy, queue_depth, refresh, max_ref_postpone)
+        super().__init__(policy, queue_depth, refresh, max_ref_postpone,
+                         emit_trace=emit_trace)
         self.t = t
         self.g = g
         self.n_vbas = n_vbas

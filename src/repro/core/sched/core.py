@@ -17,8 +17,32 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from itertools import islice
+from typing import NamedTuple
 
 import numpy as np
+
+
+class CmdRecord(NamedTuple):
+    """One emitted memory command, for the trace sanitizer.
+
+    HBM4 policies emit DRAM-level ops (``ACT``/``RD``/``WR``/``PRE``/
+    ``REF``); the RoMe policy emits row-level ops (``RD_row``/``WR_row``/
+    ``REF``) — Table III *is* its protocol, so conformance is checked at
+    the granularity the MC actually schedules. Fields that don't apply to
+    an op (row for PRE/REF, data window for non-column commands, sid for
+    refresh) are ``-1``. A NamedTuple keeps records cheap, picklable
+    (they ride back through ``core.pool`` inside :class:`SimResult`) and
+    comparable (the vectorized driver asserts full trace identity).
+    """
+
+    t_ns: float            # command issue time on the C/A bus
+    op: str                # ACT | RD | WR | PRE | REF | RD_row | WR_row
+    bank: int              # flat bank id (HBM4) / VBA id (RoMe)
+    pc: int                # pseudo channel (RoMe lockstep: always 0)
+    sid: int               # stack id, -1 when not request-driven
+    row: int               # row (ACT/RD/WR) or -1
+    data_start_ns: float   # first data beat on the DQ bus, -1.0 if none
+    data_end_ns: float     # last data beat leaves the bus, -1.0 if none
 
 
 @dataclass
@@ -40,6 +64,7 @@ class SimResult:
     total_ns: float                # makespan
     bytes_moved: int
     cmd_counts: dict = field(default_factory=dict)  # ACT/RD/WR/PRE/REF/row cmds
+    trace: list | None = None      # CmdRecords when run with emit_trace=True
 
     @property
     def bandwidth_gbps(self) -> float:
@@ -127,7 +152,7 @@ class ChannelRunState:
 
     __slots__ = ("core", "policy", "pending", "finish", "counts",
                  "idx_in_finish", "period", "next_ref_t", "next_ref_unit",
-                 "ref_backlog", "now", "n_txns")
+                 "ref_backlog", "now", "n_txns", "trace")
 
     def __init__(self, core: "ChannelSimCore", txns: list[Txn]):
         pol = core.policy
@@ -141,6 +166,11 @@ class ChannelRunState:
         self.finish = np.zeros(len(txns))
         self.counts = {k: 0 for k in pol.count_keys}
         self.counts["ref_backlog_max"] = 0
+        # The trace list is handed to the policy *before* begin() so a
+        # policy may cache it in per-run state; None keeps every emission
+        # site a single attribute test (zero-cost when off).
+        self.trace = [] if core.emit_trace else None
+        pol.trace = self.trace
         pol.begin(self.counts)
         self.period = pol.ref_period
         self.next_ref_t = self.period
@@ -238,7 +268,7 @@ class ChannelRunState:
         bytes_moved = self.n_txns * self.policy.bytes_per_txn
         return SimResult(self.finish,
                          float(self.finish.max(initial=0.0)),
-                         bytes_moved, self.counts)
+                         bytes_moved, self.counts, trace=self.trace)
 
 
 class ChannelSimCore:
@@ -265,11 +295,12 @@ class ChannelSimCore:
     """
 
     def __init__(self, policy, queue_depth: int, refresh: bool = True,
-                 max_ref_postpone: int = 8):
+                 max_ref_postpone: int = 8, emit_trace: bool = False):
         self.policy = policy
         self.queue_depth = queue_depth
         self.refresh = refresh
         self.max_ref_postpone = max_ref_postpone
+        self.emit_trace = emit_trace
 
     def start_run(self, txns: list[Txn]) -> ChannelRunState:
         """Begin a run without driving it: the returned state advances

@@ -30,7 +30,7 @@ from __future__ import annotations
 from ..command_generator import CommandGenerator
 from ..timing import (ChannelGeometry, HBM4_BANK_STATES, HBM4Timing,
                       ROME_BANK_STATES, RoMeTiming)
-from .core import Txn
+from .core import CmdRecord, Txn
 
 
 class SchedulerPolicy:
@@ -40,6 +40,15 @@ class SchedulerPolicy:
     ref_period: float = 0.0
     n_ref_units: int = 1
     bytes_per_txn: int = 0
+
+    #: Command-trace sink, set by :class:`ChannelRunState` before
+    #: ``begin()``: a list of :class:`CmdRecord` when the run was started
+    #: with ``emit_trace=True``, else None. Every emission site guards on
+    #: it so the hot path pays one attribute test when tracing is off.
+    #: The trace exists so `repro.analysis.timing_checker` can verify the
+    #: command stream against the JEDEC / Table III rule tables without
+    #: trusting any of the readiness math below.
+    trace: list | None = None
 
     def begin(self, counts: dict) -> None:
         raise NotImplementedError
@@ -119,6 +128,8 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
         self.pc_last_was_write = [False, False]
         self.pc_last_rd_cmd = [-1e18, -1e18]
         self.pc_last_wr_data_end = [-1e18, -1e18]
+        self.pc_last_wr_data_end_bg = [dict(), dict()]  # bg -> data end (tWTRL)
+        self.ch_last_ref = -1e18                   # REFpb spacing (tRREFpb)
         self.pc_act_times = [[], []]               # for tFAW (per PC)
         self.pc_last_act = [-1e18, -1e18]          # tRRDS
         self.pc_last_act_bg = [dict(), dict()]     # tRRDL
@@ -152,8 +163,16 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
                 r = max(r, t_cmd + t.tCCDR)
         if is_write and not self.pc_last_was_write[pc]:
             r = max(r, self.pc_last_rd_cmd[pc] + t.tRTW)
-        if not is_write and self.pc_last_was_write[pc]:
-            r = max(r, self.pc_last_wr_data_end[pc] + t.tWTRS)
+        if not is_write:
+            if self.pc_last_was_write[pc]:
+                r = max(r, self.pc_last_wr_data_end[pc] + t.tWTRS)
+            # tWTRL binds same-bank-group reads against the *last write
+            # to that group* even when interleaved reads already flipped
+            # the turnaround direction — the per-PC gate above would
+            # skip it (found by the trace sanitizer).
+            wbg = self.pc_last_wr_data_end_bg[pc].get(bg)
+            if wbg is not None:
+                r = max(r, wbg + t.tWTRL)
         return r
 
     def pre_ready(self, b: _BankState, at: float) -> float:
@@ -166,15 +185,28 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
     def issue_refresh(self, unit: int, due: float) -> None:
         t = self.t
         b = self.banks[unit]
-        start = max(due, b.t_rp_done, b.t_ref_done)
+        tr = self.trace
+        # tRREFpb: REFpb commands to *different* banks still share the
+        # C/A path — successive refresh starts keep their spacing even
+        # when backdated due anchors and bank-busy pushes collide
+        # (found by the trace sanitizer).
+        start = max(due, b.t_rp_done, b.t_ref_done,
+                    self.ch_last_ref + t.tRREFpb)
         if b.open_row is not None:
             pr = self.pre_ready(b, start)
             b.t_rp_done = pr + t.tRP
             b.open_row = None
             self.counts["PRE"] += 1
+            if tr is not None:
+                tr.append(CmdRecord(pr, "PRE", unit, self._pc(unit), -1, -1,
+                                    -1.0, -1.0))
             start = b.t_rp_done
         b.t_ref_done = start + t.tRFCpb
+        self.ch_last_ref = start
         self.counts["REFpb"] += 1
+        if tr is not None:
+            tr.append(CmdRecord(start, "REF", unit, self._pc(unit), -1, -1,
+                                -1.0, -1.0))
 
     # -- one scheduling step -----------------------------------------------
 
@@ -182,6 +214,7 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
         t = self.t
         counts = self.counts
         banks = self.banks
+        tr = self.trace
         issued = False
         completions: list = []
 
@@ -208,6 +241,10 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
                 b.open_row = None
                 counts["PRE"] += 1
                 counts["ca_commands"] += 1
+                if tr is not None:
+                    tr.append(CmdRecord(pr, "PRE", tx.bank,
+                                        self._pc(tx.bank), tx.sid, -1,
+                                        -1.0, -1.0))
                 now = max(now, pr)
             else:
                 ar = self.act_ready(tx.bank, b,
@@ -223,6 +260,9 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
                     self.pc_act_times[pc] = self.pc_act_times[pc][-8:]
                 counts["ACT"] += 1
                 counts["ca_commands"] += 1
+                if tr is not None:
+                    tr.append(CmdRecord(ar, "ACT", tx.bank, pc, tx.sid,
+                                        tx.row, -1.0, -1.0))
                 now = max(now, ar)
             prepared.add(tx.bank)
             issued = True
@@ -252,11 +292,16 @@ class FRFCFSOpenPagePolicy(SchedulerPolicy):
             if tx.is_write:
                 b.t_last_wr_data = data_end
                 self.pc_last_wr_data_end[pc] = data_end
+                self.pc_last_wr_data_end_bg[pc][bg] = data_end
                 counts["WR"] += 1
             else:
                 b.t_last_rd = cmd_t
                 self.pc_last_rd_cmd[pc] = cmd_t
                 counts["RD"] += 1
+            if tr is not None:
+                tr.append(CmdRecord(cmd_t, "WR" if tx.is_write else "RD",
+                                    tx.bank, pc, tx.sid, tx.row,
+                                    data_start, data_end))
             self._after_column(tx, b, cmd_t)
             completions.append((tx, data_end))
             now = max(now, cmd_t)
@@ -337,6 +382,10 @@ class HBM4ClosedPagePolicy(FRFCFSOpenPagePolicy):
         b.open_row = None
         self.counts["PRE"] += 1
         self.counts["ca_commands"] += 1
+        if self.trace is not None:
+            self.trace.append(CmdRecord(pr, "PRE", tx.bank,
+                                        self._pc(tx.bank), tx.sid, -1,
+                                        -1.0, -1.0))
 
 
 class FRFCFSWriteDrainPolicy(FRFCFSOpenPagePolicy):
@@ -566,6 +615,7 @@ class RoMeRowPolicy(SchedulerPolicy):
         self.ref_period = 2 * self.t.tREFIpb
         self.n_ref_units = n_vbas
         self.bytes_per_txn = self.row_bytes
+        self._ref_cap = self.t.max_concurrent_refreshing()
 
     def begin(self, counts: dict) -> None:
         self.counts = counts
@@ -574,6 +624,8 @@ class RoMeRowPolicy(SchedulerPolicy):
         self.last_cmd_write = False
         self.last_cmd_vba = -1
         self.last_cmd_sid = -1
+        self.ch_last_ref = -1e18       # cross-VBA REFpb release spacing
+        self._ref_ends = []            # active refresh windows (FSM cap)
 
     def start_time(self, tx: Txn, at: float) -> float:
         t = self.t
@@ -588,12 +640,31 @@ class RoMeRowPolicy(SchedulerPolicy):
     def issue_refresh(self, unit: int, due: float) -> None:
         # VBA-paired refresh, anchored at due time (may overlap across
         # VBAs — the paper's "up to three refreshing simultaneously").
+        # Each VBA-refresh is two REFpb commands tRREFpb apart, so
+        # successive VBA-refresh *starts* keep 2*tRREFpb on the C/A
+        # path, and at most max_concurrent_refreshing() windows overlap
+        # (the MC provisions exactly that many refresh FSMs) — both
+        # found by the trace sanitizer.
         t = self.t
-        start = max(due, self.vba_busy_until[unit])
-        self.vba_busy_until[unit] = start + t.tRFCpb + t.tRREFpb
+        start = max(due, self.vba_busy_until[unit],
+                    self.ch_last_ref + 2 * t.tRREFpb)
+        window = t.tRFCpb + t.tRREFpb
+        cap = self._ref_cap
+        in_flight = sorted(e for e in self._ref_ends if e > start)
+        if len(in_flight) >= cap:
+            # Wait until enough windows end that ours is the cap-th.
+            start = in_flight[len(in_flight) - cap]
+        self.vba_busy_until[unit] = start + window
+        self.ch_last_ref = start
+        self._ref_ends.append(start + window)
+        if len(self._ref_ends) > 8:
+            del self._ref_ends[0]
         self.counts["REFpb"] += 2
         self.counts["row_commands"] += 1
         self.counts["ca_commands"] += 1
+        if self.trace is not None:
+            self.trace.append(CmdRecord(start, "REF", unit, 0, -1, -1,
+                                        -1.0, -1.0))
 
     def issue(self, window: list[Txn], now: float):
         t = self.t
@@ -621,6 +692,11 @@ class RoMeRowPolicy(SchedulerPolicy):
         counts["WR" if best.is_write else "RD"] += self._bursts
         counts["row_commands"] += 1
         counts["ca_commands"] += 1
+        if self.trace is not None:
+            self.trace.append(CmdRecord(
+                best_t, "WR_row" if best.is_write else "RD_row",
+                best.bank, 0, best.sid, best.row,
+                best_t + sched.first_data_ns, best_t + sched.last_data_ns))
         completions = [(best, best_t + sched.last_data_ns)]
         now = max(now, best_t)
         return now, True, completions

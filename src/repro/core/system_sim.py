@@ -134,6 +134,13 @@ class SystemSim:
     (``PolicySpec.system_sim`` threads it automatically); without it the
     family's default point is assumed (``hbm4_frfcfs`` / ``hbm4_closed``
     by page policy, ``rome_qd2``).
+
+    ``check_timing=True`` turns on sanitizer mode: every cycle-path
+    channel run emits its command trace and is replayed through the
+    independent :mod:`repro.analysis.timing_checker`; any JEDEC/Table III
+    protocol violation raises :class:`~repro.analysis.TimingProtocolError`
+    (docs/timing_sanitizer.md). Analytically priced runs issue no
+    commands, so there is nothing to check on that path.
     """
 
     def __init__(self, cfg: MemSystemConfig,
@@ -150,10 +157,12 @@ class SystemSim:
                  mode: str = "cycle",
                  pressure_threshold: float | None = None,
                  max_cycle_txns: int = 500_000,
-                 policy_name: str | None = None):
+                 policy_name: str | None = None,
+                 check_timing: bool = False):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.mode = mode
+        self.check_timing = check_timing
         self.max_cycle_txns = max_cycle_txns
         self.policy_name = policy_name
         # None -> the policy's own calibrated cut (resolved lazily with
@@ -257,6 +266,8 @@ class SystemSim:
         common = dict(geometry=geo, queue_depth=self.queue_depth,
                       refresh=self.refresh,
                       max_ref_postpone=self.max_ref_postpone)
+        if self.check_timing:
+            common["emit_trace"] = True
         if self.is_rome:
             common |= {"n_vbas": self.cfg.vbas_per_channel}
         kind = self.channel_kind
@@ -279,6 +290,28 @@ class SystemSim:
     def _make_sim(self):
         kind, kwargs = self._sim_spec()
         return make_channel_sim(kind, **kwargs)
+
+    def _sanitize(self, results: "dict[int, SimResult]",
+                  step: int | None = None) -> None:
+        """Sanitizer mode: replay every loaded channel's command trace
+        through the independent :mod:`repro.analysis.timing_checker` and
+        raise :class:`~repro.analysis.TimingProtocolError` on the first
+        run with any protocol violation. Lazy import — repro.analysis
+        depends on repro.core, not the other way around."""
+        from ..analysis.timing_checker import (TimingProtocolError,
+                                               check_sim_result)
+        sim = self._make_sim()
+        agg = None
+        tag = "" if step is None else f"step {step} "
+        for c, r in sorted(results.items()):
+            rep = check_sim_result(sim, r, f"{tag}channel {c}")
+            if not rep.ok:
+                if agg is None:
+                    agg = rep
+                else:
+                    agg.merge(rep)
+        if agg is not None:
+            raise TimingProtocolError(agg)
 
     # -- analytic pricing / hybrid classification --------------------------
 
@@ -439,6 +472,8 @@ class SystemSim:
         elif items:
             sims = run_channels(kind, kwargs, [txns for _, txns in items])
             results = {c: r for (c, _), r in zip(items, sims)}
+        if self.check_timing:
+            self._sanitize(results)
 
         nch = self.amap.n_channels
         ch_bytes = np.zeros(nch, dtype=np.int64)
@@ -538,6 +573,9 @@ class SystemSim:
             sims = run_channels(kind, kwargs, [txns for _, _, txns in flat])
             for (i, c, _), r in zip(flat, sims):
                 all_results[i][c] = r
+        if self.check_timing:
+            for i in sorted(all_results):
+                self._sanitize(all_results[i], step=i)
         nch = self.amap.n_channels
         for i, pressure in cycle_steps:
             items = prepared[i]

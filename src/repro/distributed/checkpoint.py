@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import tree_map
+
 # npz cannot serialize non-native dtypes (bfloat16, fp8): store them as
 # same-width unsigned views and reinterpret on restore via the manifest.
 _VIEW_BYTES = {2: np.uint16, 1: np.uint8, 4: np.uint32, 8: np.uint64}
@@ -125,7 +127,7 @@ def restore(directory: str, step: int, tree_like, host_id: int = 0):
     out = [_from_storable(data[f"leaf_{i}"], manifest["dtypes"][i])
            for i in range(len(leaves))]
     restored = treedef.unflatten(out)
-    return jax.tree.map(
+    return tree_map(
         lambda tgt, arr: jnp.asarray(arr, dtype=tgt.dtype)
         if hasattr(tgt, "dtype") else arr, tree_like, restored)
 
@@ -143,7 +145,7 @@ class AsyncCheckpointer:
         self.wait()
         # Materialize on host *before* backgrounding so the device buffers
         # are free to be donated/overwritten by the next step.
-        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        host_tree = tree_map(lambda x: np.asarray(x), tree)
 
         def work():
             try:

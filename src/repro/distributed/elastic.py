@@ -19,6 +19,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import tree_map
 from .sharding import filter_spec
 
 
@@ -56,7 +57,7 @@ def reshard(tree, specs, mesh: Mesh):
         cleaned = P(*filter_spec(tuple(spec), names))
         return jax.device_put(x, NamedSharding(mesh, cleaned))
 
-    return jax.tree.map(place, tree, specs,
+    return tree_map(place, tree, specs,
                         is_leaf=lambda x: isinstance(x, tuple)
                         and all(isinstance(e, (str, tuple, type(None)))
                                 for e in x))

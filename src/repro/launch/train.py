@@ -29,7 +29,7 @@ from ..distributed import checkpoint as ckpt
 from ..models.registry import get_adapter
 from ..train.train_step import TrainState, make_train_step, train_state_init
 from .mesh import make_mesh
-from ..compat import set_mesh
+from ..compat import set_mesh, tree_map
 
 
 def build(arch: str, use_reduced: bool, mesh_shape: tuple, seq_len: int,
@@ -93,7 +93,7 @@ def main(argv=None) -> int:
         losses = []
         t0 = time.time()
         for i in range(start_step, start_step + args.steps):
-            batch = jax.tree.map(jnp.asarray, pipe.batch_at(i))
+            batch = tree_map(jnp.asarray, pipe.batch_at(i))
             state, metrics = jstep(state, batch)
             loss = float(metrics["loss"])
             losses.append(loss)

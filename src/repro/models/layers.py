@@ -13,6 +13,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..compat import active_mesh, mesh_axis_sizes, shard_map
+
 # ---------------------------------------------------------------------------
 # Norms
 # ---------------------------------------------------------------------------
@@ -262,7 +264,7 @@ def cross_attention(params: dict, x: jax.Array, kv_input: jax.Array,
 def _batch_axes_for(dim: int, mesh) -> tuple:
     axes = []
     prod = 1
-    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    sizes = mesh_axis_sizes(mesh)
     for a in ("pod", "data"):
         if a in sizes and dim % (prod * sizes[a]) == 0:
             axes.append(a)
@@ -284,16 +286,12 @@ def cached_attention_update(q: jax.Array, k_new: jax.Array,
     from jax.sharding import PartitionSpec as P
 
     mesh = None
-    try:
-        m = jax.sharding.get_abstract_mesh()
-        if m is not None and "model" in (m.axis_names or ()):
-            mesh = m
-    except Exception:
-        mesh = None
+    m = active_mesh()
+    if m is not None and "model" in (m.axis_names or ()):
+        mesh = m
     b, hq, _, hd = q.shape
     S = k_cache.shape[2]
-    if mesh is None or S % dict(zip(mesh.axis_names,
-                                    mesh.axis_sizes))["model"]:
+    if mesh is None or S % mesh_axis_sizes(mesh)["model"]:
         return _cached_attention_local(q, k_new, v_new, k_cache, v_cache,
                                        pos, slot, None)
 
@@ -306,7 +304,7 @@ def cached_attention_update(q: jax.Array, k_new: jax.Array,
         return _cached_attention_local(q, k_new, v_new, kc, vc, pos, slot,
                                        "model")
 
-    return jax.shard_map(
+    return shard_map(
         inner, mesh=mesh,
         in_specs=(qkv_spec, qkv_spec, qkv_spec, cache_spec, cache_spec,
                   P(), P()),

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import tree_map
 from ..distributed.sharding import (hint_residual, padded_heads,
                                     padded_vocab, shard_hint)
 from .layers import (attn_params, cross_attention, decode_attention,
@@ -82,7 +83,7 @@ def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
     base = {"attn": attn, "attn_norm": (None,), "ffn": ffn,
             "ffn_norm": (None,)}
     cross = base | {"gate_attn": (), "gate_ffn": ()}
-    stack = lambda blk: jax.tree.map(lambda s: (None,) + s, blk,
+    stack = lambda blk: tree_map(lambda s: (None,) + s, blk,
                                      is_leaf=lambda x: isinstance(x, tuple))
     return {
         "embed": ("model", fsdp),
@@ -130,7 +131,7 @@ def forward(params, cfg, tokens, vision_embeds, remat: bool = False):
         self_fwd = jax.checkpoint(_self_fwd, static_argnums=(0,))
         cross_fwd = jax.checkpoint(_cross_fwd, static_argnums=(0,))
 
-    self_stack = jax.tree.map(
+    self_stack = tree_map(
         lambda a: a.reshape((n_units, k - 1) + a.shape[1:]),
         params["self_blocks"])
 
@@ -214,7 +215,7 @@ def decode_step(params, cfg, token, cache, pos):
     n_self = n_units * (k - 1)
     h = params["embed"][token]
 
-    take = lambda t, i: jax.tree.map(
+    take = lambda t, i: tree_map(
         lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False), t)
 
     def self_layer(u, j, carry):

@@ -19,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import active_mesh, mesh_axis_sizes
 from ..distributed.sharding import shard_hint
 from .layers import dense_init
 
@@ -93,12 +94,8 @@ def moe_ffn(params: dict, x: jax.Array, cfg, group_size: int | None = None,
     # flops 0.10 -> 0.75 with the cap). Within a pod XLA partitions the
     # group internally (measured fine on the 16x16 mesh), so only the
     # `pod` axis caps g.
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes)) \
-            if mesh is not None and mesh.axis_names else {}
-    except Exception:
-        sizes = {}
+    mesh = active_mesh()
+    sizes = mesh_axis_sizes(mesh) if mesh is not None else {}
     pods = sizes.get("pod", 1)
     if pods > 1 and tokens % pods == 0:
         g = max(1, min(g, tokens // pods))

@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import tree_map
 from ..distributed.sharding import hint_residual, padded_vocab, shard_hint
 from .layers import dense_init, rmsnorm
 
@@ -87,7 +88,7 @@ def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
     }
     return {
         "embed": ("model", fsdp),
-        "blocks": jax.tree.map(lambda s: (None,) + s, block,
+        "blocks": tree_map(lambda s: (None,) + s, block,
                                is_leaf=lambda x: isinstance(x, tuple)),
         "final_norm": (None,),
         "lm_head": (fsdp, "model"),

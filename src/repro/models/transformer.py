@@ -13,6 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..compat import tree_map
 from ..distributed.sharding import (hint_residual, padded_heads,
                                     padded_vocab, shard_hint)
 from . import moe as moe_lib
@@ -83,7 +84,7 @@ def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
                         "w_down": ("model", fsdp)}
     specs = {
         "embed": ("model", fsdp),
-        "blocks": jax.tree.map(lambda s: (None,) + s, block,
+        "blocks": tree_map(lambda s: (None,) + s, block,
                                is_leaf=lambda x: isinstance(x, tuple)),
         "final_norm": (None,),
     }
@@ -172,7 +173,7 @@ def decode_step(params: dict, cfg, token: jax.Array, cache: dict,
 
     def body(i, carry):
         h, kc_all, vc_all = carry
-        bp = jax.tree.map(
+        bp = tree_map(
             lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
             params["blocks"])
         kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, keepdims=False)

@@ -17,6 +17,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ..compat import tree_map
 from ..distributed.sharding import (hint_residual, padded_heads,
                                     padded_vocab, shard_hint)
 from .layers import (CHUNKED_ATTN_THRESHOLD, attention_scores,
@@ -111,7 +112,7 @@ def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
     ln = {"w": (None,), "b": (None,)}
     enc = {"attn": attn, "ln_attn": ln, "mlp": mlp, "ln_mlp": ln}
     dec = enc | {"xattn": attn, "ln_xattn": ln}
-    stack = lambda blk: jax.tree.map(lambda s: (None,) + s, blk,
+    stack = lambda blk: tree_map(lambda s: (None,) + s, blk,
                                      is_leaf=lambda x: isinstance(x, tuple))
     return {"embed": ("model", fsdp), "encoder": stack(enc),
             "decoder": stack(dec), "ln_enc": ln, "ln_dec": ln}
@@ -261,7 +262,7 @@ def decode_step(params, cfg, token, cache, pos):
 
     def blk(i, carry):
         h, kc_all, vc_all = carry
-        bp = jax.tree.map(
+        bp = tree_map(
             lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
             params["decoder"])
         kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, keepdims=False)

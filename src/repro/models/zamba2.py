@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import tree_map
 from ..configs.base import SSMConfig
 from ..distributed.sharding import (hint_residual, padded_heads,
                                     padded_vocab, shard_hint)
@@ -106,7 +107,7 @@ def param_specs(cfg, fsdp=None, tp: int = 16) -> dict:
     }
     return {
         "embed": ("model", fsdp),
-        "blocks": jax.tree.map(lambda sp: (None,) + sp, mamba,
+        "blocks": tree_map(lambda sp: (None,) + sp, mamba,
                                is_leaf=lambda x: isinstance(x, tuple)),
         "shared": shared,
         "final_norm": (None,),
@@ -219,10 +220,10 @@ def forward(params, cfg, tokens, remat: bool = False):
 
     # n_shared pattern units of (k mamba + shared attn), then the tail.
     n_pattern_layers = n_shared * k
-    head_stack = jax.tree.map(lambda a: a[:n_pattern_layers]
+    head_stack = tree_map(lambda a: a[:n_pattern_layers]
                               .reshape((n_shared, k) + a.shape[1:]),
                               params["blocks"])
-    tail_stack = jax.tree.map(lambda a: a[n_pattern_layers:],
+    tail_stack = tree_map(lambda a: a[n_pattern_layers:],
                               params["blocks"])
 
     def unit_scan(h, bps):
@@ -298,7 +299,7 @@ def decode_step(params, cfg, token, state, pos):
         return h, (ssm_s, conv_t)
 
     n_pattern = n_shared * k
-    take = lambda a, lo, hi: jax.tree.map(lambda x: x[lo:hi], a)
+    take = lambda a, lo, hi: tree_map(lambda x: x[lo:hi], a)
     new_ssm, new_conv, new_k, new_v = [], [], [], []
     for u in range(n_shared):
         lo, hi = u * k, (u + 1) * k

@@ -15,6 +15,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import tree_map
+
 
 class ErrorFeedback(NamedTuple):
     buf: dict      # residual pytree (fp32), like grads
@@ -22,7 +24,7 @@ class ErrorFeedback(NamedTuple):
 
 def ef_init(grads_like) -> ErrorFeedback:
     return ErrorFeedback(
-        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+        tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
 
 
 def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -54,4 +56,4 @@ def compress_tree(grads, ef: ErrorFeedback):
 
 
 def decompress_tree(qs, scales, dtype=jnp.float32):
-    return jax.tree.map(lambda q, s: decompress_int8(q, s, dtype), qs, scales)
+    return tree_map(lambda q, s: decompress_int8(q, s, dtype), qs, scales)

@@ -12,6 +12,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import tree_map
+
 
 class AdamWState(NamedTuple):
     step: jax.Array          # scalar int32
@@ -23,8 +25,8 @@ def adamw_init(params) -> AdamWState:
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
-        mu=jax.tree.map(zeros, params),
-        nu=jax.tree.map(zeros, params),
+        mu=tree_map(zeros, params),
+        nu=tree_map(zeros, params),
     )
 
 
@@ -52,11 +54,11 @@ def adamw_update(params, grads, state: AdamWState, *,
         delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
 
-    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
-    new_params = jax.tree.map(lambda t: t[0], out,
+    out = tree_map(upd, params, grads, state.mu, state.nu)
+    new_params = tree_map(lambda t: t[0], out,
                               is_leaf=lambda x: isinstance(x, tuple))
-    new_mu = jax.tree.map(lambda t: t[1], out,
+    new_mu = tree_map(lambda t: t[1], out,
                           is_leaf=lambda x: isinstance(x, tuple))
-    new_nu = jax.tree.map(lambda t: t[2], out,
+    new_nu = tree_map(lambda t: t[2], out,
                           is_leaf=lambda x: isinstance(x, tuple))
     return new_params, AdamWState(step, new_mu, new_nu)

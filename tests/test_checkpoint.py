@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import tree_map
 from repro.distributed import checkpoint as ckpt
 
 
@@ -19,7 +20,7 @@ def _tree():
 def test_roundtrip(tmp_path):
     t = _tree()
     ckpt.save(str(tmp_path), 3, t)
-    like = jax.tree.map(lambda x: jnp.zeros_like(x), t)
+    like = tree_map(lambda x: jnp.zeros_like(x), t)
     r = ckpt.restore(str(tmp_path), 3, like)
     for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
         assert a.dtype == b.dtype
@@ -67,7 +68,7 @@ def test_async_checkpointer(tmp_path):
 def test_overwrite_same_step(tmp_path):
     t = _tree()
     ckpt.save(str(tmp_path), 7, t)
-    t2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.bfloat16 else x, t)
+    t2 = tree_map(lambda x: x + 1 if x.dtype != jnp.bfloat16 else x, t)
     ckpt.save(str(tmp_path), 7, t2)
     r = ckpt.restore(str(tmp_path), 7, t)
     np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t2["a"]))

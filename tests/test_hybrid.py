@@ -73,6 +73,26 @@ def test_vectorized_bit_identical_on_facade_suite():
         assert scalar.cmd_counts == vec.cmd_counts, label
 
 
+def test_vectorized_trace_identical_on_facade_suite():
+    """With emission on, scalar and lockstep runs must produce the SAME
+    command stream — every ACT/RD/WR/PRE/REF with its bank, SID, row,
+    timestamp and data window, not just aggregate counts."""
+    for label, kind, kwargs, txns in facade_trace_suite():
+        kwargs = dict(kwargs, emit_trace=True)
+        scalar = make_channel_sim(kind, **kwargs).run(txns)
+        vec, = run_channels(kind, kwargs, [txns])
+        assert scalar.trace is not None and len(scalar.trace) > 0, label
+        assert scalar.trace == vec.trace, label
+
+
+def test_trace_emission_off_by_default():
+    """emit_trace=False (the default) must leave SimResult.trace None —
+    the hook is zero-cost when off and nothing downstream can rely on a
+    trace it didn't ask for."""
+    label, kind, kwargs, txns = facade_trace_suite()[0]
+    assert make_channel_sim(kind, **kwargs).run(txns).trace is None
+
+
 def test_vectorized_multi_channel_matches_per_channel_runs():
     """Several channels advancing together in one lockstep batch must
     equal independent scalar runs of each channel's queue."""

@@ -1,0 +1,158 @@
+"""Repo-invariant AST lints: each rule fires on the pattern it names,
+stays quiet on the sanctioned alternative, and the tree itself is clean.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis.lints import (ALL_RULES, lint_paths, lint_source,
+                                  rules_for_path)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _rules(src: str) -> list[str]:
+    return [f.rule for f in lint_source(src)]
+
+
+# ---------------------------------------------------------------------------
+# jax-drift
+# ---------------------------------------------------------------------------
+
+def test_drifted_tree_map_flagged():
+    assert _rules("import jax\njax.tree.map(f, x)\n") == ["jax-drift"]
+    assert _rules("import jax\njax.tree_util.tree_map(f, x)\n") \
+        == ["jax-drift"]
+
+
+def test_drifted_mesh_apis_flagged():
+    assert _rules("import jax\njax.sharding.get_abstract_mesh()\n") \
+        == ["jax-drift"]
+    assert _rules("import jax\njax.make_mesh((2,), ('x',))\n") \
+        == ["jax-drift"]
+    assert _rules("import jax\njax.shard_map(f, mesh, a, b)\n") \
+        == ["jax-drift"]
+    assert "jax-drift" in _rules("sizes = dict(zip(m.axis_names, "
+                                 "m.axis_sizes))\n")
+
+
+def test_drifted_import_and_method_flagged():
+    assert _rules("from jax.tree_util import tree_map\n") == ["jax-drift"]
+    assert _rules("pltpu.TPUCompilerParams(x=1)\n") == ["jax-drift"]
+    assert _rules("c = compiled.cost_analysis()\n") == ["jax-drift"]
+
+
+def test_compat_spellings_not_flagged():
+    clean = ("from repro.compat import tree_map, active_mesh\n"
+             "tree_map(f, x)\nactive_mesh()\n")
+    assert _rules(clean) == []
+    # self-attribute access with a drifted *name* is not the JAX API
+    assert _rules("class A:\n"
+                  "    def f(self):\n"
+                  "        return self.axis_sizes\n") == []
+
+
+# ---------------------------------------------------------------------------
+# version-compare
+# ---------------------------------------------------------------------------
+
+def test_version_compare_flagged():
+    assert _rules("import jax\nok = jax.__version__ >= '0.5'\n") \
+        == ["version-compare"]
+    assert _rules("if __version__ < '2.0':\n    pass\n") \
+        == ["version-compare"]
+
+
+def test_version_use_without_compare_ok():
+    assert _rules("import jax\nprint(jax.__version__)\n") == []
+
+
+# ---------------------------------------------------------------------------
+# unseeded-random
+# ---------------------------------------------------------------------------
+
+def test_global_numpy_rng_flagged():
+    assert _rules("import numpy as np\nx = np.random.rand(3)\n") \
+        == ["unseeded-random"]
+    assert _rules("import numpy as np\nr = np.random.default_rng()\n") \
+        == ["unseeded-random"]
+
+
+def test_seeded_generator_ok():
+    assert _rules("import numpy as np\nr = np.random.default_rng(7)\n"
+                  "x = r.normal(size=3)\n") == []
+
+
+def test_stdlib_random_module_flagged_only_when_imported():
+    assert _rules("import random\nrandom.shuffle(xs)\n") \
+        == ["unseeded-random"]
+    # `random` here is a local object, not the module
+    assert _rules("random = make_rng()\nrandom.shuffle(xs)\n") == []
+
+
+# ---------------------------------------------------------------------------
+# mutable-default
+# ---------------------------------------------------------------------------
+
+def test_mutable_defaults_flagged():
+    assert _rules("def f(xs=[]):\n    pass\n") == ["mutable-default"]
+    assert _rules("def f(m={}, *, s=set()):\n    pass\n") \
+        == ["mutable-default"] * 2
+
+
+def test_none_default_ok():
+    assert _rules("def f(xs=None, n=3, s='a', t=()):\n    pass\n") == []
+
+
+# ---------------------------------------------------------------------------
+# pool-submit-closure
+# ---------------------------------------------------------------------------
+
+def test_lambda_to_submit_flagged():
+    assert _rules("pool.submit(lambda: 1)\n") == ["pool-submit-closure"]
+
+
+def test_nested_def_to_submit_flagged():
+    src = ("def outer(pool):\n"
+           "    def work():\n"
+           "        return 1\n"
+           "    return pool.submit(work)\n")
+    assert _rules(src) == ["pool-submit-closure"]
+
+
+def test_module_level_callable_to_submit_ok():
+    src = ("def work():\n"
+           "    return 1\n"
+           "def outer(pool):\n"
+           "    return pool.submit(work, 1)\n")
+    assert _rules(src) == []
+
+
+# ---------------------------------------------------------------------------
+# path scoping + whole-tree cleanliness
+# ---------------------------------------------------------------------------
+
+def test_rule_scoping_by_path():
+    assert "jax-drift" not in rules_for_path("src/repro/compat/tree.py")
+    assert "jax-drift" in rules_for_path("src/repro/models/layers.py")
+    assert "unseeded-random" in rules_for_path("src/repro/core/analytic.py")
+    assert "unseeded-random" in rules_for_path("src/repro/serve/replay.py")
+    assert "unseeded-random" not in rules_for_path("tests/test_lints.py")
+
+
+def test_syntax_error_reported_not_raised():
+    out = lint_source("def broken(:\n")
+    assert [f.rule for f in out] == ["syntax-error"]
+
+
+def test_repo_tree_is_lint_clean():
+    """The gate CI enforces: the whole checked tree has zero findings."""
+    findings = lint_paths(
+        REPO / p for p in ("src", "benchmarks", "scripts", "tests"))
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_all_rules_exercised_by_this_file():
+    assert set(ALL_RULES) == {"jax-drift", "version-compare",
+                              "unseeded-random", "mutable-default",
+                              "pool-submit-closure"}

@@ -1,0 +1,217 @@
+"""Timing-protocol sanitizer: injected violations fire exactly once,
+clean traces stay clean, and SystemSim sanitizer mode raises.
+
+The injected-violation tests hand-craft CmdRecord streams that are
+legal under every rule except the one under test — each must produce
+exactly ``{rule: 1}``, proving the checker neither misses the shaved
+constraint nor double-counts it through an overlapping rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.analysis import (TimingProtocolError, check_sim_result,
+                            checker_for_sim, conformance_report,
+                            policy_conformance)
+from repro.analysis.timing_checker import HBM4TraceChecker, RoMeTraceChecker
+from repro.core.sched import CmdRecord, facade_trace_suite, make_channel_sim
+from repro.core.system_sim import SystemSim, bulk_stream_extents
+from repro.core.timing import HBM4Timing, RoMeTiming, hbm4_config, rome_config
+
+T = HBM4Timing()
+RT = RoMeTiming()
+
+
+def _act(t, bank, row=1, pc=0):
+    return CmdRecord(t, "ACT", bank, pc, 0, row, -1.0, -1.0)
+
+
+def _rd(t, bank, row=1, pc=0, sid=0, data=None):
+    ds, de = data if data is not None else (t + T.tCL, t + T.tCL + 1.0)
+    return CmdRecord(t, "RD", bank, pc, sid, row, ds, de)
+
+
+def _pre(t, bank, pc=0):
+    return CmdRecord(t, "PRE", bank, pc, -1, -1, -1.0, -1.0)
+
+
+# ---------------------------------------------------------------------------
+# Injected violations, HBM4
+# ---------------------------------------------------------------------------
+
+def test_shaved_trp_fires_exactly_once():
+    """ACT re-opening a bank 1 ns before tRP elapses: one tRP hit."""
+    pre_t = T.tRAS + 4.0                     # > tRAS after ACT, > tRTP after RD
+    trace = [
+        _act(0.0, 0), _rd(T.tRCDRD, 0), _pre(pre_t, 0),
+        _act(pre_t + T.tRP - 1.0, 0),
+    ]
+    rep = HBM4TraceChecker(refresh=False).check(trace)
+    assert rep.counts == {"tRP": 1}, rep.summary()
+
+
+def test_tfaw_fifth_act_in_window_fires_exactly_once():
+    """5 ACTs to distinct banks in one PC inside tFAW: the 5th trips the
+    rolling 4-ACT window once (pairwise tRRD spacing is respected)."""
+    gap = T.tRRDS  # legal pairwise, 5 ACTs span 4*gap < tFAW
+    assert 4 * gap < T.tFAW
+    trace = [_act(i * gap, bank=i * 9) for i in range(5)]
+    rep = HBM4TraceChecker(refresh=False).check(trace)
+    assert rep.counts == {"tFAW": 1}, rep.summary()
+
+
+def test_cross_sid_tccdr_gap_fires_exactly_once():
+    """Back-to-back column bursts from different SIDs closer than tCCDR
+    (but legal under tCCDS, and in different bank groups so tCCDL does
+    not apply): one tCCDR hit."""
+    g = HBM4TraceChecker(refresh=False)
+    b0, b1 = 0, g.g.banks_per_group          # distinct bank groups, same pc
+    t0 = T.tRCDRD + 2.0
+    shaved = T.tCCDR - 1.0
+    assert shaved >= T.tCCDS
+    trace = [
+        _act(0.0, b0), _act(T.tRRDS, b1),
+        _rd(t0, b0, sid=0, data=(t0 + T.tCL, t0 + T.tCL + 0.5)),
+        _rd(t0 + shaved, b1, sid=1,
+            data=(t0 + shaved + T.tCL, t0 + shaved + T.tCL + 0.5)),
+    ]
+    rep = g.check(trace)
+    assert rep.counts == {"tCCDR": 1}, rep.summary()
+
+
+def test_overdue_refresh_fires_exactly_once():
+    """A trace spanning many tREFIpb periods with zero REF commands:
+    end-of-trace refresh debt past the postponement bound, flagged once."""
+    checker = HBM4TraceChecker(refresh=True, max_ref_postpone=8)
+    t_end = 13.0 * checker.ref_period        # debt 13 > bound 10
+    trace = [_act(0.0, 0), _rd(T.tRCDRD, 0),
+             _rd(t_end, 0, data=(t_end + T.tCL, t_end + T.tCL + 1.0))]
+    rep = checker.check(trace)
+    assert rep.counts == {"ref-postpone": 1}, rep.summary()
+
+
+def test_dq_overlap_and_row_state_detected():
+    """Two reads whose data windows overlap on one PC's bus, plus a read
+    to a row that is not the open one."""
+    t0 = T.tRCDRD + 1.0
+    trace = [
+        _act(0.0, 0, row=1),
+        _rd(t0, 0, row=1, data=(t0 + T.tCL, t0 + T.tCL + 4.0)),
+        _rd(t0 + T.tCCDL, 0, row=2,          # wrong row AND overlapping DQ
+            data=(t0 + T.tCCDL + T.tCL, t0 + T.tCCDL + T.tCL + 4.0)),
+    ]
+    rep = HBM4TraceChecker(refresh=False).check(trace)
+    assert rep.counts == {"row-state": 1, "dq-overlap": 1}, rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# Injected violations, RoMe
+# ---------------------------------------------------------------------------
+
+def _row(t, vba, op="RD_row", sid=0):
+    svc = RT.tWR_row if op == "WR_row" else RT.tRD_row
+    return CmdRecord(t, op, vba, 0, sid, 0, t + svc - 10.0, t + svc)
+
+
+def test_rome_cross_sid_gap_fires_exactly_once():
+    """Two reads to different VBAs from different SIDs closer than
+    tR2RR: one hit, named for the Table III parameter."""
+    trace = [_row(0.0, 0, sid=0), _row(RT.tR2RR - 1.0, 1, sid=1)]
+    rep = RoMeTraceChecker(refresh=False).check(trace)
+    assert rep.counts == {"tR2RR": 1}, rep.summary()
+
+
+def test_rome_same_vba_service_time_fires_exactly_once():
+    """A second access to the same VBA before tRD_row elapses, with an
+    intervener so the consecutive-pair rule alone would miss it. At the
+    stock Table III point two legal pair gaps already exceed tRD_row, so
+    the C/A gaps are scaled down to expose the VBA-busy rule on its own
+    (defense in depth against a policy that pipelines the C/A path but
+    forgets a VBA's service occupancy)."""
+    t = dataclasses.replace(RT, tR2RS=10.0)
+    trace = [_row(0.0, 0), _row(12.0, 1), _row(24.0, 0)]
+    assert 24.0 < t.tRD_row
+    rep = RoMeTraceChecker(t, refresh=False).check(trace)
+    assert rep.counts == {"tRD_row": 1}, rep.summary()
+
+
+def test_rome_ref_concurrency_cap_fires_exactly_once():
+    """Four refresh windows forced into flight at once: the MC has
+    max_concurrent_refreshing() = 3 refresh FSMs, so the 4th REF start
+    is flagged (C/A spacing of 2*tRREFpb is kept, so nothing else is)."""
+    checker = RoMeTraceChecker(refresh=False)
+    assert checker.ref_cap == 3
+    step = 2 * RT.tRREFpb
+    trace = [CmdRecord(i * step, "REF", i, 0, -1, -1, -1.0, -1.0)
+             for i in range(4)]
+    rep = checker.check(trace)
+    assert rep.counts == {"ref-concurrency": 1}, rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# Clean traces stay clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("label,kind,kwargs,txns", [
+    pytest.param(*t, id=t[0]) for t in facade_trace_suite()[:6]])
+def test_facade_traces_replay_clean(label, kind, kwargs, txns):
+    sim = make_channel_sim(kind, emit_trace=True, **kwargs)
+    rep = check_sim_result(sim, sim.run(txns), label)
+    assert rep.ok, rep.summary()
+    assert rep.n_commands > 0
+
+
+def test_policy_conformance_reduced_is_clean():
+    res = policy_conformance("rome_qd2", reduced=True)
+    assert res["clean"], res
+    assert res["n_commands"] > 0
+
+
+def test_conformance_report_shape():
+    rep = conformance_report(policies=["hbm4_frfcfs"], reduced=True)
+    assert rep["n_policies"] == 1 and rep["clean"], rep
+
+
+# ---------------------------------------------------------------------------
+# SystemSim sanitizer mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg_fn", [hbm4_config, rome_config])
+def test_system_sim_check_timing_clean(cfg_fn):
+    sim = SystemSim(cfg_fn(), n_channels=2, check_timing=True)
+    res = sim.run_extents(bulk_stream_extents(1 << 18, 8))
+    assert res.total_ns > 0
+    for r in res.channel_results.values():
+        assert r.trace is not None and len(r.trace) > 0
+
+
+def test_system_sim_sanitizer_raises_on_tampered_trace():
+    """A shaved PRE->ACT gap smuggled into a channel result must surface
+    as TimingProtocolError with the offending rule in the report."""
+    sim = SystemSim(hbm4_config(), n_channels=2, check_timing=True)
+    res = sim.run_extents(bulk_stream_extents(1 << 16, 4))
+    c, r = next(iter(res.channel_results.items()))
+    pre_t = T.tRAS + 4.0
+    r.trace.extend([
+        _act(1e9, 0), _rd(1e9 + T.tRCDRD, 0), _pre(1e9 + pre_t, 0),
+        _act(1e9 + pre_t + T.tRP - 1.0, 0),
+    ])
+    with pytest.raises(TimingProtocolError) as exc:
+        sim._sanitize(res.channel_results)
+    assert "tRP" in exc.value.report.counts
+
+
+def test_check_sim_result_requires_trace():
+    label, kind, kwargs, txns = facade_trace_suite()[0]
+    sim = make_channel_sim(kind, **kwargs)      # emission off
+    with pytest.raises(ValueError, match="emit_trace"):
+        check_sim_result(sim, sim.run(txns))
+
+
+def test_checker_for_sim_picks_family():
+    assert isinstance(checker_for_sim(make_channel_sim("hbm4")),
+                      HBM4TraceChecker)
+    assert isinstance(checker_for_sim(make_channel_sim("rome")),
+                      RoMeTraceChecker)
