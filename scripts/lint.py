@@ -4,8 +4,11 @@
 Usage:
     PYTHONPATH=src python scripts/lint.py [paths...]
 
-Defaults to the whole checked tree (src, benchmarks, scripts, tests).
-Exits 1 if any finding fires; prints ``path:line: [rule] message`` lines.
+Defaults to the whole checked tree (src, benchmarks, scripts, tests)
+plus the markdown docs (README.md, docs/, benchmarks/README.md), which
+get the doc rules: fenced ```python blocks must ast.parse, and every
+repo path a doc names must exist. Exits 1 if any finding fires; prints
+``path:line: [rule] message`` lines.
 """
 from __future__ import annotations
 
@@ -16,9 +19,10 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 
-from repro.analysis.lints import lint_paths  # noqa: E402
+from repro.analysis.lints import lint_docs, lint_paths  # noqa: E402
 
 DEFAULT_PATHS = ("src", "benchmarks", "scripts", "tests")
+DEFAULT_DOC_PATHS = ("README.md", "docs", "benchmarks")
 
 
 def main(argv=None) -> int:
@@ -26,9 +30,12 @@ def main(argv=None) -> int:
     ap.add_argument("paths", nargs="*", help="files or directories "
                     "(default: %s)" % " ".join(DEFAULT_PATHS))
     args = ap.parse_args(argv)
-    paths = [Path(p) for p in (args.paths or
-                               [REPO / p for p in DEFAULT_PATHS])]
+    explicit = [Path(p) for p in args.paths]
+    paths = explicit or [REPO / p for p in DEFAULT_PATHS]
+    doc_paths = explicit or [REPO / p for p in DEFAULT_DOC_PATHS]
     findings = lint_paths(p for p in paths if p.exists())
+    findings += lint_docs((p for p in doc_paths if p.exists()),
+                          repo_root=REPO)
     for f in findings:
         try:
             shown = f._replace(path=str(Path(f.path).relative_to(REPO)))

@@ -25,12 +25,25 @@ docs/compat.md) but nothing previously enforced:
     callables; closures die with an opaque pickling error at the first
     real fan-out.
 
+Markdown docs get their own two rules (:func:`lint_docs`, also wired
+into ``scripts/lint.py``):
+
+``doc-code-block``
+    Every fenced ```` ```python ```` block in ``README.md`` /
+    ``docs/*.md`` must ``ast.parse`` — documentation code that has
+    drifted into syntax errors is worse than none.
+``doc-path``
+    Every repo path a doc names (``src/...``, ``benchmarks/...``,
+    ``scripts/...``, ``docs/...``, ``tests/...``) must exist — stale
+    file pointers are how architecture docs rot.
+
 Use :func:`lint_paths` (or ``scripts/lint.py``). Findings carry
 (path, line, rule, message) and are deterministic and sorted.
 """
 from __future__ import annotations
 
 import ast
+import re
 from pathlib import Path
 from typing import Iterable, NamedTuple
 
@@ -97,6 +110,10 @@ _PY_RANDOM = {
 
 ALL_RULES = ("jax-drift", "version-compare", "unseeded-random",
              "mutable-default", "pool-submit-closure")
+
+#: Markdown-doc rules (separate from the Python AST rules above; see
+#: :func:`lint_docs`).
+DOC_RULES = ("doc-code-block", "doc-path")
 
 
 def _dotted(node: ast.AST) -> str | None:
@@ -303,4 +320,80 @@ def lint_paths(paths: Iterable[str | Path]) -> list[LintFinding]:
         rel = f.as_posix()
         findings.extend(
             lint_source(f.read_text(), rel, rules=rules_for_path(rel)))
+    return findings
+
+
+# -- markdown docs ----------------------------------------------------------
+
+_FENCE_RE = re.compile(r"^\s*```([A-Za-z0-9_+-]*)\s*$")
+
+#: Repo-relative path mentions a doc can make; extensions are limited to
+#: the kinds the repo actually tracks so prose like "x/y.z" can't
+#: misfire.
+_DOC_PATH_RE = re.compile(
+    r"\b(?:src|benchmarks|scripts|docs|tests)"
+    r"/[\w./-]*\.(?:py|md|sh|json|yml|yaml|txt)\b")
+
+
+def lint_doc_source(text: str, path: str = "<doc>",
+                    repo_root: str | Path | None = None
+                    ) -> list[LintFinding]:
+    """Lint one markdown document (:data:`DOC_RULES`).
+
+    Fenced ```` ```python ```` blocks must :func:`ast.parse` (findings
+    point at the offending line inside the block); with ``repo_root``
+    given, every repo-relative path mention — prose and code fences
+    alike — must exist on disk.
+    """
+    findings: list[LintFinding] = []
+    root = Path(repo_root) if repo_root is not None else None
+    fence_lang: str | None = None
+    block: list[str] = []
+    block_start = 0
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        m = _FENCE_RE.match(line)
+        if m and fence_lang is None:
+            fence_lang = m.group(1).lower()
+            block, block_start = [], lineno + 1
+            continue
+        if m:
+            if fence_lang in ("python", "py"):
+                try:
+                    ast.parse("\n".join(block), filename=path)
+                except SyntaxError as e:
+                    findings.append(LintFinding(
+                        path, block_start + (e.lineno or 1) - 1,
+                        "doc-code-block",
+                        f"python block does not parse: {e.msg}"))
+            fence_lang = None
+            continue
+        if fence_lang is not None:
+            block.append(line)
+        if root is not None:
+            for pm in _DOC_PATH_RE.finditer(line):
+                if not (root / pm.group(0)).exists():
+                    findings.append(LintFinding(
+                        path, lineno, "doc-path",
+                        f"doc names {pm.group(0)} but no such file "
+                        f"exists in the repo"))
+    return sorted(findings, key=lambda f: (f.line, f.rule))
+
+
+def lint_docs(paths: Iterable[str | Path],
+              repo_root: str | Path | None = None) -> list[LintFinding]:
+    """Lint ``.md`` files (recursing into directories); deterministic
+    order. ``repo_root`` anchors the ``doc-path`` existence checks (pass
+    the repo checkout root)."""
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+    findings: list[LintFinding] = []
+    for f in files:
+        findings.extend(
+            lint_doc_source(f.read_text(), f.as_posix(),
+                            repo_root=repo_root))
     return findings

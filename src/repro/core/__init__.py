@@ -25,7 +25,8 @@ from .sched import (ChannelSimCore, FRFCFSOpenPagePolicy,
                     policy_names, policy_spec, register_policy,
                     registered_policies, sequential_read_txns_hbm4,
                     sequential_read_txns_rome)
-from .system_sim import SystemResult, SystemSim, bulk_stream_extents
+from .system_sim import (SystemResult, SystemSim, WarmRunState,
+                         bulk_stream_extents)
 from .timing import (ChannelGeometry, CubeGeometry, HBM4Timing,
                      MemSystemConfig, RoMeTiming, hbm4_config, rome_config)
 from .vba import ADOPTED, ALL_VBA_CONFIGS, BankMode, PCMode, VBAConfig
@@ -47,7 +48,7 @@ __all__ = [
     "SimResult", "Txn",
     "sequential_read_txns_hbm4", "sequential_read_txns_rome",
     "interleaved_stream_txns_hbm4",
-    "SystemSim", "SystemResult", "bulk_stream_extents",
+    "SystemSim", "SystemResult", "WarmRunState", "bulk_stream_extents",
     "MCComplexity", "complexity_of_policy", "conventional_mc_complexity",
     "max_concurrent_refreshing", "registry_census", "rome_mc_complexity",
     "ChannelGeometry", "CubeGeometry", "HBM4Timing", "MemSystemConfig",

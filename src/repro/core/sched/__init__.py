@@ -56,11 +56,11 @@ from .registry import (FAMILIES, PolicySpec, policy_names, policy_spec,
 from .traces import (facade_trace_suite, hbm4_unit_location,
                      interleaved_stream_txns_hbm4, rome_unit_location,
                      sequential_read_txns_hbm4, sequential_read_txns_rome)
-from .vectorized import run_channels
+from .vectorized import advance_states, run_channels
 
 __all__ = [
     "ChannelSimCore", "ChannelRunState", "CmdRecord", "SimResult", "Txn",
-    "run_channels", "facade_trace_suite",
+    "run_channels", "advance_states", "facade_trace_suite",
     "SchedulerPolicy", "FRFCFSOpenPagePolicy", "FRFCFSWriteDrainPolicy",
     "HBM4ClosedPagePolicy", "HBM4SIDGroupPolicy", "RoMeRowPolicy",
     "HBM4ChannelSim", "HBM4ClosedPageChannelSim",

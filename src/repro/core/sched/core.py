@@ -152,7 +152,8 @@ class ChannelRunState:
 
     __slots__ = ("core", "policy", "pending", "finish", "counts",
                  "idx_in_finish", "period", "next_ref_t", "next_ref_unit",
-                 "ref_backlog", "now", "n_txns", "trace")
+                 "ref_backlog", "now", "n_txns", "trace", "_counts_base",
+                 "_trace_base")
 
     def __init__(self, core: "ChannelSimCore", txns: list[Txn]):
         pol = core.policy
@@ -178,10 +179,43 @@ class ChannelRunState:
         self.ref_backlog = 0
         self.now = 0.0
         self.n_txns = len(txns)
+        self._counts_base = None       # set by feed(): warm per-batch deltas
+        self._trace_base = 0           # trace length at the last feed()
 
     @property
     def finished(self) -> bool:
         return not self.pending
+
+    def feed(self, txns: list[Txn]) -> None:
+        """Load the next transaction batch into a *drained* state without
+        resetting any warm channel state.
+
+        This is the suspend/resume seam warm cross-step replay
+        (:meth:`SystemSim.run_steps` with ``warm=True``) is built on: the
+        policy FSMs (open rows, per-PC timing clocks), the refresh
+        governor (absolute due cadence, rotation unit, backlog) and the
+        event clock all carry over — only the queue, the finish array and
+        the per-batch command-count baseline are renewed. Arrivals are on
+        the same absolute clock as every previous batch; arrivals in a
+        gap after the last drain are reached through the normal
+        idle-advance, which issues the refreshes due *inside* the gap at
+        their own anchors. Feeding an undrained state is an error — the
+        single event loop cannot interleave two batches' accounting.
+        """
+        if self.pending:
+            raise RuntimeError(
+                f"feed() on an undrained channel: {len(self.pending)} of "
+                f"{self.n_txns} transactions outstanding")
+        order = sorted(range(len(txns)), key=lambda i: txns[i].arrival_ns)
+        ordered = [txns[i] for i in order]
+        self.idx_in_finish = {id(tx): order[k]
+                              for k, tx in enumerate(ordered)}
+        self.pending = _PendingQueue(ordered)
+        self.finish = np.zeros(len(txns))
+        self.n_txns = len(txns)
+        self._counts_base = dict(self.counts)
+        if self.trace is not None:
+            self._trace_base = len(self.trace)
 
     def advance(self, max_iters: int = 1) -> bool:
         """Execute up to ``max_iters`` event-loop iterations; returns True
@@ -261,14 +295,34 @@ class ChannelRunState:
         return not pending
 
     def result(self) -> SimResult:
+        """The drained batch's :class:`SimResult`. After a :meth:`feed`
+        the command counts are the *delta* since that feed and the trace
+        is the per-feed slice (``ref_backlog_max`` stays cumulative — it
+        is a high-water mark, not a counter), so warm step results stay
+        comparable with fresh per-step runs. Finish times are always on
+        the state's absolute clock."""
         if self.pending:
             raise RuntimeError(
                 f"channel not drained: {len(self.pending)} of "
                 f"{self.n_txns} transactions outstanding")
         bytes_moved = self.n_txns * self.policy.bytes_per_txn
+        counts, trace = self.counts, self.trace
+        if self._counts_base is not None:
+            base = self._counts_base
+            counts = {k: (v if k == "ref_backlog_max"
+                          else v - base.get(k, 0))
+                      for k, v in counts.items()}
+            if trace is not None:
+                trace = trace[self._trace_base:]
+        else:
+            # Snapshot: a later feed() keeps mutating the live dict/list,
+            # and the first batch's result must not grow with the session.
+            counts = dict(counts)
+            if trace is not None:
+                trace = trace[:]
         return SimResult(self.finish,
                          float(self.finish.max(initial=0.0)),
-                         bytes_moved, self.counts, trace=self.trace)
+                         bytes_moved, counts, trace=trace)
 
 
 class ChannelSimCore:

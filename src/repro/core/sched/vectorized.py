@@ -28,6 +28,21 @@ from .channels import make_channel_sim
 from .core import SimResult, Txn
 
 
+def advance_states(states, batch: int = 2048) -> None:
+    """Drain a set of live :class:`~.core.ChannelRunState`\\ s in lockstep
+    ``batch``-iteration slices (the same sweep loop as
+    :func:`run_channels`, over caller-owned states). This is the warm
+    cross-step driver: :class:`~repro.core.system_sim.WarmRunState` feeds
+    each step's transactions into persistent per-channel states and calls
+    this to drain them — channels share no state, so any interleaving of
+    ``advance`` calls is bit-identical to per-channel loops."""
+    live = np.array([not s.finished for s in states], dtype=bool)
+    while live.any():
+        for i in np.flatnonzero(live):
+            if states[i].advance(batch):
+                live[i] = False
+
+
 def run_channels(kind: str, kwargs: dict, txns_per_channel: list[list[Txn]],
                  batch: int = 2048) -> list[SimResult]:
     """Simulate every channel of a cube in lockstep batches.
@@ -41,12 +56,8 @@ def run_channels(kind: str, kwargs: dict, txns_per_channel: list[list[Txn]],
     n = len(txns_per_channel)
     states = [make_channel_sim(kind, **kwargs).start_run(txns)
               for txns in txns_per_channel]
-    live = np.array([not s.finished for s in states], dtype=bool)
-    while live.any():
-        for i in np.flatnonzero(live):
-            if states[i].advance(batch):
-                live[i] = False
+    advance_states(states, batch)
     return [states[i].result() for i in range(n)]
 
 
-__all__ = ["run_channels"]
+__all__ = ["run_channels", "advance_states"]

@@ -26,10 +26,13 @@ analytic model assumes, but measured. That independence also makes the
 simulation embarrassingly parallel: ``run(stream, workers=N)`` farms
 channels out to a process pool, which is what makes full-cube (32–36
 channel) cycle-level runs practical. :meth:`SystemSim.run_steps` extends
-that to serving traces: a list of per-decode-step streams simulated
-under per-step reset semantics (each step starts on an idle system —
-see its docstring for why that is the right contract), parallel over
-(step, channel) pairs.
+that to serving traces: a list of per-step streams simulated either
+under per-step **reset** semantics (the default — each step starts on an
+idle system, parallel over (step, channel) pairs) or, with
+``warm=True``, as one :class:`WarmRunState` session that carries channel
+state (open rows, queues, refresh debt) across steps — the contract
+chunked-prefill replays need once steps overlap (see the
+:meth:`run_steps` docstring and docs/serve_replay.md).
 """
 from __future__ import annotations
 
@@ -44,10 +47,16 @@ from .pool import get_pool
 from .sched import SimResult, Txn, make_channel_sim
 from .sched.channels import CHANNEL_SIM_KINDS
 from .sched.traces import hbm4_unit_location, rome_unit_location
-from .sched.vectorized import run_channels
+from .sched.vectorized import advance_states, run_channels
 from .timing import MemSystemConfig
 
 MODES = ("cycle", "analytic", "hybrid")
+
+#: Fraction of the above-threshold queue pressure a warm session carries
+#: into the next analytically priced step (see :class:`WarmRunState`):
+#: the backlog left at a step boundary is at most the over-threshold
+#: excess, and it decays geometrically as later steps absorb it.
+WARM_CARRY_FRAC = 0.5
 
 
 @dataclass
@@ -491,45 +500,78 @@ class SystemSim:
             queue_pressure=pressure,
         )
 
+    def warm_session(self) -> "WarmRunState":
+        """Open a warm cross-step session: a :class:`WarmRunState` whose
+        per-channel event-loop states persist across :meth:`WarmRunState
+        .step` calls (open rows, queues, refresh debt, absolute clock).
+        See :meth:`run_steps` for the warm-vs-reset contract."""
+        return WarmRunState(self)
+
     def run_steps(self, streams: "list[ExtentStream]",
                   workers: int = 1,
-                  starts_ns: "list[float] | None" = None
-                  ) -> "list[SystemResult]":
-        """Simulate a sequence of per-step streams (one serving decode
-        step each) with **per-step reset semantics**: every step starts
-        on an idle memory system — no row-buffer, queue, or refresh-debt
-        state carries over from the previous step. That is the modeling
-        contract of :mod:`repro.serve.replay`: decode steps are separated
-        by kernel-launch/compute gaps long enough (µs at real scale) that
-        open rows are precharged by refresh rotation and queues drain, so
-        warm cross-step state would not change makespans; what *is*
-        simulated is all intra-step contention between tenants.
+                  starts_ns: "list[float] | None" = None,
+                  warm: bool = False) -> "list[SystemResult]":
+        """Simulate a sequence of per-step streams (one serving step
+        each) under one of two cross-step contracts:
 
-        Each stream's arrivals are rebased to its step start — the
-        matching entry of ``starts_ns`` when given (pass each recorded
-        step's ``StepTrace.start_ns`` to reproduce a replay engine's
-        durations exactly, idle lead-in included), else the stream's
-        earliest arrival. A step's makespan is then directly its
-        duration. Because steps share no simulated state, ``workers >
-        1`` farms (step, channel) sims out to one process pool — the
-        batched path for re-simulating a recorded serve trace under
-        another policy, where no step-by-step clock feedback is needed.
+        **Reset semantics** (``warm=False``, the default): every step
+        starts on an idle memory system — no row-buffer, queue, or
+        refresh-debt state carries over from the previous step. For
+        decode-only replays that is a good model: decode steps are
+        separated by kernel-launch/compute gaps long enough (µs at real
+        scale) that open rows are precharged by refresh rotation and
+        queues drain; what *is* simulated is all intra-step contention
+        between tenants. Each stream's arrivals are rebased to its step
+        start — the matching entry of ``starts_ns`` when given (pass
+        each recorded step's ``StepTrace.start_ns`` to reproduce a
+        replay engine's durations exactly, idle lead-in included), else
+        the stream's earliest arrival. A step's makespan is then
+        directly its duration. Because steps share no simulated state,
+        ``workers > 1`` farms (step, channel) sims out to one process
+        pool — the batched path for re-simulating a recorded serve
+        trace under another policy, where no step-by-step clock
+        feedback is needed.
 
-        **Hybrid mode** classifies each step independently under the
-        same per-step reset contract: an uncontended step (modeled queue
-        pressure <= ``pressure_threshold``, or a decomposed transaction
-        count past ``max_cycle_txns``) is priced by the queue-window
-        model, a contended one runs through the cycle engine — both
-        against an idle system, exactly like every other step. No state
-        flows between steps in *any* mode, so mixing pricing engines
-        step-by-step cannot leak contention across a step boundary; each
-        returned :class:`SystemResult` is stamped with the ``mode`` it
-        took (:func:`hybrid_fraction` summarizes the split).
+        **Warm semantics** (``warm=True``): the whole sequence runs as
+        one :class:`WarmRunState` session on this sim's absolute clock —
+        per-channel event loops are suspended at each step boundary and
+        resumed with the next step's transactions, so open rows, queued
+        backlog and refresh debt carry over. This is the contract
+        chunked-prefill replays need: once a prefill burst can leave a
+        channel still draining at the step boundary, per-step reset
+        would silently forgive the backlog. On uncontended sequences
+        (queues drained, gaps long enough for state to quiesce) warm and
+        reset agree bit for bit (tests/test_warm_steps.py); on contended
+        ones warm can only finish later. Steps are causally ordered, so
+        the warm path is sequential — ``workers`` is ignored (suspended
+        event-loop states cannot cheaply round-trip a process pool).
+
+        **Hybrid mode** classifies each step by modeled queue pressure:
+        an uncontended step (pressure <= ``pressure_threshold``, or a
+        decomposed transaction count past ``max_cycle_txns``) is priced
+        by the queue-window model, a contended one runs through the
+        cycle engine. Under reset semantics both price against an idle
+        system and no state flows between steps in *any* mode, so mixing
+        pricing engines step-by-step cannot leak contention across a
+        step boundary. Under warm semantics the session threads a
+        carried-pressure correction through analytically priced steps
+        and real channel state through cycle-priced ones (see
+        :class:`WarmRunState`). Each returned :class:`SystemResult` is
+        stamped with the ``mode`` it took (:func:`hybrid_fraction`
+        summarizes the split).
         """
         if starts_ns is not None and len(starts_ns) != len(streams):
             raise ValueError(
                 f"starts_ns has {len(starts_ns)} entries for "
                 f"{len(streams)} streams")
+        if warm:
+            sess = self.warm_session()
+            out: "list[SystemResult]" = []
+            for i, s in enumerate(streams):
+                t0 = starts_ns[i] if starts_ns is not None else None
+                out.append(sess.step(s, start_ns=t0))
+            sess.check()
+            return out
 
         out: list[SystemResult | None] = [None] * len(streams)
         cycle_steps: list[tuple[int, float]] = []    # (step, pressure)
@@ -612,6 +654,162 @@ class SystemSim:
         return self.run(stream, workers=workers)
 
 
+class WarmRunState:
+    """A warm cross-step session over one :class:`SystemSim`.
+
+    Where :meth:`SystemSim.run_steps` (reset semantics) starts every step
+    on an idle system, a warm session keeps one suspended
+    :class:`~repro.core.sched.ChannelRunState` per loaded channel for its
+    whole lifetime and runs every step on the same **absolute clock**:
+
+    * **cycle-priced steps** feed the step's transactions (absolute
+      arrival times — no rebase) into the persistent per-channel states
+      via :meth:`~repro.core.sched.ChannelRunState.feed` and drain them
+      with the lockstep vectorized driver. Open rows, per-PC timing
+      clocks, queued backlog and refresh debt all carry over; a step's
+      duration is its channels' latest absolute finish minus the step
+      start, so backlog left by the previous step lands on this step's
+      makespan instead of being forgiven.
+    * **analytically priced steps** (hybrid/analytic modes) cannot carry
+      event-loop state — there is none — so the session threads a scalar
+      *carried-pressure* correction instead: each step is classified at
+      ``pressure_eff = pressure + carry`` and priced at ``floor + extra +
+      carry * floor``; afterwards ``carry = WARM_CARRY_FRAC * max(0,
+      pressure_eff - threshold)``. Below the classification threshold the
+      carry is exactly zero, so uncontended warm sequences price
+      bit-identically to reset mode; above it the correction is a
+      first-order, strictly-delaying model of the backlog a real warm
+      channel would still be draining. A step that drops into the cycle
+      engine resets the carry — the real channel state embodies it.
+
+    Steps must be supplied in clock order (non-decreasing starts); a
+    session is single-threaded by construction. With
+    ``SystemSim(check_timing=True)``, call :meth:`check` once after the
+    last step: it replays each channel's *cumulative* cross-step command
+    trace through the independent timing checker — strictly stronger
+    than per-step checks, since it also validates protocol spacing
+    across step boundaries.
+    """
+
+    def __init__(self, system: SystemSim):
+        self.system = system
+        self._kind, self._kwargs = system._sim_spec()
+        self._states: "dict[int, object]" = {}    # channel -> ChannelRunState
+        self._carry = 0.0
+        self._last_start = 0.0
+        self.n_steps = 0
+
+    @property
+    def carry(self) -> float:
+        """The carried-pressure correction pending for the next
+        analytically priced step (0.0 in pure cycle mode)."""
+        return self._carry
+
+    def step(self, stream: ExtentStream,
+             start_ns: float | None = None) -> SystemResult:
+        """Price/simulate one step on the session clock. ``start_ns``
+        is the step's start (defaults to the stream's earliest arrival);
+        the returned makespan is measured from it. Arrivals are
+        interpreted on the absolute session clock — never rebased."""
+        sys_ = self.system
+        start = (float(start_ns) if start_ns is not None
+                 else min((r.arrival_ns for r in stream), default=0.0))
+        if start < self._last_start:
+            raise ValueError(
+                f"warm steps must be clock-ordered: step start {start} ns "
+                f"precedes the previous step's start "
+                f"{self._last_start} ns")
+        self._last_start = start
+        self.n_steps += 1
+        if sys_.mode != "cycle":
+            feats = sys_._features(stream)
+            pressure_eff = sys_._pressure(feats) + self._carry
+            if sys_.mode == "analytic" or not sys_._use_cycle(feats,
+                                                              pressure_eff):
+                return self._analytic_step(feats, pressure_eff)
+            self._carry = 0.0
+            return self._cycle_step(stream, start, pressure_eff)
+        return self._cycle_step(stream, start, 0.0)
+
+    def _analytic_step(self, feats: dict,
+                       pressure_eff: float) -> SystemResult:
+        sys_ = self.system
+        floor = max(feats["base_ns"], feats["span_ns"])
+        extra = sys_._queue_params().predict_extra_ns(
+            feats["txns_gating"], feats["fine_txns_gating"],
+            feats["ext_gating"])
+        total = floor + extra + self._carry * floor
+        ch_bytes = feats["mc_channel_bytes"].astype(np.int64)
+        mx = ch_bytes.max(initial=0)
+        if mx == 0:
+            total, ch_finish = 0.0, np.zeros(sys_.amap.n_channels)
+        else:
+            ch_finish = total * (ch_bytes / mx)
+        self._carry = WARM_CARRY_FRAC * max(
+            0.0, pressure_eff - sys_._threshold())
+        return SystemResult(
+            total_ns=float(total),
+            bytes_moved=int(ch_bytes.sum()),
+            channel_bytes=ch_bytes,
+            channel_finish_ns=ch_finish,
+            channel_results={},
+            channel_txns={},
+            mode="analytic",
+            queue_pressure=pressure_eff,
+        )
+
+    def _cycle_step(self, stream: ExtentStream, start: float,
+                    pressure: float) -> SystemResult:
+        sys_ = self.system
+        items = sorted(sys_.decompose(stream).items())
+        stepped = []
+        for c, txns in items:
+            st = self._states.get(c)
+            if st is None:
+                st = make_channel_sim(
+                    self._kind, **self._kwargs).start_run(txns)
+                self._states[c] = st
+            else:
+                st.feed(txns)
+            stepped.append((c, st))
+        advance_states([st for _, st in stepped])
+        nch = sys_.amap.n_channels
+        ch_bytes = np.zeros(nch, dtype=np.int64)
+        ch_finish = np.zeros(nch)
+        results: "dict[int, SimResult]" = {}
+        for c, st in stepped:
+            r = st.result()
+            results[c] = r
+            ch_bytes[c] = r.bytes_moved
+            # Finish times are absolute; a step's duration is measured
+            # from its own start, so carried backlog shows up here.
+            ch_finish[c] = max(0.0, r.total_ns - start)
+        return SystemResult(
+            total_ns=float(ch_finish.max(initial=0.0)),
+            bytes_moved=int(ch_bytes.sum()),
+            channel_bytes=ch_bytes,
+            channel_finish_ns=ch_finish,
+            channel_results=results,
+            channel_txns=dict(items),
+            queue_pressure=pressure,
+        )
+
+    def check(self) -> None:
+        """Sanitizer pass for warm sessions: with ``check_timing=True``
+        on the underlying sim, replay every channel's cumulative
+        cross-step command trace through the independent timing checker
+        (no-op otherwise). Call once, after the last step."""
+        if not self.system.check_timing or not self._states:
+            return
+        full = {
+            c: SimResult(st.finish, float(st.now),
+                         st.n_txns * st.policy.bytes_per_txn,
+                         dict(st.counts), trace=st.trace)
+            for c, st in self._states.items()
+        }
+        self.system._sanitize(full)
+
+
 def hybrid_fraction(results: "list[SystemResult]") -> float:
     """Fraction of runs a hybrid SystemSim priced analytically (1.0 =
     every step took the fast path; 0.0 for an all-cycle run or an empty
@@ -635,5 +833,6 @@ def bulk_stream_extents(nbytes: int, n_extents: int = 1,
                        gap_bytes=gap_bytes).extents()
 
 
-__all__ = ["SystemSim", "SystemResult", "bulk_stream_extents",
-           "hybrid_fraction", "MODES"]
+__all__ = ["SystemSim", "SystemResult", "WarmRunState",
+           "bulk_stream_extents", "hybrid_fraction", "MODES",
+           "WARM_CARRY_FRAC"]

@@ -8,9 +8,15 @@ its own clock; one fleet-level
 :class:`~repro.serve.replay.arrivals.ArrivalProcess` generates requests;
 a pluggable :class:`~.router.Router` places (or rejects) each request at
 routing time. One shared hybrid :class:`~repro.core.system_sim.SystemSim`
-prices every replica's decode steps — replicas are homogeneous cubes and
-steps carry no cross-step simulator state, so a whole round of steps is
-priced in one batched call.
+prices every replica's decode steps — replicas are homogeneous cubes,
+and the fleet loop **explicitly opts into per-step reset semantics**
+(``warm=False`` on every :meth:`~repro.core.system_sim.SystemSim
+.run_steps` call): a whole round of steps can then be priced in one
+batched, order-free call. Warm cross-step state
+(:class:`~repro.core.system_sim.WarmRunState`) would force one
+sequential session per replica and serialize the round — for
+prefill-heavy studies that need it, run per-cube
+``ReplayEngine(warm=True)`` instead (docs/serve_replay.md).
 
 **Clock semantics.** Replica clocks advance independently; the fleet
 loop is a conservative round-based discrete-event simulation. Each
@@ -313,7 +319,16 @@ class ClusterSim:
                  recheck_every: int = 64,
                  max_steps: int = 20_000_000,
                  keep_sample_streams: int = 0,
+                 warm: bool = False,
                  **arrival_kw):
+        if warm:
+            raise NotImplementedError(
+                "ClusterSim prices whole fleet rounds in one batched "
+                "run_steps call and therefore opts into per-step reset "
+                "semantics; warm cross-step state would serialize every "
+                "round into per-replica sessions. For warm (prefill-"
+                "aware) studies run a per-cube ReplayEngine(warm=True) — "
+                "see docs/serve_replay.md.")
         from ...configs.paper_workloads import PAPER_WORKLOADS, SERVING_MIXES
         from ...core.sched.registry import policy_spec
         from ...perfmodel.accelerator import scaled_accelerator
@@ -390,10 +405,14 @@ class ClusterSim:
                 continue
             stepping = [i for t, i in live if na is None or t < na]
             traces = [(i, reps[i].begin_step()) for i in stepping]
+            # warm=False by contract: rounds mix steps of *different*
+            # replicas, so carrying channel state across the batch would
+            # couple cubes that share no hardware (module docstring).
             results = self.system.run_steps(
                 [st.stream for _, st in traces],
                 workers=self.workers,
-                starts_ns=[st.start_ns for _, st in traces])
+                starts_ns=[st.start_ns for _, st in traces],
+                warm=False)
             completions: list[tuple[float, int]] = []
             for (i, st), res in zip(traces, results):
                 dur = res.total_ns + self.overhead_ns

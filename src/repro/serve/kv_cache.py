@@ -125,6 +125,32 @@ class RowPagedKVCache:
         self.seq_lens[seq_id] = pos + 1
         return int(self.page_table[seq_id, page_idx]), slot
 
+    def append_chunk(self, seq_id: int,
+                     n_tokens: int) -> list[tuple[int, int, int]]:
+        """Account ``n_tokens`` appended tokens in bulk (a prefill
+        chunk); returns the contiguous (page_id, first_slot, n_slots)
+        runs they landed in. Pages are grabbed lazily like
+        :meth:`append_token`; runs never straddle a page, so every run
+        is a row-aligned write target."""
+        runs: list[tuple[int, int, int]] = []
+        pos = int(self.seq_lens[seq_id])
+        remaining = int(n_tokens)
+        while remaining > 0:
+            page_idx, slot = divmod(pos, self.page_tokens)
+            if page_idx >= self.max_pages_per_seq:
+                raise ValueError("sequence exceeds max_pages_per_seq")
+            if self.page_table[seq_id, page_idx] < 0:
+                if not self._free:
+                    raise MemoryError("KV pool exhausted")
+                self.page_table[seq_id, page_idx] = self._free.pop()
+            take = min(remaining, self.page_tokens - slot)
+            runs.append((int(self.page_table[seq_id, page_idx]), slot,
+                         take))
+            pos += take
+            remaining -= take
+        self.seq_lens[seq_id] = pos
+        return runs
+
     def free_seq(self, seq_id: int) -> None:
         for i in range(self.max_pages_per_seq):
             p = self.page_table[seq_id, i]
@@ -181,6 +207,25 @@ class RowPagedKVCache:
             ExtentRecord(self.page_addr(page_id, base_addr, pool)
                          + slot * per_tok, per_tok, "write",
                          arrival_ns, seq_id)
+            for pool in ("k", "v"))
+
+    def append_chunk_stream(self, seq_id: int, n_tokens: int,
+                            base_addr: int = 0,
+                            arrival_ns: float = 0.0) -> ExtentStream:
+        """Account one prefill chunk (side effect — see
+        :meth:`append_chunk`) and return its K/V write records,
+        coalesced to one record per page run per pool: the prefill
+        kernel writes each page's K (and V) slots as one sequential
+        burst, which on row-paged storage is a row-granular write —
+        exactly the traffic shape RoMe prices at one transaction."""
+        per_tok = (self.n_kv_heads * self.head_dim
+                   * jnp.dtype(self.dtype).itemsize)
+        runs = self.append_chunk(seq_id, n_tokens)
+        return ExtentStream(
+            ExtentRecord(self.page_addr(page_id, base_addr, pool)
+                         + slot * per_tok, n_slots * per_tok, "write",
+                         arrival_ns, seq_id)
+            for page_id, slot, n_slots in runs
             for pool in ("k", "v"))
 
     def append_stream(self, seq_id: int, base_addr: int = 0,

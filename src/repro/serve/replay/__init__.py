@@ -24,12 +24,26 @@ test. The per-slot KV gather/append group is paced like the op that
 *follows* the weight slice (``kv_offset_ns`` = the chain's roofline
 span): tenants contend with each other inside that window, and the
 construction stays in the serialized-group regime where the analytic
-TPOT model is valid. Steps run under **per-step reset** semantics
-(:meth:`SystemSim.run_steps`): launch/compute gaps between real decode
-steps drain queues and close rows, so no warm channel state is carried.
+TPOT model is valid. With ``prefill_chunk_tokens`` set, **prefill is
+simulated too**: each prompt streams through the memory system in
+chunks (chunk-attention prefix reads + row-granular K/V page appends),
+either packed into the concurrent decode step (packing-prefetch,
+``prefill_overlap=True``) or claiming dedicated prefill steps that
+stall decode (``prefill_overlap=False``).
 
-*Analytic / not simulated:* prefill (admission allocates the prompt's
-KV pages instantly — TTFT measures queue wait + first decode step, not
+Steps run under **per-step reset** semantics by default
+(:meth:`SystemSim.run_steps`): launch/compute gaps between real decode
+steps drain queues and close rows, so no warm channel state needs to be
+carried. Once chunked prefill can leave channels draining at a step
+boundary that assumption breaks — pass ``warm=True``
+(:meth:`SystemSim.warm_session`) to carry open rows, queues, and
+refresh debt across steps. Warm and reset are asserted bit-identical on
+uncontended step sequences (tests/test_warm_steps.py); see
+docs/serve_replay.md for the full contract.
+
+*Analytic / not simulated:* prefill **in legacy mode only**
+(``prefill_chunk_tokens=None``: admission allocates the prompt's KV
+pages instantly — TTFT measures queue wait + first decode step, not
 prompt compute), token sampling (outputs are length-only), and per-step
 kernel launch overhead (the ``overhead_ns`` knob). Byte scaling follows
 ``perfmodel.tpot.xval_decode_stream``: shapes and row alignment are

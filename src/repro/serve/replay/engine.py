@@ -1,15 +1,19 @@
 """Replay recorded serve traffic through SystemSim; fold makespans into
 request timelines.
 
-:class:`ReplayEngine` runs the closed loop: at each decode step it asks
-the :class:`~.recorder.ServeTraceRecorder` for the step's multi-tenant
+:class:`ReplayEngine` runs the closed loop: at each step it asks the
+:class:`~.recorder.ServeTraceRecorder` for the step's multi-tenant
 extent stream, simulates it on the configured
-:class:`~repro.core.system_sim.SystemSim` (per-step reset semantics —
-see :meth:`SystemSim.run_steps`), and advances the replay clock by the
-measured makespan. Because admission windows depend on the clock, the
-recorded trace is *policy-dependent*: a slower memory system admits
-later and queues longer, which is exactly the SLO-level effect RoMe's
-bandwidth claim has to cash out as.
+:class:`~repro.core.system_sim.SystemSim` — under per-step reset
+semantics by default, or carrying channel state across steps with
+``warm=True`` (a :meth:`SystemSim.warm_session`; see that docstring for
+the contract) — and advances the replay clock by the measured makespan.
+Warm replay is the right mode once chunked prefill is on: a prefill
+burst can leave channels still draining at the step boundary, and only
+a warm session charges that backlog to the next step. Because admission
+windows depend on the clock, the recorded trace is *policy-dependent*:
+a slower memory system admits later and queues longer, which is exactly
+the SLO-level effect RoMe's bandwidth claim has to cash out as.
 
 Step duration = memory makespan + ``overhead_ns``. Weight-read arrival
 pacing inside the step already carries the compute/roofline serialization
@@ -39,6 +43,7 @@ class RequestReport:
     prompt_len: int
     max_new_tokens: int
     admitted_ns: float = -1.0
+    prefill_done_ns: float = -1.0   # last prompt chunk landed (chunked only)
     first_token_ns: float = -1.0
     completed_ns: float = -1.0
     n_out: int = 0
@@ -66,6 +71,7 @@ class StepSummary:
     bytes_moved: int      # MC-granularity bytes the sim moved (overfetch in)
     stream_bytes: int     # request-side bytes of the step's extent stream
     mode: str = "cycle"   # pricing path the SystemSim took for this step
+    kind: str = "decode"  # "decode" | "prefill" | "mixed" (StepTrace.kind)
 
 
 @dataclass
@@ -127,6 +133,8 @@ class ReplayResult:
             "bytes_moved": int(sum(s.bytes_moved for s in self.steps)),
             "stream_bytes": int(sum(s.stream_bytes for s in self.steps)),
             "hybrid_fraction": round(self.hybrid_fraction, 4),
+            "n_prefill_steps": sum(s.kind == "prefill" for s in self.steps),
+            "n_mixed_steps": sum(s.kind == "mixed" for s in self.steps),
         }
         for name, vals in (("ttft", self.ttfts_ns), ("tpot", self.tpots_ns)):
             for k, v in self.percentiles(vals).items():
@@ -143,22 +151,30 @@ class ReplayEngine:
     (stream included) on the result — the hook for conservation checks
     and for re-simulating the same trace open-loop under another policy
     via :meth:`SystemSim.run_steps`.
+
+    ``warm=True`` prices the whole replay as one warm cross-step session
+    (:meth:`SystemSim.warm_session`): channel state — open rows, queued
+    backlog, refresh debt — persists between steps, and any backlog a
+    step leaves lands on the next step's duration. Reset (the default)
+    remains the cheap decode-only contract.
     """
 
     def __init__(self, recorder: ServeTraceRecorder, system: SystemSim,
                  overhead_ns: float = 0.0, keep_traces: bool = False,
-                 max_steps: int = 100_000):
+                 max_steps: int = 100_000, warm: bool = False):
         self.recorder = recorder
         self.system = system
         self.overhead_ns = overhead_ns
         self.keep_traces = keep_traces
         self.max_steps = max_steps
+        self.warm = warm
 
     def run(self) -> ReplayResult:
         rec = self.recorder
         reports: dict[int, RequestReport] = {}
         steps: list[StepSummary] = []
         traces: list[StepTrace] = []
+        session = self.system.warm_session() if self.warm else None
         now = 0.0
         while not rec.drained():
             for req in rec.submit_due(now):
@@ -176,11 +192,18 @@ class ReplayEngine:
             # start_ns rebases lazily: analytic steps are priced on the
             # recorded stream itself (features are shift-invariant), so
             # the hybrid fast path never copies GB-scale step streams.
-            res = self.system.run(st.stream, start_ns=now)
+            # A warm session never rebases at all — the recorded stream
+            # is already on the session's absolute clock.
+            if session is not None:
+                res = session.step(st.stream, start_ns=now)
+            else:
+                res = self.system.run(st.stream, start_ns=now)
             dur = res.total_ns + self.overhead_ns
             end = now + dur
             for rid in st.admitted:
                 reports[rid].admitted_ns = now
+            for rid in st.prefill_done:
+                reports[rid].prefill_done_ns = end
             for rid in st.active:
                 rep = reports[rid]
                 rep.n_out += 1
@@ -192,7 +215,7 @@ class ReplayEngine:
             steps.append(StepSummary(st.index, now, dur, len(st.active),
                                      res.bytes_moved,
                                      st.stream.total_bytes,
-                                     mode=res.mode))
+                                     mode=res.mode, kind=st.kind))
             if self.keep_traces:
                 traces.append(st)
             now = end
@@ -200,6 +223,8 @@ class ReplayEngine:
                 raise RuntimeError(
                     f"replay exceeded max_steps={self.max_steps}; "
                     f"offered load too high for the pool/slots?")
+        if session is not None:
+            session.check()
         return ReplayResult(
             requests=[reports[rid] for rid in sorted(reports)],
             steps=steps,
@@ -223,6 +248,9 @@ def build_replay(workload: str = "deepseek-v3",
                  overhead_ns: float = 0.0,
                  mix=None,
                  sim_mode: str = "cycle",
+                 warm: bool = False,
+                 prefill_chunk_tokens: int | None = None,
+                 prefill_overlap: bool = True,
                  **arrival_kw):
     """Wire a complete replay for one (workload, policy, load) cell.
 
@@ -248,6 +276,13 @@ def build_replay(workload: str = "deepseek-v3",
     and the KV pool base auto-raises past the unscaled slice's end (the
     recorder rejects aliasing layouts otherwise). ``sim_mode`` is passed
     straight to :meth:`PolicySpec.system_sim` as the SystemSim ``mode``.
+
+    ``prefill_chunk_tokens`` turns on chunked prefill (real prefill
+    extents through the memory system; see
+    :class:`~.recorder.ServeTraceRecorder`), ``prefill_overlap``
+    selects packing-prefetch vs prefill-priority stalls, and ``warm``
+    prices the replay as one warm cross-step session — the recommended
+    trio for prefill studies (benchmarks/serve_trace.py).
     """
     from ...configs.paper_workloads import PAPER_WORKLOADS, SERVING_MIXES
     from ...core.sched.registry import policy_spec
@@ -274,10 +309,12 @@ def build_replay(workload: str = "deepseek-v3",
                               **arrival_kw)
     recorder = ServeTraceRecorder(arrivals, cache, weight_stream=ws,
                                   kv_offset_ns=chain_ns,
-                                  kv_base_addr=kv_base)
+                                  kv_base_addr=kv_base,
+                                  prefill_chunk_tokens=prefill_chunk_tokens,
+                                  prefill_overlap=prefill_overlap)
     system = spec.system_sim(n_channels=n_channels, mode=sim_mode)
     engine = ReplayEngine(recorder, system, overhead_ns=overhead_ns,
-                          keep_traces=keep_traces)
+                          keep_traces=keep_traces, warm=warm)
     return engine, acc
 
 

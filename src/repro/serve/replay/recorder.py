@@ -13,7 +13,17 @@ decode step at a time, and emits each step as one multi-tenant
 * **KV reads** — one whole-page :meth:`~RowPagedKVCache.read_stream`
   per active slot, retagged with the request id;
 * **KV appends** — one :meth:`~RowPagedKVCache.append_stream` per
-  active slot (the decoded token's K/V write), retagged likewise.
+  active slot (the decoded token's K/V write), retagged likewise;
+* **prefill extents** (``prefill_chunk_tokens`` set) — per prefill
+  chunk, the chunk-attention *prefix read* (whole-page reads of the
+  context prefilled so far) plus the chunk's prompt-scale K/V appends
+  coalesced to row-granular page runs
+  (:meth:`~RowPagedKVCache.append_chunk_stream`). With
+  ``prefill_overlap=True`` (packing-prefetch) the chunk's fetch is
+  packed into the concurrent decode step's stream — hidden under the
+  decode compute window; with ``prefill_overlap=False`` a pending chunk
+  claims a dedicated prefill-only step and decode stalls for its
+  duration (classic prefill-priority alternation).
 
 The negative-vs-nonnegative stream-id split is the tagging contract:
 consumers can always separate weight traffic from request traffic, and
@@ -102,7 +112,7 @@ def make_kv_cache(n_slots: int, max_seq_tokens: int,
 
 @dataclass(frozen=True)
 class StepTrace:
-    """One recorded decode step."""
+    """One recorded step (decode, prefill, or both)."""
 
     index: int                     # batcher step index (0-based)
     start_ns: float                # step start on the replay clock
@@ -110,6 +120,9 @@ class StepTrace:
     admitted: tuple[int, ...]      # rids admitted at this step's start
     active: tuple[int, ...]        # rids that decoded this step
     finished: tuple[int, ...]      # rids that produced their last token
+    prefilled: tuple = ()          # (rid, n_tokens) prefill chunks packed
+    prefill_done: tuple = ()       # rids whose prompt completed this step
+    kind: str = "decode"           # "decode" | "prefill" | "mixed"
 
 
 class ServeTraceRecorder:
@@ -127,7 +140,9 @@ class ServeTraceRecorder:
                  n_slots: int | None = None,
                  weight_stream: ExtentStream = ExtentStream(),
                  kv_offset_ns: float = 0.0,
-                 kv_base_addr: int = KV_BASE_ADDR):
+                 kv_base_addr: int = KV_BASE_ADDR,
+                 prefill_chunk_tokens: int | None = None,
+                 prefill_overlap: bool = True):
         n_slots = cache.max_seqs if n_slots is None else n_slots
         if n_slots > cache.max_seqs:
             raise ValueError(
@@ -145,7 +160,10 @@ class ServeTraceRecorder:
         self.weight_stream = weight_stream
         self.kv_offset_ns = kv_offset_ns
         self.kv_base_addr = kv_base_addr
-        self.batcher = ContinuousBatcher(n_slots, admit=self._admit)
+        self.prefill_overlap = prefill_overlap
+        self.batcher = ContinuousBatcher(
+            n_slots, admit=self._admit,
+            prefill_chunk_tokens=prefill_chunk_tokens)
         self.requests: dict[int, Request] = {}
         self.specs: dict[int, RequestSpec] = {}
         self._committed_pages = 0          # worst-case pages of live reqs
@@ -200,52 +218,91 @@ class ServeTraceRecorder:
     # -- one decode step -----------------------------------------------------
 
     def step(self, now_ns: float) -> StepTrace | None:
-        """Run one scheduling iteration + decode step at ``now_ns``.
+        """Run one scheduling iteration + step at ``now_ns``.
 
         Returns the recorded :class:`StepTrace`, or None when no request
         is active (the caller should jump the clock to the next arrival).
-        Per active slot the emitted order is read-then-append: the
+        Per decoding slot the emitted order is read-then-append: the
         attention gather sees the pre-append sequence length, the decoded
         token's K/V write lands after it. All slots' KV groups arrive at
         ``now + kv_offset_ns`` — with the offset set to the weight
         chain's span (:func:`weight_step_stream`), the gather behaves
         like the op following the slice; tenants still contend with each
         other inside that window.
+
+        With chunked prefill enabled, each step also carries up to one
+        prefill pack (chunk-attention prefix reads + coalesced K/V page
+        appends per chunk, at the same KV window). Under
+        ``prefill_overlap=True`` the pack rides in the decode step
+        (packing-prefetch: the fetch hides under the decode window);
+        under ``prefill_overlap=False`` a pending pack claims the whole
+        step and decode stalls (``kind="prefill"``). Either way a chunk
+        committed during step *i* makes its request decode-eligible at
+        step *i + 1*.
         """
         admitted = []
+        chunked = self.batcher.prefill_chunk_tokens is not None
         for slot, req in self.batcher.schedule():
             # Pages were reserved in _admit; allocating the prompt here
-            # can therefore never exhaust the pool.
-            self.cache.alloc_seq(slot, req.prompt_len)
+            # can therefore never exhaust the pool. Chunked prefill
+            # starts the sequence empty — its pages arrive chunk by
+            # chunk through append_chunk_stream.
+            self.cache.alloc_seq(slot, 0 if chunked else req.prompt_len)
             admitted.append(req.rid)
         active = [(slot, req) for slot, req in enumerate(self.batcher.active)
                   if req is not None]
         if not active:
             return None
+        pack = self.batcher.prefill_pack()
+        prefill_only = bool(pack) and not self.prefill_overlap
         index = self.batcher.steps
         streams = [self.weight_stream.shifted(now_ns)] \
             if self.weight_stream else []
         kv_ns = now_ns + self.kv_offset_ns
         slot_of = {}
+        decoding = []
         for slot, req in active:
             slot_of[req.rid] = slot
+            if prefill_only or not req.prefill_done:
+                continue
+            decoding.append(req.rid)
             streams.append(
                 self.cache.read_stream(slot, self.kv_base_addr,
                                        arrival_ns=kv_ns).retagged(req.rid)
                 + self.cache.append_stream(slot, self.kv_base_addr,
                                            arrival_ns=kv_ns)
                 .retagged(req.rid))
+        for slot, req, n in pack:
+            # Chunk attention reads the context prefilled so far (empty
+            # on the first chunk), then the chunk's K/V lands as
+            # row-granular page runs.
+            streams.append(
+                (self.cache.read_stream(slot, self.kv_base_addr,
+                                        arrival_ns=kv_ns)
+                 + self.cache.append_chunk_stream(slot, n,
+                                                  self.kv_base_addr,
+                                                  arrival_ns=kv_ns))
+                .retagged(req.rid))
         stream = ExtentStream.interleave(streams)
         finished = self.batcher.record_tokens(
-            np.zeros(self.batcher.n_slots, np.int32))
+            np.zeros(self.batcher.n_slots, np.int32),
+            decode=not prefill_only)
+        prefill_done = self.batcher.apply_prefill(pack)
         for req in finished:
             self.cache.free_seq(slot_of[req.rid])
             self._committed_pages -= self._worst_pages.pop(req.rid)
+        if not decoding:
+            kind = "prefill"       # decode stalled or nothing decodable
+        else:
+            kind = "mixed" if pack else "decode"
         return StepTrace(
             index=index, start_ns=now_ns, stream=stream,
             admitted=tuple(admitted),
-            active=tuple(req.rid for _, req in active),
-            finished=tuple(req.rid for req in finished))
+            active=tuple(decoding),
+            finished=tuple(req.rid for req in finished),
+            prefilled=tuple((req.rid, n) for _, req, n in pack),
+            prefill_done=tuple(req.rid for req in prefill_done),
+            kind=kind)
 
     def idle(self) -> bool:
         """No queued or active work (arrivals may still be pending)."""

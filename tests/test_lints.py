@@ -156,3 +156,51 @@ def test_all_rules_exercised_by_this_file():
     assert set(ALL_RULES) == {"jax-drift", "version-compare",
                               "unseeded-random", "mutable-default",
                               "pool-submit-closure"}
+
+
+# ---------------------------------------------------------------------------
+# docs lints (doc-code-block / doc-path)
+# ---------------------------------------------------------------------------
+
+def _doc_rules(text: str) -> list[str]:
+    from repro.analysis.lints import lint_doc_source
+    return [f.rule for f in lint_doc_source(text, "docs/x.md",
+                                            repo_root=REPO)]
+
+
+def test_doc_python_fence_must_parse():
+    bad = "# t\n\n```python\ndef broken(:\n```\n"
+    assert _doc_rules(bad) == ["doc-code-block"]
+    good = "# t\n\n```python\nx = 1\n```\n"
+    assert _doc_rules(good) == []
+
+
+def test_doc_fence_line_numbers_point_into_block():
+    from repro.analysis.lints import lint_doc_source
+    text = "line1\n\n```python\nok = 1\ndef broken(:\n```\n"
+    (f,) = lint_doc_source(text, "docs/x.md", repo_root=REPO)
+    assert f.rule == "doc-code-block" and f.line == 5
+
+
+def test_doc_named_paths_must_exist():
+    assert _doc_rules("see src/repro/core/system_sim.py\n") == []
+    assert _doc_rules("see src/repro/not_a_module.py\n") == ["doc-path"]
+    # paths inside bash fences are checked too (verify commands!)
+    assert _doc_rules("```bash\npython scripts/nonexistent.py\n```\n") \
+        == ["doc-path"]
+    # non-python fences are not parsed as python
+    assert _doc_rules("```bash\ndef broken(:\n```\n") == []
+
+
+def test_repo_docs_are_lint_clean():
+    from repro.analysis.lints import lint_docs
+    findings = lint_docs((REPO / p for p in ("README.md", "docs",
+                                             "benchmarks")),
+                         repo_root=REPO)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_doc_rules_are_separate_from_ast_rules():
+    from repro.analysis.lints import DOC_RULES
+    assert set(DOC_RULES) == {"doc-code-block", "doc-path"}
+    assert not set(DOC_RULES) & set(ALL_RULES)

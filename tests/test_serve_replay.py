@@ -321,3 +321,114 @@ def test_low_load_tpot_matches_analytic_band():
         tpot = res.requests[0].tpot_ns
         if tpot is not None:
             assert tpot == pytest.approx(meas, rel=0.25)
+
+# --- chunked prefill ----------------------------------------------------------
+
+def _prefill_replay(policy="rome_qd2", overlap=True, warm=False, **kw):
+    base = dict(policy=policy, rate_rps=2e5, n_requests=6, seed=11,
+                keep_traces=True, prefill_chunk_tokens=8,
+                prefill_overlap=overlap, warm=warm)
+    base.update(kw)
+    return build_replay(**base)
+
+
+def test_chunked_prefill_kv_byte_conservation():
+    """With prefill simulated, every request's K/V footprint appears
+    exactly once across the recorded streams: prompt appends (coalesced
+    page runs) + one append per decoded token, and page-granular
+    reads only."""
+    eng, _ = _prefill_replay()
+    res = eng.run()
+    assert res.completed == 6
+    cache = eng.recorder.cache
+    pb, pt = cache.page_bytes, cache.page_tokens
+    per_tok = pb // pt
+    for r in res.requests:
+        recs = [rec for tr in res.traces
+                for rec in tr.stream.of_stream(r.rid)]
+        writes = sum(rec.nbytes for rec in recs if rec.is_write)
+        reads = [rec for rec in recs if not rec.is_write]
+        # prompt + decoded tokens, K and V pools, exactly once
+        assert writes == 2 * (r.prompt_len + r.n_out) * per_tok, r.rid
+        assert all(rec.nbytes % pb == 0 for rec in reads), r.rid
+
+
+def test_chunked_prefill_timeline_ordering():
+    """prefill_done_ns is stamped for every request and orders between
+    admission and first token."""
+    for overlap in (False, True):
+        eng, _ = _prefill_replay(overlap=overlap)
+        res = eng.run()
+        assert res.completed == 6
+        for r in res.requests:
+            assert r.prefill_done_ns >= r.admitted_ns >= r.arrival_ns
+            assert r.first_token_ns >= r.prefill_done_ns, r.rid
+
+
+def test_prefill_step_kinds_by_overlap_mode():
+    """Overlap packs prefill into decode steps (mixed kind); stall mode
+    claims dedicated prefill-only steps and never mixes."""
+    eng, _ = _prefill_replay(overlap=False)
+    res = eng.run()
+    kinds = {s.kind for s in res.steps}
+    assert "prefill" in kinds and "mixed" not in kinds
+    s = res.summary()
+    assert s["n_prefill_steps"] > 0 and s["n_mixed_steps"] == 0
+
+    eng, _ = _prefill_replay(overlap=True)
+    res = eng.run()
+    assert res.summary()["n_mixed_steps"] > 0
+    for tr, step in zip(res.traces, res.steps):
+        if step.kind == "mixed":
+            assert tr.prefilled and tr.active
+        elif step.kind == "prefill":
+            assert tr.prefilled and not tr.active
+
+
+def test_legacy_default_has_no_prefill_steps():
+    """prefill_chunk_tokens=None keeps the analytic-admission contract:
+    no prefill extents, no prefill/mixed steps, sentinel timestamps."""
+    eng, _ = build_replay(policy="rome_qd2", rate_rps=2e5, n_requests=4,
+                          seed=3)
+    res = eng.run()
+    s = res.summary()
+    assert s["n_prefill_steps"] == 0 and s["n_mixed_steps"] == 0
+    assert all(st.kind == "decode" for st in res.steps)
+    assert all(r.prefill_done_ns == -1.0 for r in res.requests)
+
+
+def test_prefill_pack_respects_budget_and_fifo():
+    """Batcher-level contract: packs never exceed the token budget, are
+    FIFO by admission, and apply_prefill flips decode eligibility only
+    once the whole prompt has landed."""
+    from repro.serve.batching import ContinuousBatcher, Request
+    b = ContinuousBatcher(n_slots=2, prefill_chunk_tokens=5)
+    b.submit(Request(rid=0, prompt=np.zeros(8, np.int32),
+                     max_new_tokens=2))
+    b.submit(Request(rid=1, prompt=np.zeros(3, np.int32),
+                     max_new_tokens=2))
+    b.schedule()
+    done_rids = []
+    for _ in range(8):
+        pack = b.prefill_pack()
+        if not pack:
+            break
+        assert sum(n for _, _, n in pack) <= 5
+        assert all(n > 0 for _, _, n in pack)
+        rids = [req.rid for _, req, n in pack]
+        assert rids == sorted(rids)                # FIFO by admission
+        b.record_tokens(np.zeros(b.n_slots, np.int32), decode=False)
+        done_rids += [r.rid for r in b.apply_prefill(pack)]
+    assert set(done_rids) == {0, 1}
+    assert all(r.prefill_done for r in b.active if r is not None)
+    with pytest.raises(ValueError):
+        ContinuousBatcher(n_slots=2, prefill_chunk_tokens=0)
+
+
+def test_warm_replay_deterministic_and_checked():
+    """warm=True engines run the whole trace as one WarmRunState session
+    (sanitizer on) and are bit-deterministic across repeats."""
+    a = _prefill_replay(warm=True)[0].run().summary()
+    b = _prefill_replay(warm=True)[0].run().summary()
+    assert a == b
+    assert a["completed"] == 6

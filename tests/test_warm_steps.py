@@ -1,0 +1,226 @@
+"""Warm cross-step sessions vs per-step reset (SystemSim.run_steps).
+
+The contract docs/serve_replay.md states and chunked-prefill replays
+rely on:
+
+* **bit-identity on uncontended sequences** — steps whose queues drain
+  and whose inter-step gaps let channel state quiesce must price
+  identically under ``warm=True`` and ``warm=False``. Exactness needs a
+  page policy with no cross-step row-buffer memory (closed-page HBM4,
+  RoMe's row-granular policy) and refresh off; open-page HBM4
+  legitimately differs (warm holds rows open across the gap, so a later
+  step's row miss pays a precharge the reset run never sees).
+* **warm never finishes earlier on contended sequences** — carried
+  backlog, refresh debt, and open-row state can only add time.
+* ``ChannelRunState.feed`` suspend/resume mechanics: refusing to feed
+  an undrained queue, per-feed result deltas, cumulative clock.
+* hybrid warm sessions: analytic steps agree with reset when the
+  carried-pressure correction is zero, and the carry is never negative.
+"""
+import numpy as np
+import pytest
+
+from _proptest import given, settings, strategies as st
+from repro.core.sched import advance_states, facade_trace_suite, \
+    make_channel_sim
+from repro.core.system_sim import WARM_CARRY_FRAC, SystemSim, WarmRunState
+from repro.core.timing import hbm4_config, rome_config
+from repro.workloads import ExtentRecord, ExtentStream, bulk_stream
+
+N_CHANNELS = 2
+GAP_NS = 50_000.0          # inter-step gap: far beyond any drain time
+
+
+def _step_stream(step: int, nbytes: int, row: int, start: float,
+                 with_write: bool = True) -> ExtentStream:
+    """One step's traffic at absolute time ``start``, in an address
+    window disjoint from every other step's (23-bit windows)."""
+    base = (step + 1) << 23
+    recs = [ExtentRecord(base, nbytes, "read", start)]
+    if with_write:
+        recs.append(ExtentRecord(base + (1 << 22), max(row, nbytes // 4),
+                                 "write", start))
+    return ExtentStream(recs)
+
+
+def _uncontended_steps(cfg, n_steps: int, nbytes: int):
+    rows = cfg.row_bytes
+    starts = [i * GAP_NS for i in range(n_steps)]
+    streams = [_step_stream(i, nbytes, rows, t)
+               for i, t in enumerate(starts)]
+    return streams, starts
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity on uncontended sequences
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_cfg,kw", [
+    (hbm4_config, {"page_policy": "closed"}),
+    (rome_config, {}),
+], ids=["hbm4_closed", "rome"])
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=3, deadline=None)
+def test_warm_bit_identical_to_reset_uncontended(make_cfg, kw, seed):
+    """Disjoint addresses, refresh off, 50 us gaps: warm and reset must
+    agree exactly — makespan, per-channel finish, bytes, and the full
+    command census, step by step."""
+    rng = np.random.default_rng(seed)
+    cfg = make_cfg()
+    n_steps = int(rng.integers(2, 5))
+    nbytes = int(rng.integers(4, 24)) * cfg.row_bytes
+    streams, starts = _uncontended_steps(cfg, n_steps, nbytes)
+    sim = SystemSim(cfg, n_channels=N_CHANNELS, refresh=False, **kw)
+    reset = sim.run_steps(streams, starts_ns=starts)
+    warm = sim.run_steps(streams, starts_ns=starts, warm=True)
+    for i, (r, w) in enumerate(zip(reset, warm)):
+        assert w.total_ns == r.total_ns, (i, w.total_ns, r.total_ns)
+        assert np.array_equal(w.channel_finish_ns, r.channel_finish_ns), i
+        assert np.array_equal(w.channel_bytes, r.channel_bytes), i
+        assert w.bytes_moved == r.bytes_moved, i
+        assert w.cmd_counts == r.cmd_counts, i
+
+
+def test_warm_open_page_row_state_carries():
+    """Open-page HBM4 is the documented exception: warm carries open
+    rows across the gap, so later steps can pay precharges reset never
+    sees. Totals must still never be *smaller* warm."""
+    cfg = hbm4_config()
+    streams, starts = _uncontended_steps(cfg, 4, 16 * cfg.row_bytes)
+    sim = SystemSim(cfg, n_channels=N_CHANNELS, refresh=False)
+    reset = sim.run_steps(streams, starts_ns=starts)
+    warm = sim.run_steps(streams, starts_ns=starts, warm=True)
+    assert all(w.total_ns >= r.total_ns for r, w in zip(reset, warm))
+
+
+# ---------------------------------------------------------------------------
+# Contended sequences: warm can only lose
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_cfg", [hbm4_config, rome_config],
+                         ids=["hbm4", "rome"])
+def test_warm_never_earlier_when_contended(make_cfg):
+    """Back-to-back steps (zero gap, refresh on): the carried backlog
+    must surface as strictly later finishes on some later step, and no
+    step may ever finish earlier warm than reset."""
+    cfg = make_cfg()
+    streams = [_step_stream(i, 32 * cfg.row_bytes, cfg.row_bytes, 0.0)
+               for i in range(3)]
+    starts = [0.0, 0.0, 0.0]
+    sim = SystemSim(cfg, n_channels=N_CHANNELS)
+    reset = sim.run_steps(streams, starts_ns=starts)
+    warm = sim.run_steps(streams, starts_ns=starts, warm=True)
+    assert all(w.total_ns >= r.total_ns for r, w in zip(reset, warm))
+    assert warm[-1].total_ns > reset[-1].total_ns
+
+
+def test_warm_steps_must_be_clock_ordered():
+    cfg = hbm4_config()
+    sim = SystemSim(cfg, n_channels=N_CHANNELS)
+    streams = [_step_stream(i, 4 * cfg.row_bytes, cfg.row_bytes, 0.0)
+               for i in range(2)]
+    with pytest.raises(ValueError, match="clock"):
+        sim.run_steps(streams, starts_ns=[GAP_NS, 0.0], warm=True)
+
+
+def test_warm_session_sanitizer_runs():
+    """check_timing=True replays the *cumulative* warm trace through the
+    independent timing checker at session close — a clean sequence must
+    pass, and the session must have actually simulated commands."""
+    cfg = rome_config()
+    streams, starts = _uncontended_steps(cfg, 3, 8 * cfg.row_bytes)
+    sim = SystemSim(cfg, n_channels=N_CHANNELS, check_timing=True)
+    out = sim.run_steps(streams, starts_ns=starts, warm=True)
+    assert len(out) == 3 and all(r.total_ns > 0 for r in out)
+
+
+# ---------------------------------------------------------------------------
+# ChannelRunState.feed: suspend/resume mechanics
+# ---------------------------------------------------------------------------
+
+def _first_trace(kind_want: str):
+    for label, kind, kwargs, txns in facade_trace_suite():
+        if kind == kind_want and len(txns) >= 4:
+            return label, kind, kwargs, txns
+    raise AssertionError(f"no {kind_want} facade trace")
+
+
+@pytest.mark.parametrize("kind", ["hbm4", "rome"])
+def test_feed_refuses_undrained_queue(kind):
+    _, _, kwargs, txns = _first_trace(kind)
+    state = make_channel_sim(kind, **kwargs).start_run(txns)
+    with pytest.raises(RuntimeError, match="undrained"):
+        state.feed(txns)
+
+
+@pytest.mark.parametrize("kind", ["hbm4", "rome"])
+def test_feed_result_is_per_feed_delta(kind):
+    """After a feed, result() reports only the new batch: its bytes and
+    command deltas, on a clock that keeps running forward."""
+    _, _, kwargs, txns = _first_trace(kind)
+    state = make_channel_sim(kind, **kwargs).start_run(txns)
+    advance_states([state])
+    r1 = state.result()
+    t1 = state.now
+    state.feed(txns)
+    advance_states([state])
+    r2 = state.result()
+    assert state.now > t1
+    assert r2.bytes_moved == r1.bytes_moved        # same batch re-fed
+    assert len(r2.finish_ns) == len(txns)
+    # deltas, not cumulative: the re-fed batch issues exactly the same
+    # number of data commands as the first one did (row-state-dependent
+    # ACT/PRE may differ; the data census may not)
+    for cmd in ("RD", "WR"):
+        assert r2.cmd_counts.get(cmd, 0) == r1.cmd_counts.get(cmd, 0), cmd
+
+
+# ---------------------------------------------------------------------------
+# Hybrid warm sessions: carried-pressure correction
+# ---------------------------------------------------------------------------
+
+def _analytic_stream(cfg, step: int, start: float) -> ExtentStream:
+    """A data-bound bulk slice big enough that the hybrid classifier
+    prices it analytically (low modeled queue pressure)."""
+    return bulk_stream(256 * cfg.row_bytes,
+                       base_addr=(step + 1) << 24).shifted(start)
+
+
+def test_hybrid_warm_matches_reset_when_uncontended():
+    """All-analytic sequences carry zero pressure: warm == reset
+    exactly, and every step stays on the analytic path."""
+    cfg = hbm4_config()
+    sim = SystemSim(cfg, n_channels=N_CHANNELS, mode="hybrid",
+                    policy_name="hbm4_frfcfs")
+    streams = [_analytic_stream(cfg, i, i * GAP_NS) for i in range(4)]
+    starts = [i * GAP_NS for i in range(4)]
+    reset = sim.run_steps(streams, starts_ns=starts)
+    warm = sim.run_steps(streams, starts_ns=starts, warm=True)
+    assert all(r.mode == "analytic" for r in reset)
+    for i, (r, w) in enumerate(zip(reset, warm)):
+        assert w.mode == "analytic", i
+        assert w.total_ns == pytest.approx(r.total_ns), i
+
+
+def test_hybrid_warm_carry_nonnegative_and_decaying():
+    """The carried-pressure correction is never negative, inflates the
+    analytic price when positive, and only a cycle-priced step resets
+    it."""
+    cfg = hbm4_config()
+    sim = SystemSim(cfg, n_channels=N_CHANNELS, mode="hybrid",
+                    policy_name="hbm4_frfcfs")
+    sess = sim.warm_session()
+    assert isinstance(sess, WarmRunState)
+    assert sess.carry == 0.0
+    last = 0.0
+    for i in range(4):
+        res = sess.step(_analytic_stream(cfg, i, i * GAP_NS),
+                        start_ns=i * GAP_NS)
+        assert sess.carry >= 0.0
+        if res.mode == "analytic":
+            # carry = frac * max(0, pressure_eff - threshold): bounded by
+            # the step's own effective pressure
+            assert sess.carry <= WARM_CARRY_FRAC * res.queue_pressure + 1e-12
+        last = res.total_ns
+    assert last > 0.0
+    sess.check()
