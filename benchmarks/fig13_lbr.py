@@ -11,9 +11,29 @@ Paper shape claims reproduced here:
 from __future__ import annotations
 
 from repro.configs.paper_workloads import PAPER_WORKLOADS
+from repro.core.system_sim import SystemSim
+from repro.core.timing import hbm4_config, rome_config
 from repro.perfmodel.lbr import lbr_sweep
+from repro.workloads import bulk_stream
 
 BATCHES = (1, 4, 16, 64, 256)
+
+
+def row_locality() -> dict:
+    """Intra-channel companion to the cross-channel LBR: the row-hit
+    rate of a small bulk decode slice on the cycle engine, read off
+    :attr:`~repro.core.system_sim.SystemResult.row_hit_rate` (the one
+    shared definition — repro.obs counter tracks, policy_sweep cells
+    and this figure must all agree). HBM4's balance story leans on the
+    row buffer absorbing column reuse; RoMe's is 0.0 by construction
+    (row-granular access has no open-row state to hit)."""
+    out = {}
+    for fam, cfg in (("hbm4", hbm4_config()), ("rome", rome_config())):
+        res = SystemSim(cfg, n_channels=2).run(bulk_stream(1 << 16))
+        out[fam] = round(res.row_hit_rate, 4)
+    assert out["hbm4"] > 0.8, out
+    assert out["rome"] == 0.0, out
+    return out
 
 
 def run() -> dict:
@@ -46,6 +66,7 @@ def run() -> dict:
     res["with_writes_b256"] = {k: {kk: round(vv, 3)
                                    for kk, vv in m[256].items()}
                                for k, m in rw.items()}
+    res["row_hit_rate"] = row_locality()
     return res
 
 

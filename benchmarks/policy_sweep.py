@@ -136,6 +136,10 @@ def _cell(spec, workload: str, sim: SystemSim, stream) -> dict:
         "lbr": round(res.load_balance_ratio, 4),
         "bytes_moved": res.bytes_moved,
         "acts": counts.get("ACT", 0),
+        # Derived property, not a hand-rolled (RD+WR-ACT) expression:
+        # repro.obs and every benchmark must agree on one definition
+        # (0.0 by construction for row-granular RoMe policies).
+        "row_hit_rate": round(res.row_hit_rate, 4),
         "sid_switches": counts.get("sid_switches", 0),
         "drain_entries": counts.get("drain_entries", 0),
     }
@@ -205,6 +209,16 @@ def run() -> dict:
     # Closed page never saturates (always-precharge at 32 B granularity).
     hb = by[("hbm4_frfcfs", "bulk_synthetic")]["bandwidth_gbps"]
     assert by[("hbm4_closed", "bulk_synthetic")]["bandwidth_gbps"] < 0.5 * hb
+
+    # Row-hit rate (SystemResult.row_hit_rate) separates the families
+    # structurally: open-page FR-FCFS rides the row buffer on bulk
+    # streams, closed page precharges every column (rate 0), and RoMe
+    # has no column reuse to hit at all — 0.0 by construction.
+    assert by[("hbm4_frfcfs", "bulk_synthetic")]["row_hit_rate"] > 0.8, \
+        by[("hbm4_frfcfs", "bulk_synthetic")]
+    assert by[("hbm4_closed", "bulk_synthetic")]["row_hit_rate"] == 0.0
+    for n in rome_bulk:
+        assert by[(n, "bulk_synthetic")]["row_hit_rate"] == 0.0, n
 
     # Write draining and SID grouping are bandwidth-neutral on the
     # read-only bulk stream (no writes to drain, one SID) — the added

@@ -28,9 +28,9 @@ import traceback
 from . import (cluster_sweep, engine_dequeue, engine_xval,
                fig09_command_schedule, fig10_ca_pins, fig12_tpot,
                fig13_lbr, fig14_energy, full_cube, hybrid_xval,
-               policy_sweep, queue_depth, refresh_stall, serve_trace,
-               sparse_overfetch, tab_mc_complexity, timing_conformance,
-               vba_design_space)
+               obs_overhead, policy_sweep, queue_depth, refresh_stall,
+               serve_trace, sparse_overfetch, tab_mc_complexity,
+               timing_conformance, vba_design_space)
 
 ALL = [
     ("fig09_command_schedule", fig09_command_schedule),
@@ -51,6 +51,7 @@ ALL = [
     ("full_cube", full_cube),
     ("serve_trace", serve_trace),
     ("cluster_sweep", cluster_sweep),
+    ("obs_overhead", obs_overhead),
 ]
 
 

@@ -71,6 +71,8 @@ import time
 import numpy as np
 
 from repro.configs.paper_workloads import REPLAY_SWEEP_MIX
+from repro.obs import MetricsProbe, ObsCollector
+from repro.obs.export import chrome_trace_events, trace_total_bytes
 from repro.perfmodel.tpot import stream_mem_ns
 from repro.serve.replay import build_replay
 
@@ -124,6 +126,36 @@ def _check_conservation(res) -> int:
         assert pb > 0 and reads % pb == 0, (r.rid, reads, pb)
         assert writes > 0 and writes % (2 * r.n_out) == 0, (r.rid, writes)
     return total
+
+
+def _obs_section(scale: float, n_requests: int) -> dict:
+    """Observation-is-free check on the full serving loop: the same
+    seeded replay with the repro.obs stack attached must be
+    bit-identical to the bare run, and the exported Chrome-trace
+    counter tracks must conserve bytes (integral == the result's
+    ``bytes_moved``). Complements benchmarks/obs_overhead.py, which
+    gates the same contract at the channel-engine level."""
+    out: dict = {}
+    for policy in POLICIES:
+        kw = dict(scale=scale, kind="bursty", burst_size=4)
+        bare, _, _ = _cell(policy, 2e5, n_requests, **kw)
+        col = ObsCollector(probe=MetricsProbe(window_ns=200.0))
+        obs, _, _ = _cell(policy, 2e5, n_requests, collector=col, **kw)
+        assert bare.summary() == obs.summary(), policy
+        assert ([s.dur_ns for s in bare.steps]
+                == [s.dur_ns for s in obs.steps]), policy
+        trace = {"traceEvents": chrome_trace_events(col, col.probe)}
+        s = obs.summary()
+        tb = trace_total_bytes(trace)
+        assert tb == s["bytes_moved"], (policy, tb, s["bytes_moved"])
+        spans = col.request_spans()
+        assert len(spans) == n_requests, (policy, len(spans))
+        out[policy] = {"identity": 1, "trace_bytes": tb,
+                       "row_hit_rate": round(col.probe.row_hit_rate(), 4),
+                       "n_spans": len(spans)}
+    assert out["hbm4_frfcfs"]["row_hit_rate"] > 0.5, out
+    assert out["rome_qd2"]["row_hit_rate"] == 0.0, out
+    return out
 
 
 def run(reduced: bool = False) -> dict:
@@ -211,6 +243,9 @@ def run(reduced: bool = False) -> dict:
         kinds[f"{policy}/closed"] = dict(
             offered_rps=round(rate, 1), sim_seconds=secs, **res.summary())
     out["arrival_kinds"] = kinds
+
+    # --- observability: attach-and-compare (repro.obs) ---------------------
+    out["obs"] = _obs_section(scale, n_req["near"])
 
     # --- unscaled replay via the hybrid fast path --------------------------
     # scale=1.0: each decode step reads the full (tens-of-GB) weight

@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Render per-run summaries from exported Chrome-trace JSON.
+
+Everything here is computed **from the trace alone** — no simulator
+state is consulted — which is the point: the exported counters and
+spans must carry enough to re-derive the headline diagnostics
+(docs/observability.md):
+
+* per-channel utilization timelines (text sparkline per channel),
+* the row-hit rate, recomputed from the cumulative ``row_hits`` /
+  ``col_cmds`` counter tracks — across two traces this reproduces the
+  HBM4-vs-RoMe locality gap,
+* tail-step attribution: the p99-duration step, the requests it was
+  serving, and the channel that moved the most bytes during it.
+
+Usage::
+
+    python scripts/obs_report.py TRACE.json [TRACE2.json ...]
+    python scripts/obs_report.py --run OUT_DIR   # build the seeded
+        # equal-pin hbm4_frfcfs-vs-rome_qd2 pair first, then report it
+
+With two or more traces the report ends with a cross-run comparison
+table (row-hit rate, bytes, makespan).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.export import (counter_final, counter_series,  # noqa: E402
+                              load_chrome_trace, slices,
+                              trace_row_hit_rate, trace_total_bytes)
+
+SPARK = " .:-=+*#%@"
+
+
+def _sparkline(values, width: int = 48) -> str:
+    if not values:
+        return ""
+    # Downsample to `width` buckets by mean.
+    n = len(values)
+    buckets = []
+    for b in range(min(width, n)):
+        lo = b * n // min(width, n)
+        hi = max(lo + 1, (b + 1) * n // min(width, n))
+        buckets.append(sum(values[lo:hi]) / (hi - lo))
+    return "".join(SPARK[min(len(SPARK) - 1,
+                             int(v * (len(SPARK) - 1) + 0.5))]
+                   for v in buckets)
+
+
+def _percentile(sorted_vals, q: float):
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1)))
+    return sorted_vals[idx]
+
+
+def _channel_bytes_in(series: dict, c: int, t0_us: float,
+                      t1_us: float) -> float:
+    """Bytes channel ``c`` moved inside [t0, t1], off its cumulative
+    byte counter (piecewise-constant readback: delta of the bounding
+    samples)."""
+    pts = series.get(f"ch{c} bytes", [])
+    before = 0
+    last_in = None
+    for ts, v in pts:
+        if ts <= t0_us:
+            before = v
+        if ts <= t1_us:
+            last_in = v
+    return (last_in - before) if last_in is not None else 0
+
+
+def report_one(path: str) -> dict:
+    trace = load_chrome_trace(path)
+    series = counter_series(trace)
+    label = trace.get("otherData", {}).get("label", "") or path
+    sl = slices(trace)
+    steps = sorted((e for e in sl if e.get("cat") == "step"),
+                   key=lambda e: e["ts"])
+    reqs = [e for e in sl if e.get("cat") == "request"]
+    makespan_us = max((e["ts"] + e["dur"] for e in sl), default=0.0)
+    hit = trace_row_hit_rate(trace)
+    total_bytes = trace_total_bytes(trace)
+
+    print(f"== {label} ==")
+    print(f"  trace: {path}")
+    print(f"  makespan: {makespan_us:.1f} us   requests: {len(reqs)}   "
+          f"steps: {len(steps)}")
+    print(f"  bytes (channel counter integral): {total_bytes}")
+    print(f"  row-hit rate (from counters alone): {hit:.4f}")
+
+    channels = sorted({int(n[2:].split()[0]) for n in series
+                       if n.startswith("ch") and n.endswith(" util")})
+    for c in channels:
+        utils = [v for _, v in series[f"ch{c} util"]]
+        mean_u = sum(utils) / len(utils) if utils else 0.0
+        print(f"  ch{c} util [{_sparkline(utils)}] mean {mean_u:.2f}")
+
+    p99 = None
+    if steps:
+        durs = sorted(e["dur"] for e in steps)
+        cut = _percentile(durs, 0.99)
+        p99 = max((e for e in steps if e["dur"] >= cut),
+                  key=lambda e: e["dur"])
+        args = p99.get("args", {})
+        owners = args.get("active", [])
+        t0, t1 = p99["ts"], p99["ts"] + p99["dur"]
+        by_ch = {c: _channel_bytes_in(series, c, t0, t1)
+                 for c in channels}
+        top = max(by_ch, key=by_ch.get) if by_ch else None
+        print(f"  p99 step: {args.get('kind', '?')} "
+              f"{p99['name']} dur {p99['dur']:.2f} us "
+              f"({args.get('n_active', 0)} active, "
+              f"{args.get('n_prefill', 0)} prefill chunks)")
+        print(f"    owning requests: {owners}")
+        if top is not None:
+            print(f"    busiest channel: ch{top} "
+                  f"({int(by_ch[top])} B in the step window)")
+    print()
+    return {"label": label, "row_hit_rate": hit, "bytes": total_bytes,
+            "makespan_us": makespan_us, "n_requests": len(reqs),
+            "n_steps": len(steps)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("traces", nargs="*", help="Chrome-trace JSON files")
+    ap.add_argument("--run", metavar="OUT_DIR",
+                    help="first build the seeded equal-pin "
+                         "hbm4_frfcfs-vs-rome_qd2 pair into OUT_DIR "
+                         "(examples/obs_trace.py does the same), then "
+                         "report it")
+    ap.add_argument("--json", action="store_true",
+                    help="also print the summary dict as JSON")
+    args = ap.parse_args(argv)
+    paths = list(args.traces)
+    if args.run:
+        from repro.obs.demo import export_equal_pin_pair
+        pair = export_equal_pin_pair(args.run)
+        paths += [v["trace"] for v in pair.values()]
+    if not paths:
+        ap.error("no traces given (pass files or --run OUT_DIR)")
+    reports = [report_one(p) for p in paths]
+    if len(reports) >= 2:
+        print("== cross-run comparison ==")
+        w = max(len(r["label"]) for r in reports)
+        print(f"  {'run'.ljust(w)}  row_hit  bytes        makespan_us")
+        for r in reports:
+            print(f"  {r['label'].ljust(w)}  {r['row_hit_rate']:.4f}   "
+                  f"{str(r['bytes']).ljust(11)}  "
+                  f"{r['makespan_us']:.1f}")
+        hits = {r["label"]: r["row_hit_rate"] for r in reports}
+        hi, lo = max(hits.values()), min(hits.values())
+        print(f"  row-hit-rate gap (max - min): {hi - lo:.4f}")
+    if args.json:
+        print(json.dumps(reports, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,6 +24,13 @@ docs/compat.md) but nothing previously enforced:
     pools in :mod:`repro.core.pool` need picklable (module-level)
     callables; closures die with an opaque pickling error at the first
     real fan-out.
+``untracked-counter``
+    (``repro/core/sched`` only) Every command-counter key a policy
+    touches — ``counts["K"]`` subscripts, ``cmd_counts.get("K")``
+    reads, ``count_keys`` tuple entries — must be declared in
+    :data:`repro.obs.metrics.COUNTER_REGISTRY`. The registry is what
+    the telemetry probe folds, exports and documents; a key that only
+    exists in a policy's hot loop silently vanishes from every trace.
 
 Markdown docs get their own two rules (:func:`lint_docs`, also wired
 into ``scripts/lint.py``):
@@ -109,11 +116,34 @@ _PY_RANDOM = {
 }
 
 ALL_RULES = ("jax-drift", "version-compare", "unseeded-random",
-             "mutable-default", "pool-submit-closure")
+             "mutable-default", "pool-submit-closure",
+             "untracked-counter")
+
+
+def _registered_counters() -> frozenset[str]:
+    """Names declared in repro.obs.metrics.COUNTER_REGISTRY (imported
+    lazily so the linter stays importable standalone)."""
+    global _COUNTERS
+    if _COUNTERS is None:
+        from repro.obs.metrics import COUNTER_REGISTRY
+        _COUNTERS = frozenset(COUNTER_REGISTRY)
+    return _COUNTERS
+
+
+_COUNTERS: frozenset[str] | None = None
 
 #: Markdown-doc rules (separate from the Python AST rules above; see
 #: :func:`lint_docs`).
 DOC_RULES = ("doc-code-block", "doc-path")
+
+
+def _is_counts_chain(chain: str | None) -> bool:
+    """True for dotted chains naming a command-counter dict:
+    ``counts``, ``self.counts``, ``cmd_counts``, ``res.cmd_counts``…"""
+    if chain is None:
+        return False
+    last = chain.split(".")[-1]
+    return last == "counts" or last.endswith("_counts")
 
 
 def _dotted(node: ast.AST) -> str | None:
@@ -189,8 +219,37 @@ class _Linter(ast.NodeVisitor):
                          f"{DRIFTED_METHOD_CALLS[fn.attr]}")
             if fn.attr == "submit" and node.args:
                 self._check_submit(node)
+            if fn.attr == "get" and _is_counts_chain(_dotted(fn.value)) \
+                    and node.args:
+                self._check_counter_key(node.args[0])
         if chain is not None:
             self._check_random(node, chain)
+        self.generic_visit(node)
+
+    # -- counter registry --------------------------------------------------
+
+    def _check_counter_key(self, key_node: ast.AST) -> None:
+        if "untracked-counter" not in self.rules:
+            return
+        if isinstance(key_node, ast.Constant) \
+                and isinstance(key_node.value, str) \
+                and key_node.value not in _registered_counters():
+            self.add("untracked-counter", key_node,
+                     f"counter key {key_node.value!r} is not declared in "
+                     f"repro.obs.metrics.COUNTER_REGISTRY — the probe "
+                     f"would silently drop it from every trace")
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        if _is_counts_chain(_dotted(node.value)):
+            self._check_counter_key(node.slice)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if any(isinstance(t, ast.Name) and t.id == "count_keys"
+               for t in node.targets):
+            for const in ast.walk(node.value):
+                if isinstance(const, ast.Constant):
+                    self._check_counter_key(const)
         self.generic_visit(node)
 
     def _check_random(self, node: ast.Call, chain: str) -> None:
@@ -294,6 +353,8 @@ def rules_for_path(path: str, root: str = "") -> tuple[str, ...]:
     * ``unseeded-random`` only in the determinism-critical packages
       (``repro/core``, ``repro/serve``) — tests and benchmarks may roll
       dice however they like (they seed at the call site).
+    * ``untracked-counter`` only where counter keys are minted:
+      ``repro/core/sched`` (policies and the engine cores).
     * everything else applies everywhere.
     """
     p = Path(path).as_posix()
@@ -302,6 +363,8 @@ def rules_for_path(path: str, root: str = "") -> tuple[str, ...]:
         rules.append("jax-drift")
     if "repro/core" in p or "repro/serve" in p:
         rules.append("unseeded-random")
+    if "repro/core/sched" in p:
+        rules.append("untracked-counter")
     return tuple(rules)
 
 

@@ -47,7 +47,7 @@ from .channels import (CHANNEL_SIM_KINDS, HBM4ChannelSim,
                        HBM4WriteDrainChannelSim, RoMeChannelSim,
                        make_channel_sim)
 from .core import (ChannelRunState, ChannelSimCore, CmdRecord, SimResult,
-                   Txn, _PendingQueue)
+                   Txn, _PendingQueue, counts_row_hit_rate)
 from .policies import (FRFCFSOpenPagePolicy, FRFCFSWriteDrainPolicy,
                        HBM4ClosedPagePolicy, HBM4SIDGroupPolicy,
                        RoMeRowPolicy, SchedulerPolicy)
@@ -60,6 +60,7 @@ from .vectorized import advance_states, run_channels
 
 __all__ = [
     "ChannelSimCore", "ChannelRunState", "CmdRecord", "SimResult", "Txn",
+    "counts_row_hit_rate",
     "run_channels", "advance_states", "facade_trace_suite",
     "SchedulerPolicy", "FRFCFSOpenPagePolicy", "FRFCFSWriteDrainPolicy",
     "HBM4ClosedPagePolicy", "HBM4SIDGroupPolicy", "RoMeRowPolicy",

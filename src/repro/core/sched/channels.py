@@ -28,7 +28,8 @@ class HBM4ChannelSim(ChannelSimCore):
                  max_ref_postpone: int = 8,
                  page_policy: str = "open",
                  policy: SchedulerPolicy | None = None,
-                 emit_trace: bool = False):
+                 emit_trace: bool = False,
+                 sample_window_ns: float | None = None):
         t = timing or HBM4Timing()
         g = geometry or ChannelGeometry()
         if policy is None:
@@ -39,7 +40,8 @@ class HBM4ChannelSim(ChannelSimCore):
             else:
                 raise ValueError(f"unknown page_policy {page_policy!r}")
         super().__init__(policy, queue_depth, refresh, max_ref_postpone,
-                         emit_trace=emit_trace)
+                         emit_trace=emit_trace,
+                         sample_window_ns=sample_window_ns)
         self.t = t
         self.g = g
         self.page_policy = page_policy
@@ -56,10 +58,12 @@ class HBM4ClosedPageChannelSim(HBM4ChannelSim):
                  queue_depth: int = 64,
                  refresh: bool = True,
                  max_ref_postpone: int = 8,
-                 emit_trace: bool = False):
+                 emit_trace: bool = False,
+                 sample_window_ns: float | None = None):
         super().__init__(timing, geometry, queue_depth, refresh,
                          max_ref_postpone, page_policy="closed",
-                         emit_trace=emit_trace)
+                         emit_trace=emit_trace,
+                         sample_window_ns=sample_window_ns)
 
 
 class HBM4WriteDrainChannelSim(HBM4ChannelSim):
@@ -75,11 +79,13 @@ class HBM4WriteDrainChannelSim(HBM4ChannelSim):
                  low_watermark: int = 2,
                  drain_budget: int = 16,
                  write_age_ns: float = 400.0,
-                 emit_trace: bool = False):
+                 emit_trace: bool = False,
+                 sample_window_ns: float | None = None):
         t = timing or HBM4Timing()
         g = geometry or ChannelGeometry()
         super().__init__(t, g, queue_depth, refresh, max_ref_postpone,
                          emit_trace=emit_trace,
+                         sample_window_ns=sample_window_ns,
                          policy=FRFCFSWriteDrainPolicy(
                              t, g, high_watermark=high_watermark,
                              low_watermark=low_watermark,
@@ -96,11 +102,13 @@ class HBM4SIDGroupChannelSim(HBM4ChannelSim):
                  queue_depth: int = 64,
                  refresh: bool = True,
                  max_ref_postpone: int = 8,
-                 emit_trace: bool = False):
+                 emit_trace: bool = False,
+                 sample_window_ns: float | None = None):
         t = timing or HBM4Timing()
         g = geometry or ChannelGeometry()
         super().__init__(t, g, queue_depth, refresh, max_ref_postpone,
                          emit_trace=emit_trace,
+                         sample_window_ns=sample_window_ns,
                          policy=HBM4SIDGroupPolicy(t, g))
 
 
@@ -123,7 +131,8 @@ class RoMeChannelSim(ChannelSimCore):
                  max_ref_postpone: int = 8,
                  variant: str | None = None,
                  refresh_priority: str = "demand",
-                 emit_trace: bool = False):
+                 emit_trace: bool = False,
+                 sample_window_ns: float | None = None):
         t = timing or RoMeTiming()
         g = geometry or ChannelGeometry()
         policy = RoMeRowPolicy(t, g, n_vbas=n_vbas, variant=variant,
@@ -131,7 +140,8 @@ class RoMeChannelSim(ChannelSimCore):
         if refresh_priority == "eager":
             max_ref_postpone = 1
         super().__init__(policy, queue_depth, refresh, max_ref_postpone,
-                         emit_trace=emit_trace)
+                         emit_trace=emit_trace,
+                         sample_window_ns=sample_window_ns)
         self.t = t
         self.g = g
         self.n_vbas = n_vbas

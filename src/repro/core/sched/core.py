@@ -58,6 +58,25 @@ class Txn:
     stream: int = 0     # software stream tag (for stats only)
 
 
+def counts_row_hit_rate(cmd_counts: dict) -> float:
+    """Row-buffer hit rate derived from a command-count dict.
+
+    ``RD``/``WR`` are the column commands; every ``ACT`` opens a row for
+    an access that missed the row buffer, so ``hits = (RD + WR) - ACT``
+    and the rate is ``hits / (RD + WR)``. Row-granular controllers
+    (counts carrying ``row_commands``) precharge after every row access
+    — there is no row buffer to hit, so their rate is 0.0 *by
+    construction*; the HBM4-vs-RoMe row-hit gap a telemetry report shows
+    is therefore exactly the locality an RH+-style policy could exploit,
+    not a bug. Returns 0.0 when no column command was issued."""
+    if "row_commands" in cmd_counts:
+        return 0.0
+    col = cmd_counts.get("RD", 0) + cmd_counts.get("WR", 0)
+    if col <= 0:
+        return 0.0
+    return max(0.0, (col - cmd_counts.get("ACT", 0)) / col)
+
+
 @dataclass
 class SimResult:
     finish_ns: np.ndarray          # completion time per txn (input order)
@@ -65,12 +84,24 @@ class SimResult:
     bytes_moved: int
     cmd_counts: dict = field(default_factory=dict)  # ACT/RD/WR/PRE/REF/row cmds
     trace: list | None = None      # CmdRecords when run with emit_trace=True
+    #: Telemetry samples when run with ``sample_window_ns`` set: tuples
+    #: ``(t_ns, queue_depth, ref_backlog, draining, counts_snapshot)``
+    #: appended at window-boundary crossings (see
+    #: :class:`repro.obs.MetricsProbe`); None when sampling is off.
+    samples: list | None = None
 
     @property
     def bandwidth_gbps(self) -> float:
         if self.total_ns <= 0:
             return 0.0
         return self.bytes_moved / self.total_ns  # B/ns == GB/s
+
+    @property
+    def row_hit_rate(self) -> float:
+        """Row-buffer hit rate of this run (:func:`counts_row_hit_rate`
+        over :attr:`cmd_counts`): ``(RD+WR hits) / column commands``,
+        0.0 for row-granular (always-precharge) controllers."""
+        return counts_row_hit_rate(self.cmd_counts)
 
 
 class _PendingQueue:
@@ -153,7 +184,7 @@ class ChannelRunState:
     __slots__ = ("core", "policy", "pending", "finish", "counts",
                  "idx_in_finish", "period", "next_ref_t", "next_ref_unit",
                  "ref_backlog", "now", "n_txns", "trace", "_counts_base",
-                 "_trace_base")
+                 "_trace_base", "samples", "next_sample_t", "_samples_base")
 
     def __init__(self, core: "ChannelSimCore", txns: list[Txn]):
         pol = core.policy
@@ -173,6 +204,18 @@ class ChannelRunState:
         self.trace = [] if core.emit_trace else None
         pol.trace = self.trace
         pol.begin(self.counts)
+        # Telemetry sampling (repro.obs.MetricsProbe): with a sample
+        # window set, the event loop appends one state sample per
+        # window-boundary crossing. When off, next_sample_t = +inf makes
+        # the hot-loop guard a single always-false float compare — the
+        # same zero-cost-when-off contract as the trace sink above. The
+        # leading sample is the baseline snapshot deltas diff against.
+        w = core.sample_window_ns
+        self.samples = [] if w else None
+        self.next_sample_t = float(w) if w else float("inf")
+        if self.samples is not None:
+            self.samples.append((0.0, len(txns), 0, False,
+                                 dict(self.counts)))
         self.period = pol.ref_period
         self.next_ref_t = self.period
         self.next_ref_unit = 0
@@ -181,6 +224,7 @@ class ChannelRunState:
         self.n_txns = len(txns)
         self._counts_base = None       # set by feed(): warm per-batch deltas
         self._trace_base = 0           # trace length at the last feed()
+        self._samples_base = 0         # sample count at the last feed()
 
     @property
     def finished(self) -> bool:
@@ -216,6 +260,15 @@ class ChannelRunState:
         self._counts_base = dict(self.counts)
         if self.trace is not None:
             self._trace_base = len(self.trace)
+        if self.samples is not None:
+            # Per-feed baseline marker: the first sample of a feed slice
+            # carries the cumulative snapshot window deltas start from.
+            self._samples_base = len(self.samples)
+            self.samples.append((self.now, len(self.pending),
+                                 self.ref_backlog,
+                                 bool(getattr(self.policy, "draining",
+                                              False)),
+                                 dict(self.counts)))
 
     def advance(self, max_iters: int = 1) -> bool:
         """Execute up to ``max_iters`` event-loop iterations; returns True
@@ -239,10 +292,25 @@ class ChannelRunState:
         issue = pol.issue
         issue_refresh = pol.issue_refresh
         n_ref_units = pol.n_ref_units
+        samples = self.samples
+        next_sample_t = self.next_sample_t
+        sample_w = core.sample_window_ns
 
         for _ in range(max_iters):
             if not pending:
                 break
+            # Telemetry sampling: one state snapshot per window-boundary
+            # crossing. next_sample_t is +inf when sampling is off, so
+            # the disabled cost is this single float compare; sampling
+            # itself only *observes* (appends), never changes loop state
+            # — results stay bit-identical either way.
+            if now >= next_sample_t:
+                samples.append((now, len(pending), ref_backlog,
+                                bool(getattr(pol, "draining", False)),
+                                dict(counts)))
+                next_sample_t += sample_w
+                if next_sample_t <= now:     # idle jump skipped windows
+                    next_sample_t = (now // sample_w + 1.0) * sample_w
             qwin = pending.first(depth)
 
             # -- refresh governor: rotating per-unit refresh with
@@ -292,21 +360,32 @@ class ChannelRunState:
         self.next_ref_unit = next_ref_unit
         self.ref_backlog = ref_backlog
         self.now = now
+        self.next_sample_t = next_sample_t
         return not pending
 
     def result(self) -> SimResult:
         """The drained batch's :class:`SimResult`. After a :meth:`feed`
         the command counts are the *delta* since that feed and the trace
-        is the per-feed slice (``ref_backlog_max`` stays cumulative — it
-        is a high-water mark, not a counter), so warm step results stay
-        comparable with fresh per-step runs. Finish times are always on
-        the state's absolute clock."""
+        and telemetry samples are the per-feed slices. The one exception
+        is ``ref_backlog_max``: it is a session-cumulative **high-water
+        mark**, not a counter — it is *never* reset at a feed boundary,
+        and attaching telemetry sampling (``sample_window_ns``) does not
+        change that: the per-window backlog series comes from the
+        sampled ``ref_backlog`` scalar, while the counts key keeps
+        reporting the worst backlog the whole warm session has ever
+        seen. A later feed's result can therefore report a
+        ``ref_backlog_max`` reached during an *earlier* feed — that is
+        the intended semantics (pinned by tests/test_obs.py), so warm
+        step results stay comparable with fresh per-step runs on every
+        true counter while the refresh high-water stays an invariant of
+        the session. Finish times are always on the state's absolute
+        clock."""
         if self.pending:
             raise RuntimeError(
                 f"channel not drained: {len(self.pending)} of "
                 f"{self.n_txns} transactions outstanding")
         bytes_moved = self.n_txns * self.policy.bytes_per_txn
-        counts, trace = self.counts, self.trace
+        counts, trace, samples = self.counts, self.trace, self.samples
         if self._counts_base is not None:
             base = self._counts_base
             counts = {k: (v if k == "ref_backlog_max"
@@ -314,15 +393,19 @@ class ChannelRunState:
                       for k, v in counts.items()}
             if trace is not None:
                 trace = trace[self._trace_base:]
+            if samples is not None:
+                samples = samples[self._samples_base:]
         else:
             # Snapshot: a later feed() keeps mutating the live dict/list,
             # and the first batch's result must not grow with the session.
             counts = dict(counts)
             if trace is not None:
                 trace = trace[:]
+            if samples is not None:
+                samples = samples[:]
         return SimResult(self.finish,
                          float(self.finish.max(initial=0.0)),
-                         bytes_moved, counts, trace=trace)
+                         bytes_moved, counts, trace=trace, samples=samples)
 
 
 class ChannelSimCore:
@@ -349,12 +432,19 @@ class ChannelSimCore:
     """
 
     def __init__(self, policy, queue_depth: int, refresh: bool = True,
-                 max_ref_postpone: int = 8, emit_trace: bool = False):
+                 max_ref_postpone: int = 8, emit_trace: bool = False,
+                 sample_window_ns: float | None = None):
         self.policy = policy
         self.queue_depth = queue_depth
         self.refresh = refresh
         self.max_ref_postpone = max_ref_postpone
         self.emit_trace = emit_trace
+        if sample_window_ns is not None and sample_window_ns <= 0:
+            raise ValueError(
+                f"sample_window_ns must be positive, got {sample_window_ns}")
+        #: telemetry sampling cadence (ns); None disables sampling and
+        #: keeps the event loop bit-identical to the pre-telemetry core.
+        self.sample_window_ns = sample_window_ns
 
     def start_run(self, txns: list[Txn]) -> ChannelRunState:
         """Begin a run without driving it: the returned state advances

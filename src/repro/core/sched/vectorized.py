@@ -19,6 +19,14 @@ the *same* loop body as :meth:`~.core.ChannelSimCore.run`, the result is
 bit-identical to the scalar path by construction — and asserted so on
 the facade trace suite (:func:`facade_trace_suite`,
 ``benchmarks/hybrid_xval.py``, ``tests/test_hybrid.py``).
+
+Telemetry sampling (``sample_window_ns`` on the underlying cores — the
+:class:`repro.obs.MetricsProbe` seam) rides *inside* ``advance``: each
+state appends its own window samples as its slice of the loop runs, so
+the lockstep driver needs no coordination, sweep order cannot affect
+the sampled series, and the bit-identity guarantee extends unchanged
+to sampled runs (``benchmarks/obs_overhead.py`` gates both directions:
+off-mode identity and ≤5 % on-mode overhead).
 """
 from __future__ import annotations
 

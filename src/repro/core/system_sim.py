@@ -103,6 +103,18 @@ class SystemResult:
                 out[k] = out.get(k, 0) + v
         return out
 
+    @property
+    def row_hit_rate(self) -> float:
+        """System-wide row-buffer hit rate, ``(RD+WR hits) / column
+        commands`` over the summed per-channel command counts
+        (:func:`repro.core.sched.counts_row_hit_rate`). 0.0 for
+        row-granular (always-precharge) controllers — RoMe has no row
+        buffer to hit — and 0.0 on analytically priced runs, which issue
+        no commands (``channel_results`` is empty there; check
+        :attr:`mode` before reading locality off a hybrid run)."""
+        from .sched import counts_row_hit_rate
+        return counts_row_hit_rate(self.cmd_counts)
+
 
 def _run_channel(kind: str, kwargs: dict, txns: list[Txn]) -> SimResult:
     """Simulate one channel — module-level so a process pool can pickle
@@ -183,6 +195,10 @@ class SystemSim:
         #: attached, every feature extraction goes through its signature
         #: memo cache (see :meth:`attach_pricer`).
         self.pricer = None
+        #: optional :class:`repro.obs.MetricsProbe` — when attached (see
+        #: :meth:`attach_probe`), cycle-path channel sims sample windowed
+        #: telemetry and every run/step result is folded into the probe.
+        self.probe = None
         self.cfg = cfg
         self.is_rome = cfg.ag_mc_bytes >= cfg.row_bytes
         if channel_kind is not None:
@@ -277,6 +293,8 @@ class SystemSim:
                       max_ref_postpone=self.max_ref_postpone)
         if self.check_timing:
             common["emit_trace"] = True
+        if self.probe is not None:
+            common["sample_window_ns"] = self.probe.window_ns
         if self.is_rome:
             common |= {"n_vbas": self.cfg.vbas_per_channel}
         kind = self.channel_kind
@@ -357,6 +375,22 @@ class SystemSim:
                                      maxsize=maxsize,
                                      recheck_every=recheck_every)
         return self.pricer
+
+    def attach_probe(self, probe):
+        """Attach a :class:`repro.obs.MetricsProbe`: cycle-path channel
+        sims start sampling windowed telemetry (``sample_window_ns``
+        threads through :meth:`_sim_spec`), and every
+        :class:`SystemResult` produced by :meth:`run` / :meth:`run_steps`
+        / a warm session is folded into the probe. The probe inherits
+        this config's per-channel bus bandwidth as its utilization
+        denominator unless it already has one. Pass ``None`` to detach.
+        Telemetry never alters simulated results — asserted bit-identical
+        in tests/test_obs.py."""
+        if probe is not None and getattr(probe, "channel_bw_gbps",
+                                         None) is None:
+            probe.channel_bw_gbps = self.cfg.channel_bw_gbps
+        self.probe = probe
+        return probe
 
     def _features(self, stream: ExtentStream) -> dict:
         return self._features_many([stream])[0]
@@ -450,10 +484,17 @@ class SystemSim:
             pressure = self._pressure(feats)
             if self.mode == "analytic" or not self._use_cycle(feats,
                                                               pressure):
-                return self._analytic_result(feats, pressure)
-            return self._run_cycle(self._rebase(stream, start_ns), workers,
-                                   pressure=pressure)
-        return self._run_cycle(self._rebase(stream, start_ns), workers)
+                res = self._analytic_result(feats, pressure)
+            else:
+                res = self._run_cycle(self._rebase(stream, start_ns),
+                                      workers, pressure=pressure)
+        else:
+            res = self._run_cycle(self._rebase(stream, start_ns), workers)
+        if self.probe is not None:
+            # Cycle-path telemetry clocks are relative to the rebased
+            # stream; t0 places the windows back on the caller's clock.
+            self.probe.observe_run(res, t0=float(start_ns or 0.0))
+        return res
 
     @staticmethod
     def _rebase(stream: ExtentStream,
@@ -636,6 +677,14 @@ class SystemSim:
                 channel_txns=dict(items),
                 queue_pressure=pressure,
             )
+        if self.probe is not None:
+            # Reset-mode steps were rebased to their own start; shift each
+            # step's telemetry back onto the replay clock before folding.
+            for i, res in enumerate(out):
+                t0 = (starts_ns[i] if starts_ns is not None
+                      else min((r.arrival_ns for r in streams[i]),
+                               default=0.0))
+                self.probe.observe_run(res, t0=float(t0))
         return out
 
     def run_extents(self, extents: list[tuple[int, int]],
@@ -726,10 +775,17 @@ class WarmRunState:
             pressure_eff = sys_._pressure(feats) + self._carry
             if sys_.mode == "analytic" or not sys_._use_cycle(feats,
                                                               pressure_eff):
-                return self._analytic_step(feats, pressure_eff)
-            self._carry = 0.0
-            return self._cycle_step(stream, start, pressure_eff)
-        return self._cycle_step(stream, start, 0.0)
+                res = self._analytic_step(feats, pressure_eff)
+            else:
+                self._carry = 0.0
+                res = self._cycle_step(stream, start, pressure_eff)
+        else:
+            res = self._cycle_step(stream, start, 0.0)
+        if sys_.probe is not None:
+            # Warm sessions run on the absolute clock already (t0=0);
+            # analytic steps still need their start for placement.
+            sys_.probe.observe_run(res, t0=0.0, start_ns=start)
+        return res
 
     def _analytic_step(self, feats: dict,
                        pressure_eff: float) -> SystemResult:

@@ -1,0 +1,80 @@
+"""One-command observability demo: the equal-pin HBM4-vs-RoMe trace pair.
+
+:func:`export_equal_pin_pair` runs the same seeded serve replay twice —
+``hbm4_frfcfs`` on 8 channels vs ``rome_qd2`` on 9 (the paper's 32:36
+equal-CA-pin cube at quarter scale, matching
+``benchmarks/serve_trace.py``) — with a windowed
+:class:`~.probe.MetricsProbe` and an :class:`~.spans.ObsCollector`
+attached, and writes one Chrome-trace JSON (plus a metrics JSONL) per
+policy. ``examples/obs_trace.py`` is the CLI wrapper;
+``scripts/obs_report.py --run`` uses the same builder so the report can
+regenerate its own input. Everything here is pure-cycle pricing
+(``sim_mode="cycle"``) so the exported counter tracks carry full channel
+telemetry and their byte integrals reconcile exactly with the replay's
+``bytes_moved``.
+"""
+from __future__ import annotations
+
+import os
+
+#: Equal-CA-pin channel widths (serve_trace.py's quarter-scale cube).
+EQUAL_PIN_CHANNELS = {"hbm4_frfcfs": 8, "rome_qd2": 9}
+
+
+def export_equal_pin_pair(out_dir: str,
+                          n_requests: int = 5,
+                          seed: int = 0,
+                          rate_rps: float = 2e5,
+                          window_ns: float = 200.0,
+                          scale: float = 2 ** -13,
+                          length_scale: float = 1 / 16,
+                          jsonl: bool = True) -> dict:
+    """Run the seeded equal-pin replay pair under full observation and
+    export one Perfetto-openable trace per policy into ``out_dir``.
+
+    Returns ``{policy: {"trace": path, "jsonl": path | None, "summary":
+    replay summary + obs aggregates}}`` — the summary carries both the
+    simulator-side truth (``bytes_moved``, ``row_hit_rate`` off the
+    probe) and the trace-side readback
+    (:func:`~.export.trace_row_hit_rate`), which the round-trip tests
+    pin equal."""
+    from ..configs.paper_workloads import REPLAY_SWEEP_MIX
+    from ..serve.replay import build_replay
+    from .export import (trace_row_hit_rate, trace_total_bytes,
+                         write_chrome_trace, write_metrics_jsonl)
+    from .probe import MetricsProbe
+    from .spans import ObsCollector
+
+    os.makedirs(out_dir, exist_ok=True)
+    out: dict = {}
+    for policy, nch in EQUAL_PIN_CHANNELS.items():
+        collector = ObsCollector(probe=MetricsProbe(window_ns=window_ns))
+        eng, _ = build_replay(
+            policy=policy, rate_rps=rate_rps, n_requests=n_requests,
+            seed=seed, mix=REPLAY_SWEEP_MIX, length_scale=length_scale,
+            scale=scale, n_channels=nch, sim_mode="cycle",
+            collector=collector)
+        res = eng.run()
+        trace_path = os.path.join(out_dir, f"{policy}.trace.json")
+        write_chrome_trace(trace_path, collector, label=policy)
+        jsonl_path = None
+        if jsonl:
+            jsonl_path = os.path.join(out_dir, f"{policy}.metrics.jsonl")
+            write_metrics_jsonl(jsonl_path, probe=collector.probe,
+                                collector=collector)
+        from .export import load_chrome_trace
+        doc = load_chrome_trace(trace_path)
+        out[policy] = {
+            "trace": trace_path,
+            "jsonl": jsonl_path,
+            "summary": {
+                **res.summary(),
+                "row_hit_rate": round(collector.probe.row_hit_rate(), 4),
+                "trace_row_hit_rate": round(trace_row_hit_rate(doc), 4),
+                "trace_bytes": trace_total_bytes(doc),
+            },
+        }
+    return out
+
+
+__all__ = ["export_equal_pin_pair", "EQUAL_PIN_CHANNELS"]

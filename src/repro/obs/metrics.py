@@ -1,0 +1,98 @@
+"""The observability metric registry.
+
+Every command-count key a scheduler policy may emit into the shared
+``counts`` dict (:class:`repro.core.sched.SchedulerPolicy.count_keys`
+plus the engine-owned keys) is declared here, with its semantics and
+whether it is a monotone **counter** (window deltas are meaningful) or a
+session **high-water mark** (only the cumulative value is; diffing it
+across telemetry windows would be nonsense). The probe consults this
+table when folding sampled snapshots into per-window deltas, and
+``scripts/lint.py`` (rule ``untracked-counter``) fails the build if a
+policy grows a counts key that is not declared here — a silently
+untracked counter would vanish from every trace and report.
+
+Adding a counter: add the policy emission *and* a :class:`MetricSpec`
+row in the same change; the lint rule enforces exactly that.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+#: Metric kinds. ``counter`` — monotone within a session; per-window
+#: deltas are the time-resolved series. ``highwater`` — a running max;
+#: never diffed, always reported cumulatively.
+COUNTER = "counter"
+HIGHWATER = "highwater"
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    """One registered counts key."""
+
+    name: str
+    kind: str          # COUNTER or HIGHWATER
+    description: str
+
+
+#: name -> MetricSpec for every counts key any registered policy emits.
+COUNTER_REGISTRY: dict[str, MetricSpec] = {
+    m.name: m for m in (
+        MetricSpec("ACT", COUNTER,
+                   "row activations (HBM4: one per row miss; RoMe: two "
+                   "per row command, one per pseudo-channel half)"),
+        MetricSpec("RD", COUNTER,
+                   "column read bursts issued on the data bus"),
+        MetricSpec("WR", COUNTER,
+                   "column write bursts issued on the data bus"),
+        MetricSpec("PRE", COUNTER,
+                   "precharges (explicit or auto, incl. refresh-forced)"),
+        MetricSpec("REFpb", COUNTER,
+                   "per-bank refreshes issued by the bounded-postponement "
+                   "governor (RoMe pays two per rotation unit)"),
+        MetricSpec("ca_commands", COUNTER,
+                   "command/address bus slots consumed (the C/A pressure "
+                   "census behind Fig. 5)"),
+        MetricSpec("row_commands", COUNTER,
+                   "RoMe row-granular RD_row/WR_row commands — one per "
+                   "4 KB row access; its presence marks a row-granular "
+                   "(always-precharge) controller"),
+        MetricSpec("drain_entries", COUNTER,
+                   "write-drain FSM entries (hbm4_writedrain: hi-watermark "
+                   "crossings that flip the channel into drain mode)"),
+        MetricSpec("sid_switches", COUNTER,
+                   "cross-SID burst-group switches (hbm4_sidgroup: each "
+                   "pays the tCCDR/tX2XR gap the grouping amortizes)"),
+        MetricSpec("ref_backlog_max", HIGHWATER,
+                   "worst refresh backlog the session has ever seen — a "
+                   "session-cumulative high-water mark, never reset at "
+                   "feed boundaries (see ChannelRunState.result)"),
+    )
+}
+
+#: Derived per-window channel telemetry fields the probe computes from
+#: the sampled state (not counts keys; listed for docs and exporters).
+WINDOW_FIELDS = (
+    "utilization",     # data-bus busy fraction within the window
+    "bytes_moved",     # bytes transferred in the window (exact: sums to
+                       # SystemResult.bytes_moved over a run)
+    "queue_depth",     # outstanding transactions at window close
+    "ref_backlog",     # refresh debt at window close
+    "draining",        # write-drain FSM residency at window close
+    "row_hit_rate",    # per-window (col cmds - ACT) / col cmds
+)
+
+
+def counter_names() -> tuple:
+    """All registered counts keys (lint + exporter surface)."""
+    return tuple(COUNTER_REGISTRY)
+
+
+def is_highwater(name: str) -> bool:
+    """True if ``name`` is a high-water mark (cumulative-only; the probe
+    must not diff it across windows)."""
+    spec = COUNTER_REGISTRY.get(name)
+    return spec is not None and spec.kind == HIGHWATER
+
+
+__all__ = ["MetricSpec", "COUNTER_REGISTRY", "WINDOW_FIELDS", "COUNTER",
+           "HIGHWATER", "counter_names", "is_highwater"]

@@ -1,0 +1,235 @@
+"""Windowed channel telemetry: fold sampled engine state into series.
+
+:class:`MetricsProbe` is the consumer side of the sampling seam in
+:class:`repro.core.sched.ChannelRunState`: attach one to a
+:class:`~repro.core.system_sim.SystemSim` (``sim.attach_probe(probe)``)
+and every cycle-path channel run samples its state — ``(t_ns,
+queue_depth, ref_backlog, draining, counts_snapshot)`` — once per
+``window_ns`` crossing. The probe diffs successive snapshots into
+per-window **deltas** (:class:`ChannelWindow`): command mix, bytes
+moved, data-bus utilization, row-hit rate, plus the sampled queue
+depth / refresh backlog / write-drain residency scalars at the window
+close. Sampling never alters simulated results (asserted bit-identical
+in tests/test_obs.py) and costs one always-false float compare per
+event-loop iteration when detached.
+
+Byte accounting is exact by construction: RD/WR are pure data-burst
+counters in both controller families (RoMe's refresh path emits row
+commands but never RD/WR), so a channel's bytes are apportioned over
+windows proportionally to the cumulative Δ(RD+WR) with telescoping
+integer rounding — per-channel window bytes sum to the channel's
+``bytes_moved`` exactly, and the probe's total reconciles with
+:attr:`SystemResult.bytes_moved` (the exporter round-trip test pins
+this). Analytically priced runs
+issue no commands; the probe records their step-level aggregates only
+(:class:`StepSample`), so hybrid runs keep a complete step timeline
+with channel telemetry wherever the cycle engine ran.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .metrics import is_highwater
+
+
+@dataclass(frozen=True)
+class StepSample:
+    """Step-level aggregate of one observed run/step."""
+
+    start_ns: float        # step start on the observation clock
+    total_ns: float        # step makespan (memory time)
+    bytes_moved: int
+    mode: str              # "cycle" | "analytic" — the pricing path taken
+    queue_pressure: float
+
+    @property
+    def end_ns(self) -> float:
+        return self.start_ns + self.total_ns
+
+
+@dataclass(frozen=True)
+class ChannelWindow:
+    """One telemetry window on one channel — deltas between two
+    successive engine-state samples, placed on the observation clock."""
+
+    channel: int
+    t0_ns: float
+    t1_ns: float
+    cmds: dict             # per-window counter deltas (ACT/RD/WR/...)
+    bytes_moved: int       # exact: windows sum to the channel's total
+    busy_ns: float         # data-bus busy time implied by bytes_moved
+    queue_depth: int       # outstanding txns at window close
+    ref_backlog: int       # refresh debt at window close
+    draining: bool         # write-drain FSM residency at window close
+
+    @property
+    def dur_ns(self) -> float:
+        return self.t1_ns - self.t0_ns
+
+    @property
+    def utilization(self) -> float:
+        """Data-bus busy fraction in the window, clamped to [0, 1]."""
+        d = self.dur_ns
+        if d <= 0.0:
+            return 1.0 if self.busy_ns > 0 else 0.0
+        return min(1.0, self.busy_ns / d)
+
+    @property
+    def col_cmds(self) -> int:
+        """Data accesses in the window (HBM4: RD+WR column bursts; RoMe:
+        *data* row commands — refresh also emits row commands, one per
+        two REFpb, so its share is subtracted)."""
+        if "row_commands" in self.cmds:
+            return max(0, self.cmds.get("row_commands", 0)
+                       - self.cmds.get("REFpb", 0) // 2)
+        return self.cmds.get("RD", 0) + self.cmds.get("WR", 0)
+
+    @property
+    def row_hits(self) -> int:
+        """Accesses served from an open row (0 by construction for
+        row-granular controllers — every access precharges)."""
+        if "row_commands" in self.cmds:
+            return 0
+        return max(0, self.col_cmds - self.cmds.get("ACT", 0))
+
+    @property
+    def row_hit_rate(self) -> float:
+        c = self.col_cmds
+        return self.row_hits / c if c > 0 else 0.0
+
+
+@dataclass
+class MetricsProbe:
+    """Collects windowed channel telemetry and step samples.
+
+    ``window_ns`` is the sampling window threaded into every channel
+    sim while the probe is attached. ``channel_bw_gbps`` (B/ns) is the
+    utilization denominator; :meth:`SystemSim.attach_probe` fills it
+    from the config when unset. One probe may observe many runs (a whole
+    replay); :meth:`reset` clears it for reuse.
+    """
+
+    window_ns: float = 1000.0
+    channel_bw_gbps: float | None = None
+    windows: list = field(default_factory=list)   # ChannelWindow, fold order
+    steps: list = field(default_factory=list)     # StepSample, observe order
+
+    def __post_init__(self):
+        if self.window_ns <= 0:
+            raise ValueError(
+                f"window_ns must be > 0, got {self.window_ns}")
+
+    # -- folding -----------------------------------------------------------
+
+    def observe_run(self, res, t0: float = 0.0,
+                    start_ns: float | None = None) -> None:
+        """Fold one :class:`SystemResult` into the probe. ``t0`` shifts
+        the run's channel-telemetry clocks onto the observation clock
+        (reset-mode steps are simulated rebased to 0 — pass the step
+        start; warm sessions already run absolute, pass 0). ``start_ns``
+        is the step's start for the step timeline (defaults to ``t0``)."""
+        start = float(t0 if start_ns is None else start_ns)
+        self.steps.append(StepSample(
+            start_ns=start, total_ns=float(res.total_ns),
+            bytes_moved=int(res.bytes_moved), mode=res.mode,
+            queue_pressure=float(res.queue_pressure)))
+        for c, r in sorted(res.channel_results.items()):
+            self._fold_channel(c, r, float(t0))
+
+    def _fold_channel(self, c: int, r, t0: float) -> None:
+        samples = r.samples
+        n_txns = len(r.finish_ns)
+        total_b = int(r.bytes_moved)
+        bw = self.channel_bw_gbps
+        if not samples:
+            # Sampling was off (or the slice is empty): one synthetic
+            # window covering the run keeps aggregates exact.
+            if n_txns:
+                self.windows.append(ChannelWindow(
+                    c, t0, t0 + float(r.total_ns), dict(r.cmd_counts),
+                    total_b, total_b / bw if bw else 0.0, 0, 0, False))
+            return
+        # The slice leads with its baseline snapshot (cumulative counts
+        # at feed time); r.cmd_counts holds this feed's true-counter
+        # deltas, so base + delta is the exact final snapshot — the tail
+        # window runs from the last crossing to the drain.
+        base_t, _, _, _, base_snap = samples[0]
+        final_snap = dict(base_snap)
+        for k, v in r.cmd_counts.items():
+            if is_highwater(k):
+                final_snap[k] = v
+            else:
+                final_snap[k] = base_snap.get(k, 0) + v
+        last = samples[-1]
+        seq = list(samples)
+        t_end = max(float(r.total_ns), last[0])
+        seq.append((t_end, 0, last[2], False, final_snap))
+        # RD/WR are pure data-burst counters in every policy (refresh
+        # never bumps them), so bytes apportion over windows by the
+        # cumulative data-burst fraction — integer rounding telescopes,
+        # the last window lands exactly on total_b.
+        data_total = (r.cmd_counts.get("RD", 0)
+                      + r.cmd_counts.get("WR", 0))
+        cum_data = cum_b = 0
+        prev_t, _, _, _, prev_snap = seq[0]
+        for t, q, backlog, draining, snap in seq[1:]:
+            cmds = {k: v - prev_snap.get(k, 0) for k, v in snap.items()
+                    if not is_highwater(k)}
+            data = cmds.get("RD", 0) + cmds.get("WR", 0)
+            if t <= prev_t and not any(cmds.values()):
+                continue          # coincident marker, nothing happened
+            cum_data += data
+            b = 0
+            if data_total:
+                new_cum_b = total_b * cum_data // data_total
+                b, cum_b = new_cum_b - cum_b, new_cum_b
+            self.windows.append(ChannelWindow(
+                c, t0 + prev_t, t0 + t, cmds, b,
+                b / bw if bw else 0.0, int(q), int(backlog),
+                bool(draining)))
+            prev_t, prev_snap = t, snap
+
+    # -- views -------------------------------------------------------------
+
+    def channel_series(self, channel: int) -> list:
+        """This channel's windows, time-ordered."""
+        return sorted((w for w in self.windows if w.channel == channel),
+                      key=lambda w: w.t0_ns)
+
+    def channels(self) -> list:
+        return sorted({w.channel for w in self.windows})
+
+    def totals(self) -> dict:
+        """Aggregate over every observed window + step: summed counter
+        deltas, exact bytes, row-hit census, step bytes/time."""
+        cmds: dict = {}
+        bytes_w = 0
+        hits = cols = 0
+        for w in self.windows:
+            for k, v in w.cmds.items():
+                cmds[k] = cmds.get(k, 0) + v
+            bytes_w += w.bytes_moved
+            hits += w.row_hits
+            cols += w.col_cmds
+        return {
+            "cmds": cmds,
+            "window_bytes": bytes_w,
+            "row_hits": hits,
+            "col_cmds": cols,
+            "step_bytes": sum(s.bytes_moved for s in self.steps),
+            "step_mem_ns": sum(s.total_ns for s in self.steps),
+            "n_steps": len(self.steps),
+            "n_windows": len(self.windows),
+        }
+
+    def row_hit_rate(self) -> float:
+        """Aggregate row-hit rate over every observed window."""
+        t = self.totals()
+        return t["row_hits"] / t["col_cmds"] if t["col_cmds"] else 0.0
+
+    def reset(self) -> None:
+        self.windows.clear()
+        self.steps.clear()
+
+
+__all__ = ["MetricsProbe", "ChannelWindow", "StepSample"]

@@ -1,0 +1,248 @@
+"""Request/step span trees for serve replays and fleet runs.
+
+:class:`ObsCollector` sits on the replay loop's step boundary
+(:class:`repro.serve.replay.ReplayEngine` and
+:class:`repro.serve.cluster.ClusterSim` both accept ``collector=``): at
+every executed step it records a :class:`StepEvent` — who was admitted /
+prefilled / decoded / finished, the step's wall duration and its memory
+time from the :class:`~repro.core.system_sim.SystemResult` — and at the
+end folds the engine's request reports into per-request lifecycle marks.
+From those two streams it builds the span trees the Chrome-trace
+exporter renders::
+
+    request <rid>                  [arrival ........... completed]
+      ├─ queued                    [arrival .. admitted]
+      ├─ prefill                   [admitted .. prefill_done]
+      │    └─ chunk <n>tok ...     (one per chunked-prefill step)
+      └─ decode                    [prefill_done .. completed]
+
+Memory-time attribution: a step's ``SystemResult.total_ns`` is split
+evenly across the requests it served (active decoders + prefill
+chunks); each request span carries its accumulated share in ``args``
+(``mem_ns``), so the p99-step attribution in ``scripts/obs_report.py``
+can name the requests that own the tail. Fleet runs fold per-replica
+(``replica=i``); every replica gets its own process track in the
+exported trace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class StepEvent:
+    """One executed serving step, as seen at the replay loop."""
+
+    replica: int
+    index: int
+    start_ns: float
+    dur_ns: float          # step wall duration (memory + overhead)
+    mem_ns: float          # SystemResult.total_ns — the memory share
+    bytes_moved: int
+    mode: str              # pricing path the step took
+    kind: str              # "decode" | "prefill" | "mixed" | ...
+    active: tuple          # rids decoding this step
+    prefilled: tuple       # (rid, n_tokens) prefill chunks this step
+    admitted: tuple        # rids admitted at this step's start
+    finished: tuple        # rids completed at this step's end
+
+    @property
+    def end_ns(self) -> float:
+        return self.start_ns + self.dur_ns
+
+    @property
+    def participants(self) -> tuple:
+        """Requests this step served (mirrors ``StepTrace.rids``)."""
+        seen = dict.fromkeys(self.active)
+        for rid, _ in self.prefilled:
+            seen.setdefault(rid)
+        return tuple(seen)
+
+
+@dataclass
+class Span:
+    """One slice in a span tree (exported as a Chrome-trace ``X``)."""
+
+    name: str
+    cat: str
+    start_ns: float
+    end_ns: float
+    replica: int = 0
+    args: dict = field(default_factory=dict)
+    children: list = field(default_factory=list)
+
+    @property
+    def dur_ns(self) -> float:
+        return max(0.0, self.end_ns - self.start_ns)
+
+    def add_child(self, child: "Span") -> "Span":
+        """Attach ``child`` clamped inside this span — exported trees
+        are nested by construction (pinned by tests/test_obs.py)."""
+        child.start_ns = min(max(child.start_ns, self.start_ns),
+                             self.end_ns)
+        child.end_ns = min(max(child.end_ns, child.start_ns), self.end_ns)
+        self.children.append(child)
+        return child
+
+
+@dataclass
+class _ReqMarks:
+    """Lifecycle marks for one request (filled from a RequestReport or
+    the cluster result arrays; -1 = never happened)."""
+
+    rid: int
+    replica: int = 0
+    arrival_ns: float = 0.0
+    admitted_ns: float = -1.0
+    prefill_done_ns: float = -1.0
+    first_token_ns: float = -1.0
+    completed_ns: float = -1.0
+    prompt_len: int = 0
+    n_out: int = 0
+
+
+class ObsCollector:
+    """Accumulates step events + request marks; builds span trees."""
+
+    def __init__(self, probe=None):
+        #: optional :class:`MetricsProbe` carried alongside so one
+        #: object hands the exporter both spans and channel telemetry.
+        self.probe = probe
+        self.steps: list = []            # StepEvent, execution order
+        self.requests: dict = {}         # rid -> _ReqMarks
+
+    # -- feeding -----------------------------------------------------------
+
+    def on_step(self, st, res, start_ns: float, dur_ns: float,
+                replica: int = 0) -> None:
+        """Record one executed step. ``st`` is the recorder's
+        :class:`~repro.serve.replay.StepTrace`, ``res`` the step's
+        :class:`SystemResult`."""
+        self.steps.append(StepEvent(
+            replica=replica, index=int(st.index),
+            start_ns=float(start_ns), dur_ns=float(dur_ns),
+            mem_ns=float(res.total_ns), bytes_moved=int(res.bytes_moved),
+            mode=res.mode, kind=st.kind,
+            active=tuple(st.active), prefilled=tuple(st.prefilled),
+            admitted=tuple(st.admitted), finished=tuple(st.finished)))
+
+    def add_request(self, rid: int, replica: int = 0, *,
+                    arrival_ns: float = 0.0, admitted_ns: float = -1.0,
+                    prefill_done_ns: float = -1.0,
+                    first_token_ns: float = -1.0,
+                    completed_ns: float = -1.0, prompt_len: int = 0,
+                    n_out: int = 0) -> None:
+        self.requests[int(rid)] = _ReqMarks(
+            int(rid), int(replica), float(arrival_ns), float(admitted_ns),
+            float(prefill_done_ns), float(first_token_ns),
+            float(completed_ns), int(prompt_len), int(n_out))
+
+    def fold_reports(self, reports, replica: int = 0) -> None:
+        """Fold replay-engine :class:`RequestReport` records (anything
+        with the same attribute surface works)."""
+        for rep in reports:
+            self.add_request(
+                rep.rid, replica, arrival_ns=rep.arrival_ns,
+                admitted_ns=rep.admitted_ns,
+                prefill_done_ns=getattr(rep, "prefill_done_ns", -1.0),
+                first_token_ns=rep.first_token_ns,
+                completed_ns=rep.completed_ns,
+                prompt_len=getattr(rep, "prompt_len", 0),
+                n_out=getattr(rep, "n_out", 0))
+
+    # -- attribution -------------------------------------------------------
+
+    def mem_attribution(self) -> dict:
+        """rid -> accumulated memory-time share (ns): each step's
+        ``mem_ns`` split evenly over the requests it served."""
+        out: dict = {}
+        for ev in self.steps:
+            parts = ev.participants
+            if not parts:
+                continue
+            share = ev.mem_ns / len(parts)
+            for rid in parts:
+                out[rid] = out.get(rid, 0.0) + share
+        return out
+
+    def _steps_of(self) -> tuple:
+        """(rid -> prefill-chunk steps, rid -> decode-step count)."""
+        chunks: dict = {}
+        decode_n: dict = {}
+        for ev in self.steps:
+            for rid, ntok in ev.prefilled:
+                chunks.setdefault(rid, []).append((ev, ntok))
+            for rid in ev.active:
+                decode_n[rid] = decode_n.get(rid, 0) + 1
+        return chunks, decode_n
+
+    # -- span trees --------------------------------------------------------
+
+    def request_spans(self) -> list:
+        """One root :class:`Span` tree per known request, rid order."""
+        chunks, decode_n = self._steps_of()
+        mem = self.mem_attribution()
+        out = []
+        for rid in sorted(self.requests):
+            m = self.requests[rid]
+            end = m.completed_ns
+            if end < 0:             # incomplete: extend to last evidence
+                end = max([m.arrival_ns, m.admitted_ns, m.prefill_done_ns,
+                           m.first_token_ns]
+                          + [ev.end_ns for ev, _ in chunks.get(rid, [])]
+                          + [ev.end_ns for ev in self.steps
+                             if rid in ev.active])
+            root = Span(f"req {rid}", "request", m.arrival_ns, end,
+                        replica=m.replica,
+                        args={"rid": rid, "prompt_len": m.prompt_len,
+                              "n_out": m.n_out,
+                              "mem_ns": round(mem.get(rid, 0.0), 3),
+                              "complete": m.completed_ns >= 0})
+            if m.admitted_ns >= 0:
+                root.add_child(Span("queued", "queue", m.arrival_ns,
+                                    m.admitted_ns, replica=m.replica))
+                pf_end = (m.prefill_done_ns if m.prefill_done_ns >= 0
+                          else m.admitted_ns)
+                if pf_end > m.admitted_ns or chunks.get(rid):
+                    pf = root.add_child(Span(
+                        "prefill", "prefill", m.admitted_ns, pf_end,
+                        replica=m.replica,
+                        args={"n_chunks": len(chunks.get(rid, []))}))
+                    for ev, ntok in chunks.get(rid, []):
+                        pf.add_child(Span(
+                            f"chunk {ntok}tok", "prefill", ev.start_ns,
+                            ev.end_ns, replica=m.replica,
+                            args={"step": ev.index}))
+                dec_start = pf_end
+                if end > dec_start:
+                    root.add_child(Span(
+                        "decode", "decode", dec_start, end,
+                        replica=m.replica,
+                        args={"n_steps": decode_n.get(rid, 0)}))
+            out.append(root)
+        return out
+
+    def step_spans(self) -> list:
+        """Flat step slices, one per executed step (per-replica track)."""
+        return [Span(f"step {ev.index}", "step", ev.start_ns, ev.end_ns,
+                     replica=ev.replica,
+                     args={"mode": ev.mode, "kind": ev.kind,
+                           "mem_ns": round(ev.mem_ns, 3),
+                           "bytes": ev.bytes_moved,
+                           "n_active": len(ev.active),
+                           "n_prefill": len(ev.prefilled),
+                           "active": list(ev.active)[:16]})
+                for ev in self.steps]
+
+    def p99_step(self) -> "StepEvent | None":
+        """The step at (or just above) the p99 wall duration — the tail
+        the report attributes to requests and channels."""
+        if not self.steps:
+            return None
+        durs = sorted(ev.dur_ns for ev in self.steps)
+        cut = durs[min(len(durs) - 1, int(0.99 * (len(durs) - 1)))]
+        return max((ev for ev in self.steps if ev.dur_ns >= cut),
+                   key=lambda ev: ev.dur_ns)
+
+
+__all__ = ["ObsCollector", "Span", "StepEvent"]

@@ -320,6 +320,7 @@ class ClusterSim:
                  max_steps: int = 20_000_000,
                  keep_sample_streams: int = 0,
                  warm: bool = False,
+                 collector=None,
                  **arrival_kw):
         if warm:
             raise NotImplementedError(
@@ -355,6 +356,13 @@ class ClusterSim:
                                                  mode=sim_mode)
         if attach_pricer:
             self.system.attach_pricer(recheck_every=recheck_every)
+        #: optional :class:`repro.obs.ObsCollector` — every replica step
+        #: lands as a span event on its replica's track, and the folded
+        #: request marks carry the owning replica; a collector-borne
+        #: probe also samples the shared system's cycle-path channels.
+        self.collector = collector
+        if collector is not None and collector.probe is not None:
+            self.system.attach_probe(collector.probe)
         self.overhead_ns = overhead_ns
         self.workers = workers
         self.max_steps = max_steps
@@ -417,6 +425,9 @@ class ClusterSim:
             for (i, st), res in zip(traces, results):
                 dur = res.total_ns + self.overhead_ns
                 end = reps[i].finish_step(st, dur)
+                if self.collector is not None:
+                    self.collector.on_step(st, res, st.start_ns, dur,
+                                           replica=i)
                 steps_total += 1
                 steps_analytic += res.mode == "analytic"
                 bytes_moved += res.bytes_moved
@@ -442,6 +453,20 @@ class ClusterSim:
                     f"offered load far beyond fleet capacity?")
         for r in reps:
             r.queue.closed = True
+        if self.collector is not None:
+            # Per-replica folding: each request's lifecycle marks carry
+            # the replica the router placed it on (rejected/unrouted
+            # requests fold on replica 0, flagged incomplete).
+            for rid in range(n):
+                if arrival[rid] < 0:
+                    continue
+                self.collector.add_request(
+                    rid, replica=max(int(replica_of[rid]), 0),
+                    arrival_ns=float(arrival[rid]),
+                    admitted_ns=float(admitted[rid]),
+                    first_token_ns=float(first_tok[rid]),
+                    completed_ns=float(completed[rid]),
+                    n_out=int(n_out[rid]))
 
         slot_steps = sum(r.rec.batcher.slot_steps for r in reps)
         busy = sum(r.rec.batcher.busy_slot_steps for r in reps)

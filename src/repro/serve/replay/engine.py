@@ -157,17 +157,27 @@ class ReplayEngine:
     backlog, refresh debt — persists between steps, and any backlog a
     step leaves lands on the next step's duration. Reset (the default)
     remains the cheap decode-only contract.
+
+    ``collector`` attaches a :class:`repro.obs.ObsCollector`: every
+    executed step is recorded as a span event on the replay clock and
+    the folded request timelines land in the collector at the end — the
+    input to the Chrome-trace exporter (docs/observability.md).
+    Observation never changes the replay (asserted in tests/test_obs.py).
     """
 
     def __init__(self, recorder: ServeTraceRecorder, system: SystemSim,
                  overhead_ns: float = 0.0, keep_traces: bool = False,
-                 max_steps: int = 100_000, warm: bool = False):
+                 max_steps: int = 100_000, warm: bool = False,
+                 collector=None):
         self.recorder = recorder
         self.system = system
         self.overhead_ns = overhead_ns
         self.keep_traces = keep_traces
         self.max_steps = max_steps
         self.warm = warm
+        self.collector = collector
+        if collector is not None and collector.probe is not None:
+            system.attach_probe(collector.probe)
 
     def run(self) -> ReplayResult:
         rec = self.recorder
@@ -216,6 +226,8 @@ class ReplayEngine:
                                      res.bytes_moved,
                                      st.stream.total_bytes,
                                      mode=res.mode, kind=st.kind))
+            if self.collector is not None:
+                self.collector.on_step(st, res, now, dur)
             if self.keep_traces:
                 traces.append(st)
             now = end
@@ -225,12 +237,15 @@ class ReplayEngine:
                     f"offered load too high for the pool/slots?")
         if session is not None:
             session.check()
-        return ReplayResult(
+        result = ReplayResult(
             requests=[reports[rid] for rid in sorted(reports)],
             steps=steps,
             makespan_ns=now,
             occupancy=rec.batcher.occupancy,
             traces=traces)
+        if self.collector is not None:
+            self.collector.fold_reports(result.requests)
+        return result
 
 
 def build_replay(workload: str = "deepseek-v3",
@@ -251,6 +266,7 @@ def build_replay(workload: str = "deepseek-v3",
                  warm: bool = False,
                  prefill_chunk_tokens: int | None = None,
                  prefill_overlap: bool = True,
+                 collector=None,
                  **arrival_kw):
     """Wire a complete replay for one (workload, policy, load) cell.
 
@@ -283,6 +299,11 @@ def build_replay(workload: str = "deepseek-v3",
     selects packing-prefetch vs prefill-priority stalls, and ``warm``
     prices the replay as one warm cross-step session — the recommended
     trio for prefill studies (benchmarks/serve_trace.py).
+
+    ``collector`` threads a :class:`repro.obs.ObsCollector` into the
+    engine; a collector carrying a :class:`~repro.obs.MetricsProbe` also
+    attaches it to the SystemSim, turning on windowed channel telemetry
+    for every cycle-priced step (examples/obs_trace.py).
     """
     from ...configs.paper_workloads import PAPER_WORKLOADS, SERVING_MIXES
     from ...core.sched.registry import policy_spec
@@ -314,7 +335,8 @@ def build_replay(workload: str = "deepseek-v3",
                                   prefill_overlap=prefill_overlap)
     system = spec.system_sim(n_channels=n_channels, mode=sim_mode)
     engine = ReplayEngine(recorder, system, overhead_ns=overhead_ns,
-                          keep_traces=keep_traces, warm=warm)
+                          keep_traces=keep_traces, warm=warm,
+                          collector=collector)
     return engine, acc
 
 

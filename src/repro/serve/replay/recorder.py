@@ -124,6 +124,17 @@ class StepTrace:
     prefill_done: tuple = ()       # rids whose prompt completed this step
     kind: str = "decode"           # "decode" | "prefill" | "mixed"
 
+    @property
+    def rids(self) -> tuple:
+        """Every request this step served (active decoders followed by
+        prefill-chunk owners, deduplicated, order-stable) — the
+        participant set :class:`repro.obs.ObsCollector` splits the
+        step's memory time across."""
+        seen = dict.fromkeys(self.active)
+        for rid, _ in self.prefilled:
+            seen.setdefault(rid)
+        return tuple(seen)
+
 
 class ServeTraceRecorder:
     """Steps batcher + KV cache and emits per-step extent streams.

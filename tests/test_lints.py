@@ -129,6 +129,45 @@ def test_module_level_callable_to_submit_ok():
 
 
 # ---------------------------------------------------------------------------
+# untracked-counter
+# ---------------------------------------------------------------------------
+
+def test_registered_counter_keys_ok():
+    src = ('class P:\n'
+           '    count_keys = ("ACT", "RD", "WR")\n'
+           '    def f(self, counts):\n'
+           '        counts["ACT"] += 1\n'
+           '        self.counts["REFpb"] += 2\n'
+           '        return self.cmd_counts.get("drain_entries", 0)\n')
+    assert _rules(src) == []
+
+
+def test_unregistered_counter_key_flagged_everywhere_keys_appear():
+    # subscript write, count_keys declaration (incl. tuple concat), and
+    # .get() read are all mint points for a counter name
+    assert _rules('counts["frobnications"] = 1\n') == ["untracked-counter"]
+    assert _rules('count_keys = ("ACT",) + ("frobnications",)\n') \
+        == ["untracked-counter"]
+    assert _rules('x = cmd_counts.get("frobnications", 0)\n') \
+        == ["untracked-counter"]
+    # non-counter dicts with arbitrary string keys are not the rule's
+    # business
+    assert _rules('opts["frobnications"] = 1\n') == []
+
+
+def test_counter_registry_covers_every_key_policies_mint():
+    """The end the rule exists for: the union of all count_keys across
+    the live policy registry is registered (so the probe folds them)."""
+    from repro.core.sched import registered_policies
+    from repro.obs.metrics import COUNTER_REGISTRY
+    minted = set()
+    for spec in registered_policies().values():
+        minted.update(spec.make_policy().count_keys)
+    assert minted <= set(COUNTER_REGISTRY), \
+        minted - set(COUNTER_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
 # path scoping + whole-tree cleanliness
 # ---------------------------------------------------------------------------
 
@@ -138,6 +177,10 @@ def test_rule_scoping_by_path():
     assert "unseeded-random" in rules_for_path("src/repro/core/analytic.py")
     assert "unseeded-random" in rules_for_path("src/repro/serve/replay.py")
     assert "unseeded-random" not in rules_for_path("tests/test_lints.py")
+    assert "untracked-counter" in rules_for_path(
+        "src/repro/core/sched/policies.py")
+    assert "untracked-counter" not in rules_for_path(
+        "src/repro/core/system_sim.py")
 
 
 def test_syntax_error_reported_not_raised():
@@ -155,7 +198,7 @@ def test_repo_tree_is_lint_clean():
 def test_all_rules_exercised_by_this_file():
     assert set(ALL_RULES) == {"jax-drift", "version-compare",
                               "unseeded-random", "mutable-default",
-                              "pool-submit-closure"}
+                              "pool-submit-closure", "untracked-counter"}
 
 
 # ---------------------------------------------------------------------------

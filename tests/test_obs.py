@@ -1,0 +1,247 @@
+"""repro.obs: off-mode bit-identity, warm-feed highwater semantics,
+probe/exporter reconciliation, and span coverage.
+
+The telemetry stack's contract has three legs (docs/observability.md):
+observation never changes a result (bit-identity), every derived series
+reconciles exactly with the engine's own accounting (bytes, row hits),
+and the exported Chrome trace is self-sufficient — the report tooling
+recomputes the headline numbers from the JSON alone.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.sched import (counts_row_hit_rate, make_channel_sim,
+                              sequential_read_txns_hbm4,
+                              sequential_read_txns_rome)
+from repro.core.system_sim import SystemSim
+from repro.core.timing import hbm4_config, rome_config
+from repro.obs import (MetricsProbe, ObsCollector, chrome_trace_events,
+                       counter_series, slices, trace_row_hit_rate,
+                       trace_total_bytes, write_chrome_trace,
+                       write_metrics_jsonl)
+from repro.obs.metrics import COUNTER_REGISTRY, is_highwater
+from repro.serve.cluster import ClusterSim
+from repro.serve.replay import build_replay
+from repro.workloads import bulk_stream
+
+WINDOW = 500.0
+
+
+def _drain(state):
+    while not state.advance(4096):
+        pass
+    return state.result()
+
+
+# ---------------------------------------------------------------------------
+# off-mode bit-identity + row_hit_rate property
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,txns", [
+    ("hbm4", sequential_read_txns_hbm4(1 << 14)),
+    ("rome", sequential_read_txns_rome(1 << 19)),
+])
+def test_sampling_never_changes_results(kind, txns):
+    off = make_channel_sim(kind).run(txns)
+    on = make_channel_sim(kind, sample_window_ns=WINDOW).run(txns)
+    assert np.array_equal(off.finish_ns, on.finish_ns)
+    assert off.cmd_counts == on.cmd_counts
+    assert off.samples is None and on.samples is not None
+    # the property and the free function agree, and RoMe is 0.0 by
+    # construction (row-granular: no open-row state to hit)
+    assert off.row_hit_rate == counts_row_hit_rate(off.cmd_counts)
+    if kind == "rome":
+        assert off.row_hit_rate == 0.0
+    else:
+        assert off.row_hit_rate > 0.5
+
+
+def test_system_result_row_hit_rate_property():
+    stream = bulk_stream(1 << 15)
+    hb = SystemSim(hbm4_config(), n_channels=2).run(stream)
+    rm = SystemSim(rome_config(), n_channels=2).run(stream)
+    assert hb.row_hit_rate == counts_row_hit_rate(hb.cmd_counts) > 0.8
+    assert rm.row_hit_rate == 0.0
+    assert "row_commands" in rm.cmd_counts  # what marks it row-granular
+
+
+# ---------------------------------------------------------------------------
+# warm feed() boundaries: highwater vs per-feed counters, sample slices
+# ---------------------------------------------------------------------------
+
+def test_ref_backlog_max_is_session_highwater_across_feeds():
+    """Pinned by the ChannelRunState.result() docstring: with sampling
+    attached, ``ref_backlog_max`` stays a session-cumulative high-water
+    mark across feed() boundaries — never diffed per feed, never
+    perturbed by the probe — while true counters are per-feed deltas."""
+    assert is_highwater("ref_backlog_max")
+
+    def session(window):
+        kw = {"sample_window_ns": window} if window else {}
+        st = make_channel_sim("hbm4", **kw).start_run(
+            sequential_read_txns_hbm4(1 << 14))
+        r1 = _drain(st)
+        txns2 = sequential_read_txns_hbm4(1 << 12)
+        # second batch arrives after an idle gap on the session clock
+        for tx in txns2:
+            tx.arrival_ns += st.now + 10_000.0
+        st.feed(txns2)
+        return r1, _drain(st), st
+
+    (r1, r2, st) = session(WINDOW)
+    (b1, b2, _) = session(None)
+
+    # the probe changes nothing: same counts with and without sampling
+    assert r1.cmd_counts == b1.cmd_counts
+    assert r2.cmd_counts == b2.cmd_counts
+    # the stream is long enough that refresh debt actually accumulated
+    hw1 = r1.cmd_counts["ref_backlog_max"]
+    hw2 = r2.cmd_counts["ref_backlog_max"]
+    assert hw1 > 0
+    # high-water semantics: the later feed reports the session maximum
+    # (>= an earlier feed's), not a per-feed delta ...
+    assert hw2 >= hw1
+    # ... while true counters ARE per-feed deltas: batch 2 is a quarter
+    # of batch 1, and its RD count must not include batch 1's.
+    assert 0 < r2.cmd_counts["RD"] < r1.cmd_counts["RD"]
+    # per-feed sample slices: each result's leading sample is its feed's
+    # baseline marker (cumulative snapshot at the feed time)
+    assert r1.samples[0][0] == 0.0
+    assert r2.samples[0][0] > r1.samples[-1][0]
+    assert r2.samples[0][4]["RD"] == b1.cmd_counts["RD"]
+    # every minted counter key is registered with the probe
+    assert set(r2.cmd_counts) <= set(COUNTER_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# probe fold: exact reconciliation with the engine's own accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg_fn", [hbm4_config, rome_config])
+def test_probe_windows_reconcile_bytes_and_hits(cfg_fn):
+    probe = MetricsProbe(window_ns=200.0)
+    sim = SystemSim(cfg_fn(), n_channels=2)
+    sim.attach_probe(probe)
+    res = sim.run(bulk_stream(1 << 15))
+    t = probe.totals()
+    assert t["window_bytes"] == res.bytes_moved == t["step_bytes"]
+    assert probe.row_hit_rate() == res.row_hit_rate
+    for c in probe.channels():
+        windows = probe.channel_series(c)
+        ts = [w.t1_ns for w in windows]
+        assert ts == sorted(ts)
+        assert all(0.0 <= w.utilization <= 1.0 for w in windows)
+
+
+# ---------------------------------------------------------------------------
+# exporter round-trip on a seeded serve replay
+# ---------------------------------------------------------------------------
+
+REPLAY_KW = dict(rate_rps=2e5, n_requests=3, seed=0, scale=2 ** -14,
+                 length_scale=1 / 32, n_channels=2, sim_mode="cycle",
+                 kind="bursty", burst_size=3)
+
+
+def _replay(policy, collector=None):
+    eng, _ = build_replay(policy=policy, collector=collector, **REPLAY_KW)
+    return eng.run()
+
+
+def test_replay_observation_is_invisible():
+    bare = _replay("rome_qd2")
+    col = ObsCollector(probe=MetricsProbe(window_ns=200.0))
+    obs = _replay("rome_qd2", collector=col)
+    assert bare.summary() == obs.summary()
+    assert [s.dur_ns for s in bare.steps] == [s.dur_ns for s in obs.steps]
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    col = ObsCollector(probe=MetricsProbe(window_ns=200.0))
+    res = _replay("hbm4_frfcfs", collector=col)
+    path = tmp_path / "t.trace.json"
+    write_chrome_trace(path, col, col.probe, label="hbm4_frfcfs")
+    trace = json.loads(path.read_text())
+    assert trace["otherData"]["label"] == "hbm4_frfcfs"
+
+    sl = slices(trace)
+    reqs = [e for e in sl if e.get("cat") == "request"]
+    # span tree covers every request ...
+    assert len(reqs) == res.completed == len(col.request_spans())
+    # ... and nests correctly: every non-request slice on a request's
+    # thread lies inside that request's root span (exporter clamps to
+    # the parent, so containment is exact in the emitted JSON)
+    by_track = {}
+    for e in sl:
+        by_track.setdefault((e["pid"], e["tid"]), []).append(e)
+    for root in reqs:
+        track = by_track[(root["pid"], root["tid"])]
+        t0, t1 = root["ts"], root["ts"] + root["dur"]
+        for e in track:
+            assert e["ts"] >= t0 - 1e-9
+            assert e["ts"] + e["dur"] <= t1 + 1e-9
+    # counter samples are monotone in ts per track
+    series = counter_series(trace)
+    assert series
+    for name, pts in series.items():
+        ts = [t for t, _ in pts]
+        assert ts == sorted(ts), name
+    # byte conservation: the counter-track integral equals the summed
+    # step attribution exactly (no float drift — integers end to end)
+    assert trace_total_bytes(trace) == res.summary()["bytes_moved"]
+    assert trace_row_hit_rate(trace) > 0.5
+
+
+def test_metrics_jsonl_round_trip(tmp_path):
+    col = ObsCollector(probe=MetricsProbe(window_ns=200.0))
+    res = _replay("rome_qd2", collector=col)
+    path = tmp_path / "t.metrics.jsonl"
+    write_metrics_jsonl(path, col.probe, col)
+    lines = [json.loads(x) for x in path.read_text().splitlines()]
+    kinds = {ln["type"] for ln in lines}
+    assert kinds == {"window", "step", "request"}
+    assert sum(ln["type"] == "request" for ln in lines) == res.completed
+    wb = sum(ln["bytes"] for ln in lines if ln["type"] == "window")
+    assert wb == res.summary()["bytes_moved"]
+
+
+def test_equal_pin_gap_reproducible_from_traces_alone(tmp_path):
+    """The obs_report headline: the HBM4-vs-RoMe row-hit-rate gap must
+    fall out of the two exported traces with no simulator state."""
+    hits = {}
+    for policy in ("hbm4_frfcfs", "rome_qd2"):
+        col = ObsCollector(probe=MetricsProbe(window_ns=200.0))
+        _replay(policy, collector=col)
+        trace = {"traceEvents": chrome_trace_events(col, col.probe)}
+        hits[policy] = trace_row_hit_rate(trace)
+    assert hits["rome_qd2"] == 0.0
+    assert hits["hbm4_frfcfs"] - hits["rome_qd2"] > 0.5
+
+
+# ---------------------------------------------------------------------------
+# fleet runs: per-replica folding
+# ---------------------------------------------------------------------------
+
+def test_cluster_per_replica_folding():
+    kw = dict(policy="rome_qd2", n_replicas=2, n_requests=6, rate_rps=2e5,
+              kind="poisson", seed=0, scale=2 ** -12, sim_mode="hybrid",
+              n_channels=2, length_scale=1 / 32, router="round_robin")
+    bare = ClusterSim(**kw).run()
+    col = ObsCollector(probe=MetricsProbe(window_ns=200.0))
+    obs = ClusterSim(**kw, collector=col).run()
+    assert bare.summary() == obs.summary()
+    # steps fold per replica, and both replicas actually stepped
+    replicas = {ev.replica for ev in col.steps}
+    assert replicas == {0, 1}
+    spans = col.request_spans()
+    assert len(spans) == obs.completed
+    # each request span lives on its owning replica's track
+    owner = {}
+    for ev in col.steps:
+        for rid in ev.participants:
+            owner[rid] = ev.replica
+    for sp in spans:
+        assert sp.replica == owner[sp.args["rid"]]
